@@ -1,0 +1,37 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(out):
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+def print_rows(rows: List[dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,0 +1,63 @@
+"""Paper Figure 4: impact of context caching on inference time.
+
+A stream of requests (one context, N candidates) with realistic context
+repetition; cached vs uncached serving latency and the hit-rate dependence.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._util import row
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.data.synthetic import CTRStream
+from repro.serving.context_cache import CachedServer
+
+CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
+                mlp_hidden=(64, 32))
+
+
+def run(quick: bool = False):
+    rows = []
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    stream = CTRStream(CFG, seed=0)
+    n_requests = 30 if quick else 100
+    n_candidates = 32
+
+    # pre-generate a request pool with repeated contexts (real traffic shape)
+    pool = [stream.request(n_candidates) for _ in range(8)]
+    reqs = [pool[i % len(pool)] for i in range(n_requests)]
+
+    srv = CachedServer(CFG, params)
+    # warmup/compile both paths
+    srv.serve(*reqs[0])
+    srv.serve_uncached(*reqs[0])
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        np.asarray(srv.serve_uncached(*r))
+    t_uncached = (time.perf_counter() - t0) / n_requests
+
+    srv2 = CachedServer(CFG, params)
+    srv2.serve(*reqs[0])
+    t0 = time.perf_counter()
+    for r in reqs:
+        np.asarray(srv2.serve(*r))
+    t_cached = (time.perf_counter() - t0) / n_requests
+
+    hit_rate = srv2.hits / max(srv2.hits + srv2.misses, 1)
+    rows.append(row("context_cache/uncached", t_uncached * 1e6, "per-request"))
+    rows.append(row(
+        "context_cache/cached", t_cached * 1e6,
+        f"speedup={t_uncached/max(t_cached,1e-12):.2f}x hit_rate={hit_rate:.2f}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

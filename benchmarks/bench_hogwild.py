@@ -1,0 +1,79 @@
+"""Paper Table 2: Hogwild-based training throughput vs single-threaded control.
+
+Reproduces the paper's warm-up scenario in miniature: the same data volume
+processed by 1 thread (control) vs N Hogwild threads sharing weight buffers.
+NOTE: this container exposes a single CPU core, so the thread-level speedup
+here is bounded by core count; the quality-parity claim (no AUC drop) is the
+part that transfers. The TPU analogue (async local-SGD over the data axis) is
+benchmarked alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import row
+from repro.common.config import FFMConfig
+from repro.common.metrics import roc_auc
+from repro.core import deepffm
+from repro.data.synthetic import CTRStream
+from repro.train.hogwild import HogwildTrainer, make_local_sgd_round
+
+CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**14, k=4,
+                mlp_hidden=(16,))
+
+
+def run(quick: bool = False):
+    rows = []
+    n_batches = 30 if quick else 150
+    # evaluate on fresh draws from the SAME ground-truth structure (seed 0)
+    test_stream = CTRStream(CFG, seed=0)
+    import numpy as _np
+    test_stream._rng = _np.random.default_rng(991)  # fresh examples, same world
+    test = test_stream.sample(4096)
+
+    def quality(trainer):
+        probs = np.asarray(deepffm.predict_proba(
+            CFG, trainer.params(), jnp.asarray(test["idx"]), jnp.asarray(test["val"])))
+        return roc_auc(test["label"], probs)
+
+    stats = {}
+    for n_threads in (1, 2, 4, 8):
+        tr = HogwildTrainer(CFG, lr=0.1, seed=0)
+        st = tr.train(CTRStream(CFG, seed=0).batches(256, n_batches), n_threads)
+        stats[n_threads] = st
+        rows.append(row(
+            f"hogwild/threads={n_threads}",
+            st.seconds / n_batches * 1e6,
+            f"examples_per_s={st.examples_per_s:.0f} auc={quality(tr):.4f}",
+        ))
+    speedup = stats[1].seconds / stats[4].seconds
+    rows.append(row("hogwild/speedup_4t_vs_1t", 0.0, f"speedup={speedup:.2f}x"))
+
+    # TPU analogue: async local-SGD round (workers = data-axis shards)
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    acc = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape), params)
+    rnd = make_local_sgd_round(CFG, "deepffm", lr=0.05)
+    stream = CTRStream(CFG, seed=0)
+    W, K = 4, 4
+    bs = [[stream.sample(256) for _ in range(K)] for _ in range(W)]
+    stacked = jax.tree_util.tree_map(
+        lambda *x: jnp.stack(x),
+        *[jax.tree_util.tree_map(lambda *x: jnp.stack(x), *wb) for wb in bs])
+    rnd(params, acc, stacked)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        params, acc, loss = rnd(params, acc, stacked)
+    dt = (time.perf_counter() - t0) / 3
+    rows.append(row("hogwild/local_sgd_round(W=4,k=4)", dt * 1e6,
+                    f"examples_per_s={W*K*256/dt:.0f} loss={float(loss):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

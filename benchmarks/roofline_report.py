@@ -1,0 +1,68 @@
+"""Aggregate dry-run JSONs into the §Roofline table (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks._util import row
+
+
+def load_reports(out_dir: str = "experiments/dryrun2") -> List[dict]:
+    import os
+    if not os.path.isdir(out_dir):
+        out_dir = "experiments/dryrun"
+    reports = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        stem = os.path.splitext(os.path.basename(path))[0]
+        for suffix in ("_BASE", "_int8kv", "_nofsdp", "_splitproj", "_fullremat",
+                       "_bigchunk", "_shardfix", "_puredp", "_seqshard", "_cf1",
+                       "_chunk512", "_chunk1024", "_replicated"):
+            if suffix in stem:
+                r["variant"] = stem
+                break
+        reports.append(r)
+    return reports
+
+
+def format_table(reports: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reports:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r.get('arch','?')} | {r.get('shape','?')} | - | - | - | - "
+                f"| SKIP: {r.get('reason','')} | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    rows = []
+    for r in load_reports():
+        if r.get("status") != "ok":
+            continue
+        name = r.get("variant") or f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        rows.append(row(
+            f"roofline/{name}" if r.get("variant") else f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["step_time_bound"] * 1e6,
+            f"bottleneck={r['bottleneck']} compute={r['t_compute']:.4f}s "
+            f"mem={r['t_memory']:.4f}s coll={r['t_collective']:.4f}s "
+            f"useful={r['useful_flops_ratio']:.3f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print(format_table(load_reports()))

@@ -1,0 +1,48 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks._util import print_rows
+
+BENCHES = (
+    ("table1_stability", "benchmarks.bench_stability"),
+    ("table2_hogwild", "benchmarks.bench_hogwild"),
+    ("table3_sparse_updates", "benchmarks.bench_sparse_updates"),
+    ("table4_quantization", "benchmarks.bench_quantization"),
+    ("fig4_context_cache", "benchmarks.bench_context_cache"),
+    ("fig5_simd", "benchmarks.bench_simd"),
+    ("fig6_patcher", "benchmarks.bench_patcher"),
+    ("sec4.1_prefetch", "benchmarks.bench_prefetch"),
+    ("roofline", "benchmarks.roofline_report"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="substring filter on bench name")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            rows = mod.run(quick=args.quick)
+            print_rows(rows)
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED: {traceback.format_exc(limit=3)}".replace("\n", " "))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

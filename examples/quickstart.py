@@ -1,0 +1,54 @@
+"""Quickstart: the paper's full production loop in one script.
+
+Train a DeepFFM online -> ship quantized byte-patches to a serving process ->
+serve candidate requests through the context cache. Run with:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig
+from repro.common.metrics import roc_auc
+from repro.core import deepffm
+from repro.data.prefetch import Prefetcher
+from repro.data.synthetic import CTRStream
+from repro.serving.context_cache import CachedServer
+
+cfg = FFMConfig(n_fields=12, context_fields=8, hash_space=2**14, k=4,
+                mlp_hidden=(16, 8))
+stream = CTRStream(cfg, seed=7)
+
+# --- trainer ----------------------------------------------------------------
+params = deepffm.init_params(cfg, jax.random.PRNGKey(0))
+vg = jax.jit(jax.value_and_grad(lambda p, b: deepffm.loss_fn(cfg, p, b)))
+acc = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape), params)
+
+sender = transfer.Sender(mode="patch+quant")   # paper §6
+receiver = transfer.Receiver()
+
+for round_ in range(3):  # three online-training rounds (paper: every ~5 min)
+    for batch in Prefetcher(stream.batches(512, 30), depth=4):  # paper §4.1
+        loss, grads = vg(params, batch)
+        acc = jax.tree_util.tree_map(lambda a, g: a + g * g, acc, grads)
+        params = jax.tree_util.tree_map(
+            lambda p, g, a: p - 0.1 * g / jnp.sqrt(a + 1e-10), params, grads, acc)
+    update = sender.make_update(params)
+    receiver.apply_update(update)
+    print(f"round {round_}: loss={float(loss):.4f} update={len(update):,} bytes")
+
+# --- serving ----------------------------------------------------------------
+served = receiver.materialize("patch+quant", sender.manifest, like=params)
+server = CachedServer(cfg, served)  # paper §5 context caching
+
+test = stream.sample(4096)
+probs = np.asarray(deepffm.predict_proba(cfg, served, test["idx"], test["val"]))
+print(f"served-model AUC: {roc_auc(test['label'], probs):.4f}")
+
+for _ in range(4):
+    ctx_i, ctx_v, cand_i, cand_v = stream.request(n_candidates=16)
+    scores = server.serve(ctx_i, ctx_v, cand_i, cand_v)
+    print(f"request: best candidate {int(jnp.argmax(scores))}, "
+          f"cache hits={server.hits} misses={server.misses}")

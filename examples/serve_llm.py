@@ -1,0 +1,84 @@
+"""Serve a small LLM with batched requests + the paper's techniques applied.
+
+Demonstrates the generalization of the paper's tricks to the assigned LLM
+architectures: (1) serve_step decode with KV cache, (2) shared-prefix reuse
+(the context-caching insight: the prompt prefix shared by all requests is
+decoded once, then the state is fanned out per continuation), (3) weights
+arrive through the quantized patch channel.
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch llama3.2-1b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import transfer
+from repro.models import registry
+from repro.train.steps import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=registry.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefix-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, smoke=True)  # reduced variant on CPU
+    key = jax.random.PRNGKey(0)
+
+    # --- weights arrive over the transfer channel (trainer -> server) ------
+    trainer_params = registry.init_params(cfg, key)
+    snd = transfer.Sender(mode="patch+quant")
+    rcv = transfer.Receiver()
+    rcv.apply_update(snd.make_update(trainer_params))
+    params = rcv.materialize("patch+quant", snd.manifest, like=trainer_params)
+    print(f"{args.arch} (smoke): weights reconstructed from quantized update")
+
+    serve = jax.jit(make_serve_step(cfg))
+    B, P, G = args.batch, args.prefix_len, args.gen_len
+    total = P + G + 1
+
+    prefix = jax.random.randint(key, (P,), 0, cfg.vocab_size)
+
+    # --- shared-prefix reuse (context caching, generalized) ----------------
+    # decode the shared prompt ONCE with batch=1, then broadcast the state
+    state1 = registry.init_decode_state(cfg, 1, total)
+    tok = prefix[0][None]
+    t0 = time.time()
+    for i in range(P):
+        tok, state1 = serve(params, state1, prefix[i][None])
+    # caches are stacked (layers, batch, ...): fan the batch dim out to B
+    def fan_out(a):
+        if a.ndim >= 2 and a.shape[1] == 1:
+            return jnp.repeat(a, B, axis=1)
+        return a
+
+    shared = jax.tree_util.tree_map(fan_out, state1)
+    t_prefix = time.time() - t0
+    print(f"shared prefix decoded once in {t_prefix:.2f}s, state fanned out x{B}")
+
+    # --- batched continuations --------------------------------------------
+    state = shared
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, cfg.vocab_size)
+    outs = [toks]
+    t0 = time.time()
+    for _ in range(G):
+        toks, state = serve(params, state, toks)
+        outs.append(toks)
+    gen = jnp.stack(outs, 1)
+    dt = time.time() - t0
+    print(f"generated {B}x{G} tokens in {dt:.2f}s "
+          f"({B*G/max(dt,1e-9):.1f} tok/s greedy)")
+    print("sample token ids:", gen[0][:8].tolist())
+
+    # baseline: per-request prefix recompute would cost B x t_prefix
+    print(f"prefix reuse saved ~{(B-1)*t_prefix:.2f}s vs per-request prefill "
+          f"(the paper's context-caching effect, generalized)")
+
+
+if __name__ == "__main__":
+    main()

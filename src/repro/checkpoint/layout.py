@@ -1,0 +1,81 @@
+"""Deterministic flat byte layout for weight pytrees (paper §3/§6 substrate).
+
+The byte-level patcher only works because "a consistent memory-level
+structure of weight files" holds across updates. For an arbitrary JAX pytree
+we guarantee that by serializing leaves in sorted-key-path order with a
+manifest recording (path, dtype, shape, offset). Two checkpoints of the same
+model always produce byte-aligned buffers, so their diff reflects only weight
+changes.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXTRA_DTYPES = {
+    "bfloat16": np.dtype(ml_dtypes.bfloat16),
+    "float8_e4m3fn": np.dtype(ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": np.dtype(ml_dtypes.float8_e5m2),
+}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    return _EXTRA_DTYPES.get(name) or np.dtype(name)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = [(_path_str(path), np.asarray(leaf)) for path, leaf in leaves]
+    out.sort(key=lambda kv: kv[0])
+    return out
+
+
+def to_bytes(tree) -> Tuple[bytes, List[Dict[str, Any]]]:
+    """-> (flat byte buffer, manifest)."""
+    chunks, manifest, off = [], [], 0
+    for path, arr in flatten_with_paths(tree):
+        raw = arr.tobytes()
+        manifest.append(
+            {"path": path, "dtype": str(arr.dtype), "shape": list(arr.shape), "offset": off,
+             "nbytes": len(raw)}
+        )
+        chunks.append(raw)
+        off += len(raw)
+    return b"".join(chunks), manifest
+
+
+def from_bytes(buf: bytes, manifest: List[Dict[str, Any]], like=None):
+    """Rebuild {path: array}; if ``like`` pytree given, restructure into it."""
+    flat: Dict[str, np.ndarray] = {}
+    for ent in manifest:
+        arr = np.frombuffer(
+            buf, dtype=_np_dtype(ent["dtype"]), count=int(np.prod(ent["shape"]) or 1),
+            offset=ent["offset"],
+        ).reshape(ent["shape"])
+        flat[ent["path"]] = arr
+    if like is None:
+        return flat
+    leaves = jax.tree_util.tree_flatten_with_path(like)
+    vals = [flat[_path_str(path)] for path, _ in leaves[0]]
+    return jax.tree_util.tree_unflatten(leaves[1], vals)
+
+
+def manifest_json(manifest) -> str:
+    return json.dumps(manifest)

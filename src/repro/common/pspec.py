@@ -1,0 +1,97 @@
+"""Declarative parameter specs.
+
+Each model declares its parameters once as a nested dict of :class:`ParamSpec`
+(shape + logical axes + init kind). From that single declaration we derive:
+
+* ``materialize(specs, key)``   — real initialized arrays (smoke tests, examples)
+* ``abstract(specs)``           — ``jax.ShapeDtypeStruct`` pytree (dry-run: no allocation)
+* ``axes(specs)``               — logical-axes pytree consumed by ``repro.launch.sharding``
+
+Logical axis names (mapped to mesh axes by per-arch rules):
+  vocab, embed, mlp, heads, kv_heads, head_dim, experts, expert_mlp,
+  kv_lora, q_lora, ssm_inner, ssm_state, ssm_heads, conv, layers, stack, null
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]  # logical axis per dim; "null" = never sharded
+    init: str = "normal"  # normal | zeros | ones | embed | scaled | uniform_conv
+    dtype: Any = jnp.bfloat16
+    fan_in: int = 0  # for "scaled" init; 0 -> shape[-2] if ndim>=2 else shape[-1]
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_array(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+    if spec.init == "scaled":
+        fan_in = spec.fan_in or (shape[-2] if len(shape) >= 2 else shape[-1])
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "uniform_conv":
+        lim = 1.0 / np.sqrt(max(shape[-1], 1))
+        return jax.random.uniform(key, shape, jnp.float32, -lim, lim).astype(dtype)
+    # default: normal(0, 0.02)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn: Callable[[ParamSpec], Any], specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def materialize(specs, key: jax.Array):
+    """Initialize real parameter arrays from the spec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_array(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct tree — lets jit.lower() run with zero allocation."""
+    return _map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def axes(specs):
+    """Logical-axes tree, same structure as the params."""
+    return _map_specs(lambda s: s.axes, specs)
+
+
+def count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers parameter stacks)."""
+    return _map_specs(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.dtype, s.fan_in),
+        specs,
+    )
+
+
+def cast(specs, dtype):
+    return _map_specs(
+        lambda s: ParamSpec(s.shape, s.axes, s.init, dtype, s.fan_in), specs
+    )

@@ -1,0 +1,47 @@
+"""Distribution runtime context threaded through model forwards."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Mesh + axis naming. ``None`` mesh means single-device execution."""
+
+    mesh: Optional[jax.sharding.Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return self.data_axes + (self.model_axis,)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size if self.mesh is not None else 1
+
+    def seq_shard(self, x, cfg):
+        """Sequence-parallel sharding constraint on a (B, S, d) activation:
+        the layer-boundary (remat-saved) residual stream shards its sequence
+        dim over the model axis — 16x smaller checkpoints; GSPMD inserts the
+        gather before attention and the scatter after (Megatron-SP)."""
+        if not (cfg.seq_shard_acts and self.mesh is not None):
+            return x
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        b, s_len = x.shape[0], x.shape[1]
+        dp = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        spec_b = dp if b % self._dp_size() == 0 else None
+        spec_s = self.model_axis if s_len % self.mesh.shape[self.model_axis] == 0 else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(spec_b, spec_s, None)))
+
+    def _dp_size(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n

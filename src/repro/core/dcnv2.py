@@ -1,0 +1,57 @@
+"""DCNv2 baseline (paper §2.2). [Wang et al., WWW'21]
+
+Cross layers: x_{l+1} = x0 * (W_l x_l + b_l) + x_l over the concatenated
+field embeddings, followed by an MLP head. The paper assigned each value a
+unique hash for this baseline; we reuse the same hashed feature indices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.config import FFMConfig
+from repro.common.pspec import ParamSpec
+from repro.core import ffm
+
+
+def param_specs(cfg: FFMConfig, n_cross: int = 3, k_dense: int = 8,
+                mlp_hidden=(64, 32)) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    d0 = cfg.n_fields * k_dense
+    sp: Dict[str, Any] = {
+        "emb": ParamSpec((cfg.hash_space, k_dense), ("vocab", "null"), "embed", dt),
+    }
+    for i in range(n_cross):
+        sp[f"cross_w{i}"] = ParamSpec((d0, d0), ("null", "null"), "scaled", dt)
+        sp[f"cross_b{i}"] = ParamSpec((d0,), ("null",), "zeros", dt)
+    dims = (d0,) + tuple(mlp_hidden) + (1,)
+    for i in range(len(dims) - 1):
+        sp[f"mlp_w{i}"] = ParamSpec((dims[i], dims[i + 1]), ("null", "null"), "scaled", dt)
+        sp[f"mlp_b{i}"] = ParamSpec((dims[i + 1],), ("null",), "zeros", dt)
+    return sp
+
+
+def init_params(cfg: FFMConfig, key, n_cross: int = 3, mlp_hidden=(64, 32)):
+    return pspec.materialize(param_specs(cfg, n_cross, mlp_hidden=mlp_hidden), key)
+
+
+def forward(cfg: FFMConfig, params, idx, val, n_cross: int = 3, n_mlp: int = 3):
+    x0 = (jnp.take(params["emb"], idx, axis=0) * val[..., None]).reshape(idx.shape[0], -1)
+    x = x0
+    for i in range(n_cross):
+        if f"cross_w{i}" not in params:
+            break
+        x = x0 * (jnp.einsum("bi,ij->bj", x, params[f"cross_w{i}"]) + params[f"cross_b{i}"]) + x
+    i = 0
+    while f"mlp_w{i+1}" in params:
+        x = jnp.maximum(jnp.einsum("bi,ij->bj", x, params[f"mlp_w{i}"]) + params[f"mlp_b{i}"], 0)
+        i += 1
+    x = jnp.einsum("bi,ij->bj", x, params[f"mlp_w{i}"]) + params[f"mlp_b{i}"]
+    return x[:, 0]
+
+
+def loss_fn(cfg: FFMConfig, params, batch):
+    return ffm.bce_loss(forward(cfg, params, batch["idx"], batch["val"]), batch["label"])

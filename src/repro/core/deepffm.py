@@ -1,0 +1,126 @@
+"""DeepFFM — the paper's model (§2.1, Figure 2) plus its CTR baselines.
+
+  Dffm(x) = FFNN( MergeNormLayer( LR(x), DiagMask(FFM(x)) ) )
+
+Model zoo (paper §2.2 benchmark):
+  * ``linear``   — VW-linear analogue (hashed logistic regression)
+  * ``mlp``      — VW-mlp analogue (LR + MLP over pooled field embeddings)
+  * ``ffm``      — FW-FFM (LR + summed DiagMask'd interactions)
+  * ``deepffm``  — FW-DeepFFM (the paper's architecture)
+DCNv2 lives in ``repro.core.dcnv2``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.config import FFMConfig
+from repro.common.pspec import ParamSpec
+from repro.core import ffm
+
+
+def _mlp_specs(cfg: FFMConfig, d_in: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    sp = {}
+    dims = (d_in,) + tuple(cfg.mlp_hidden) + (1,)
+    for i in range(len(dims) - 1):
+        # final layer zero-init: the MLP is a residual branch on top of the
+        # additive LR/FFM terms, so it must start silent and learn its
+        # contribution (otherwise an untrained random projection drowns the
+        # wide signal in early online learning).
+        init = "zeros" if i == len(dims) - 2 else "scaled"
+        sp[f"w{i}"] = ParamSpec((dims[i], dims[i + 1]), ("null", "null"), init, dt)
+        sp[f"b{i}"] = ParamSpec((dims[i + 1],), ("null",), "zeros", dt)
+    return sp
+
+
+def mlp_apply(cfg: FFMConfig, p, x, *, return_preacts: bool = False):
+    """ReLU MLP head. ``return_preacts`` feeds §4.3 sparse-update analysis."""
+    n = len(cfg.mlp_hidden) + 1
+    preacts = []
+    for i in range(n):
+        x = jnp.einsum("bi,ij->bj", x, p[f"w{i}"]) + p[f"b{i}"]
+        if i < n - 1:
+            preacts.append(x)
+            x = jnp.maximum(x, 0)  # ReLU — the zero-gradient source for §4.3
+    out = x[:, 0]
+    if return_preacts:
+        return out, preacts
+    return out
+
+
+def param_specs(cfg: FFMConfig, model: str = "deepffm") -> Dict[str, Any]:
+    lr = ffm.lr_specs(cfg)
+    if model == "linear":
+        return {"lr": lr}
+    if model == "mlp":
+        return {
+            "lr": lr,
+            "emb": ffm.ffm_specs(cfg)["emb"],
+            "mlp": _mlp_specs(cfg, cfg.n_fields * cfg.k),
+        }
+    if model == "ffm":
+        return {"lr": lr, "ffm": ffm.ffm_specs(cfg)}
+    if model == "deepffm":
+        d_merge = cfg.n_pairs + 1
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "lr": lr,
+            "ffm": ffm.ffm_specs(cfg),
+            "merge_scale": ParamSpec((d_merge,), ("null",), "ones", dt),
+            "merge_bias": ParamSpec((d_merge,), ("null",), "zeros", dt),
+            "mlp": _mlp_specs(cfg, d_merge),
+        }
+    raise ValueError(model)
+
+
+def init_params(cfg: FFMConfig, key, model: str = "deepffm"):
+    return pspec.materialize(param_specs(cfg, model), key)
+
+
+def merge_norm(cfg: FFMConfig, p, lr_out, ffm_vec):
+    """MergeNormLayer: concat + normalization (learnable scale/bias)."""
+    z = jnp.concatenate([lr_out[:, None], ffm_vec], axis=-1)
+    zf = z.astype(jnp.float32)
+    mu = jnp.mean(zf, axis=-1, keepdims=True)
+    var = jnp.var(zf, axis=-1, keepdims=True)
+    zn = (zf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (zn * p["merge_scale"] + p["merge_bias"]).astype(z.dtype)
+
+
+def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
+            interactions_fn=None):
+    """Returns logits (B,). ``interactions_fn`` lets the serving layer inject
+    the Pallas kernel or the context-cached partial computation."""
+    lr_out = ffm.lr_forward(cfg, params["lr"], idx, val)
+    if model == "linear":
+        return lr_out
+    if model == "mlp":
+        e = jnp.take(params["emb"], idx, axis=0)  # (B,F,F,k)
+        pooled = (jnp.mean(e, axis=2) * val[..., None]).reshape(idx.shape[0], -1)
+        return lr_out + mlp_apply(cfg, params["mlp"], pooled)
+    inter = interactions_fn or ffm.interactions
+    ffm_vec = inter(cfg, params["ffm"]["emb"], idx, val)
+    if model == "ffm":
+        return lr_out + jnp.sum(ffm_vec, axis=-1)
+    if model == "deepffm":
+        # FFNN over MergeNorm(LR, FFM) plus the additive LR/FFM shortcut —
+        # FW composes blocks additively (regressor.rs sums block outputs), so
+        # the MLP learns a residual on top of the classic wide terms. This is
+        # what gives DeepFFM linear-level early learning with later gains
+        # (paper: "DeepFFMs dominate after enough data is seen").
+        z = merge_norm(cfg, params, lr_out, ffm_vec)
+        return lr_out + jnp.sum(ffm_vec, axis=-1) + mlp_apply(cfg, params["mlp"], z)
+    raise ValueError(model)
+
+
+def loss_fn(cfg: FFMConfig, params, batch, model: str = "deepffm"):
+    logits = forward(cfg, params, batch["idx"], batch["val"], model)
+    return ffm.bce_loss(logits, batch["label"])
+
+
+def predict_proba(cfg: FFMConfig, params, idx, val, model: str = "deepffm"):
+    return jax.nn.sigmoid(forward(cfg, params, idx, val, model))

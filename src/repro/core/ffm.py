@@ -1,0 +1,73 @@
+"""Field-aware Factorization Machine primitives (paper §2.1).
+
+Feature representation mirrors Fwumious Wabbit: each example carries one
+hashed feature index per field plus a float value (1.0 for categorical,
+log-transformed for numeric). FFM weights live in a single table
+``W[hash_space, n_fields, k]`` where ``W[i, f]`` is the embedding of feature
+``i`` used when interacting with field ``f``.
+
+``DiagMask`` (paper): only the strict upper triangle of the field x field
+interaction matrix is kept — "inducing half smaller number of combinations
+requiring down-stream processing".
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FFMConfig
+from repro.common.pspec import ParamSpec
+
+
+def ffm_specs(cfg: FFMConfig) -> Dict[str, ParamSpec]:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "emb": ParamSpec((cfg.hash_space, cfg.n_fields, cfg.k), ("vocab", "null", "null"), "embed", dt),
+    }
+
+
+def lr_specs(cfg: FFMConfig) -> Dict[str, ParamSpec]:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w": ParamSpec((cfg.hash_space,), ("vocab",), "zeros", dt),
+        "b": ParamSpec((), (), "zeros", dt),
+    }
+
+
+def pair_indices(n_fields: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Upper-triangle (i<j) field pairs — the DiagMask."""
+    iu = np.triu_indices(n_fields, k=1)
+    return iu[0].astype(np.int32), iu[1].astype(np.int32)
+
+
+def lookup(cfg: FFMConfig, emb: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """idx: (B, F) -> E: (B, F, F, k) with E[b, i, j] = emb[idx[b,i], j]."""
+    return jnp.take(emb, idx, axis=0)
+
+
+def interactions(cfg: FFMConfig, emb, idx, val) -> jnp.ndarray:
+    """DiagMask'd pairwise FFM terms. Returns (B, n_pairs).
+
+    The reference (oracle) implementation; ``repro.kernels.ffm_interaction``
+    is the Pallas-tiled equivalent used on the serving hot path.
+    """
+    e = lookup(cfg, emb, idx)  # (B, F, F, k)
+    dots = jnp.einsum("bijk,bjik->bij", e, e)  # (B, F, F)
+    vv = val[:, :, None] * val[:, None, :]
+    pi, pj = pair_indices(cfg.n_fields)
+    return (dots * vv)[:, pi, pj]
+
+
+def lr_forward(cfg: FFMConfig, p, idx, val) -> jnp.ndarray:
+    """Logistic-regression part: (B,)."""
+    return jnp.sum(jnp.take(p["w"], idx, axis=0) * val, axis=-1) + p["b"]
+
+
+def bce_loss(logits, labels):
+    """Binary cross-entropy on logits; labels in {0, 1}."""
+    lf = logits.astype(jnp.float32)
+    yl = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lf, 0) - lf * yl + jnp.log1p(jnp.exp(-jnp.abs(lf))))

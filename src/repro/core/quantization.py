@@ -1,0 +1,201 @@
+"""Dynamic-range 16-bit weight quantization (paper §6).
+
+The paper's algorithm, verbatim:
+
+1. Per update window, scan all weights for min/max.
+2. Round the bounds to ``beta``/``alpha`` decimals — full-precision bounds
+   were observed to destabilize patch sizes ("quantization output tended to
+   fluctuate more"), rounding stabilizes the bucket grid across updates so
+   byte-diffs stay small.
+3. ``bucket_size = (round(max, alpha) - round(min, beta)) / b_max``.
+4. Each weight maps to ``round((w - min) / bucket_size)`` cast to uint16.
+5. The weight file is enriched with a header carrying (min, bucket_size) —
+   sufficient for reconstruction on the serving side.
+
+Two implementations: a vectorized jnp one (jit-able, used in the transfer
+channel for any architecture's pytree) and the Pallas kernel in
+``repro.kernels.quantize`` for the TPU hot path.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HEADER_FMT = "<ffQQ"  # (w_min: f32, bucket_size: f32, n: u64, n_outliers: u64)
+HEADER_SIZE = struct.calcsize(HEADER_FMT)
+B_MAX = 2**16
+
+
+@dataclass(frozen=True)
+class QuantMeta:
+    w_min: float
+    bucket_size: float
+    n: int
+    n_outliers: int = 0
+
+
+def _floor_dec(x: float, decimals: int) -> float:
+    s = 10.0 ** decimals
+    return float(np.floor(x * s) / s)
+
+
+def _ceil_dec(x: float, decimals: int) -> float:
+    s = 10.0 ** decimals
+    return float(np.ceil(x * s) / s)
+
+
+def compute_bounds(w: jnp.ndarray, alpha: int = 2, beta: int = 2) -> Tuple[float, float, float]:
+    """First pass: (rounded) min/max and the bucket size.
+
+    The paper rounds the bounds to alpha/beta decimals to stabilize the bucket
+    grid across updates. We round *conservatively* (floor the min, ceil the
+    max) so no weight is ever clipped — same stabilization effect, strictly
+    bounded error (<= bucket/2).
+    """
+    w_min = _floor_dec(float(jnp.min(w)), beta)
+    w_max = _ceil_dec(float(jnp.max(w)), alpha)
+    if w_max <= w_min:  # degenerate (constant weights)
+        w_max = w_min + 10.0 ** (-alpha)
+    # divide by B_MAX-1 so w_max itself maps exactly to the top code
+    bucket = (w_max - w_min) / (B_MAX - 1)
+    return w_min, w_max, bucket
+
+
+@jax.jit
+def _quantize_core(w: jnp.ndarray, w_min: jnp.ndarray, bucket: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.round((w.astype(jnp.float32) - w_min) / bucket)
+    return jnp.clip(q, 0, B_MAX - 1).astype(jnp.uint16)
+
+
+@jax.jit
+def _dequantize_core(q: jnp.ndarray, w_min: jnp.ndarray, bucket: jnp.ndarray) -> jnp.ndarray:
+    return (w_min + q.astype(jnp.float32) * bucket).astype(jnp.float32)
+
+
+def stable_bounds(w: jnp.ndarray, prev: Optional["QuantMeta"], alpha: int = 2,
+                  beta: int = 2, shrink_limit: float = 4.0) -> Tuple[float, float]:
+    """Grid hysteresis (beyond-paper improvement, documented in DESIGN.md).
+
+    The paper rounds bounds to stabilize the bucket grid, but a weight drifting
+    across a rounding boundary still shifts *every* code and blows up the next
+    patch (we measured 77% changed bytes from one boundary crossing). Instead:
+    reuse the previous update's grid verbatim unless (a) the new weights fall
+    outside it, or (b) the occupied range shrank by more than ``shrink_limit``
+    (keeping resolution adaptive, per the paper's "dynamically select viable
+    weight ranges"). Expansion re-derives rounded bounds as usual.
+    """
+    w_min_raw = float(jnp.min(w))
+    w_max_raw = float(jnp.max(w))
+    if prev is not None:
+        lo = prev.w_min
+        hi = prev.w_min + prev.bucket_size * (B_MAX - 1)
+        covers = lo <= w_min_raw and w_max_raw <= hi
+        occupied = max(w_max_raw - w_min_raw, 1e-12)
+        not_shrunk = (hi - lo) / occupied <= shrink_limit
+        if covers and not_shrunk:
+            return lo, hi
+    w_min = _floor_dec(w_min_raw, beta)
+    w_max = _ceil_dec(w_max_raw, alpha)
+    if w_max <= w_min:
+        w_max = w_min + 10.0 ** (-alpha)
+    return w_min, w_max
+
+
+OUTLIER_REGRID_FRAC = 1e-3
+
+
+def quantize(w: jnp.ndarray, alpha: int = 2, beta: int = 2,
+             prev: Optional[QuantMeta] = None):
+    """Second pass: uint16 codes + header metadata. ``w`` is any float array.
+
+    Pass ``prev`` (the previous update's meta) to enable grid hysteresis —
+    required for consistently small byte patches across online updates. With
+    hysteresis, weights that drift outside the previous grid are shipped
+    exactly in an **outlier sidecar** (index, f32 value) instead of forcing a
+    regrid that would churn every code; if the outlier fraction exceeds
+    ``OUTLIER_REGRID_FRAC`` the grid is re-derived (the paper's dynamic range
+    selection). Returns (codes, meta, outliers) where outliers is
+    (idx u64 array, val f32 array) — empty without hysteresis.
+    """
+    flat = w.reshape(-1)
+    empty = (np.zeros(0, np.uint64), np.zeros(0, np.float32))
+    if prev is not None:
+        # evaluate the PREVIOUS grid first: weights outside it become sidecar
+        # outliers (shipped exact); only regrid when outliers exceed the
+        # threshold or the occupied range shrank too much (resolution loss)
+        lo = prev.w_min
+        hi = prev.w_min + prev.bucket_size * (B_MAX - 1)
+        wnp = np.asarray(flat, np.float32)
+        occupied = max(float(wnp.max()) - float(wnp.min()), 1e-12)
+        not_shrunk = (hi - lo) / occupied <= 4.0
+        out_mask = (wnp < lo) | (wnp > hi)
+        frac = float(out_mask.mean())
+        if not_shrunk and frac <= OUTLIER_REGRID_FRAC:
+            bucket = prev.bucket_size
+            q = _quantize_core(flat, jnp.float32(lo), jnp.float32(bucket))
+            if frac == 0.0:
+                return q, QuantMeta(lo, bucket, int(flat.size), 0), empty
+            idx = np.flatnonzero(out_mask).astype(np.uint64)
+            vals = wnp[out_mask].astype(np.float32)
+            return q, QuantMeta(lo, bucket, int(flat.size), int(idx.size)), (idx, vals)
+        # too many outliers / shrunk range: dynamic regrid (paper behaviour)
+    w_min, _, bucket = compute_bounds(flat, alpha, beta)
+    q = _quantize_core(flat, jnp.float32(w_min), jnp.float32(bucket))
+    return q, QuantMeta(w_min, bucket, int(flat.size), 0), empty
+
+
+def dequantize(q: jnp.ndarray, meta: QuantMeta, outliers=None) -> jnp.ndarray:
+    w = _dequantize_core(q, jnp.float32(meta.w_min), jnp.float32(meta.bucket_size))
+    if outliers is not None and len(outliers[0]):
+        w = np.asarray(w).copy()
+        w[outliers[0].astype(np.int64)] = outliers[1]
+        return jnp.asarray(w)
+    return w
+
+
+def max_error(meta: QuantMeta) -> float:
+    """Quantization error bound: half a bucket (plus bound-rounding slack)."""
+    return 0.5 * meta.bucket_size
+
+
+# ---------------------------------------------------------------------------
+# Byte-level weight-file format (header + payload), as shipped across DCs
+# ---------------------------------------------------------------------------
+
+def to_bytes(q: jnp.ndarray, meta: QuantMeta, outliers=None) -> bytes:
+    header = struct.pack(HEADER_FMT, meta.w_min, meta.bucket_size, meta.n,
+                         meta.n_outliers)
+    body = header + np.asarray(q, dtype="<u2").tobytes()
+    if meta.n_outliers:
+        idx, vals = outliers
+        body += np.asarray(idx, "<u8").tobytes() + np.asarray(vals, "<f4").tobytes()
+    return body
+
+
+def from_bytes(buf: bytes):
+    w_min, bucket, n, n_out = struct.unpack(HEADER_FMT, buf[:HEADER_SIZE])
+    q = np.frombuffer(buf, dtype="<u2", offset=HEADER_SIZE, count=n)
+    meta = QuantMeta(w_min, bucket, n, n_out)
+    outliers = (np.zeros(0, np.uint64), np.zeros(0, np.float32))
+    if n_out:
+        off = HEADER_SIZE + 2 * n
+        idx = np.frombuffer(buf, dtype="<u8", offset=off, count=n_out)
+        vals = np.frombuffer(buf, dtype="<f4", offset=off + 8 * n_out, count=n_out)
+        outliers = (idx, vals)
+    return q, meta, outliers
+
+
+def quantize_to_bytes(w: jnp.ndarray, alpha: int = 2, beta: int = 2,
+                      prev: Optional[QuantMeta] = None) -> bytes:
+    q, meta, outliers = quantize(w, alpha, beta, prev=prev)
+    return to_bytes(q, meta, outliers)
+
+
+def dequantize_from_bytes(buf: bytes) -> np.ndarray:
+    q, meta, outliers = from_bytes(buf)
+    return np.asarray(dequantize(jnp.asarray(q.copy()), meta, outliers))

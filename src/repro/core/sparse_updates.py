@@ -1,0 +1,96 @@
+"""Sparse weight updates via ReLU zero-global-gradient skipping (paper §4.3).
+
+The paper's observation: with f(x)=max(x,0), whole branches of the backward
+computation are provably zero and can be identified *upfront* — before any
+weight update — giving 1.3x..3.5x training speedups by MLP depth (Table 3).
+
+TPU adaptation (per DESIGN.md): per-element branching does not pay on a
+systolic/vector machine, but per-*tile* predication does. We expose
+
+* ``relu_linear``       — custom-VJP linear+ReLU whose backward applies the
+  activation mask before the weight-gradient matmuls (algebraically identical
+  to autodiff; equivalence-tested).
+* ``masked_weight_grad``— the dW = x^T (g * mask) contraction, optionally
+  routed through the Pallas block-skip kernel which skips MXU tiles whose
+  gradient block is entirely zero (``repro.kernels.sparse_mlp``).
+* ``skip_stats``        — measured zero-gradient structure: fraction of units
+  (columns) and of tiles with zero global gradient, and the modeled update
+  speedup — this is what reproduces Table 3's trend.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_weight_grad(x, g_masked, use_kernel: bool = False, block: int = 128):
+    """dW = x^T @ g_masked, with optional Pallas block-skip execution."""
+    if use_kernel:
+        from repro.kernels.sparse_mlp import ops as sk_ops
+
+        return sk_ops.sparse_weight_grad(x, g_masked, block=block)
+    return jnp.einsum("bi,bj->ij", x, g_masked)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def relu_linear(x, w, b, use_kernel: bool = False):
+    return jnp.maximum(jnp.einsum("bi,ij->bj", x, w) + b, 0)
+
+
+def _relu_linear_fwd(x, w, b, use_kernel):
+    y = jnp.maximum(jnp.einsum("bi,ij->bj", x, w) + b, 0)
+    return y, (x, w, y > 0)
+
+
+def _relu_linear_bwd(use_kernel, res, g):
+    x, w, mask = res
+    gm = g * mask.astype(g.dtype)  # the upfront zero-global-gradient mask
+    dw = masked_weight_grad(x, gm, use_kernel=use_kernel)
+    dx = jnp.einsum("bj,ij->bi", gm, w)
+    db = jnp.sum(gm, axis=0)
+    return dx, dw, db
+
+
+relu_linear.defvjp(_relu_linear_fwd, _relu_linear_bwd)
+
+
+def sparse_mlp_apply(params: Dict[str, jnp.ndarray], x, n_layers: int,
+                     use_kernel: bool = False):
+    """ReLU MLP whose hidden layers use the sparse-update backward."""
+    for i in range(n_layers):
+        x = relu_linear(x, params[f"w{i}"], params[f"b{i}"], use_kernel)
+    return jnp.einsum("bi,ij->bj", x, params[f"w{n_layers}"]) + params[f"b{n_layers}"]
+
+
+def skip_stats(masks: List[jnp.ndarray], block: int = 128) -> Dict[str, float]:
+    """Zero-global-gradient structure across a batch.
+
+    masks: per hidden layer, (B, H) boolean activation masks (y > 0).
+    A *unit* is skippable if its column is all-zero across the batch; a
+    *tile* is skippable if a (block x block) gradient tile is all-zero.
+    Modeled speedup = dense update FLOPs / non-skipped update FLOPs, which is
+    the quantity behind the paper's Table 3.
+    """
+    total, skipped_units = 0, 0
+    total_tiles, skipped_tiles = 0, 0
+    for m in masks:
+        col_alive = jnp.any(m, axis=0)
+        total += m.shape[1]
+        skipped_units += int(jnp.sum(~col_alive))
+        nb = -(-m.shape[1] // block)
+        pad = nb * block - m.shape[1]
+        mp = jnp.pad(col_alive, (0, pad), constant_values=False)
+        tiles_alive = jnp.any(mp.reshape(nb, block), axis=1)
+        total_tiles += nb
+        skipped_tiles += int(jnp.sum(~tiles_alive))
+    unit_frac = skipped_units / max(total, 1)
+    tile_frac = skipped_tiles / max(total_tiles, 1)
+    return {
+        "unit_skip_frac": unit_frac,
+        "tile_skip_frac": tile_frac,
+        "modeled_update_speedup": 1.0 / max(1.0 - unit_frac, 1e-6),
+        "modeled_tpu_tile_speedup": 1.0 / max(1.0 - tile_frac, 1e-6),
+    }

@@ -1,0 +1,60 @@
+"""Async data pre-fetching (paper §4.1).
+
+"By implementing async learning cycles, multiple rounds of 'future' data can
+be downloaded upfront, making sure the learning engine has constant influx of
+data" — up to 4x faster warm-up. A background thread keeps a bounded queue of
+ready batches; the consumer's blocking time is tracked so benchmarks can
+report fetch-stall fraction with and without prefetch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Iterator, Optional
+
+
+@dataclass
+class PrefetchStats:
+    batches: int = 0
+    consumer_wait_s: float = 0.0
+    producer_time_s: float = 0.0
+
+
+class Prefetcher:
+    """Wraps an iterator; a daemon thread fills a bounded queue ahead of use."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterable[Any], depth: int = 4):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.stats = PrefetchStats()
+        self._thread = threading.Thread(target=self._run, args=(iter(it),), daemon=True)
+        self._thread.start()
+
+    def _run(self, it: Iterator[Any]) -> None:
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = next(it)
+                self.stats.producer_time_s += time.perf_counter() - t0
+                self._q.put(item)
+        except StopIteration:
+            self._q.put(self._SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self.stats.consumer_wait_s += time.perf_counter() - t0
+        if item is self._SENTINEL:
+            raise StopIteration
+        self.stats.batches += 1
+        return item
+
+
+def fetch_stall_fraction(total_time_s: float, stats: PrefetchStats) -> float:
+    return stats.consumer_wait_s / max(total_time_s, 1e-9)

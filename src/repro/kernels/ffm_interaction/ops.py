@@ -1,0 +1,23 @@
+"""Jitted public wrapper: DiagMask'd FFM interactions via the Pallas kernel.
+
+Drop-in replacement for ``repro.core.ffm.interactions`` (same signature), so
+the serving layer can inject it through ``deepffm.forward(interactions_fn=…)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ffm as ffm_core
+from repro.kernels.ffm_interaction.ffm_interaction import ffm_interaction_matrix
+
+
+@partial(jax.jit, static_argnums=(0,))
+def interactions(cfg, emb, idx, val):
+    """(B, n_pairs) DiagMask'd interactions, Pallas-computed dot matrix."""
+    e = jnp.take(emb, idx, axis=0)  # (B, F, F, K)
+    d = ffm_interaction_matrix(e, val)
+    pi, pj = ffm_core.pair_indices(cfg.n_fields)
+    return d[:, pi, pj]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the FFM interaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ffm_interaction_matrix_ref(e: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """e: (B, F, F, K); v: (B, F) -> (B, F, F)."""
+    dots = jnp.einsum("bijk,bjik->bij", e, e)
+    return dots * (v[:, :, None] * v[:, None, :])

@@ -1,0 +1,16 @@
+"""Jitted wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k
+    )

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Kv,D) -> (B,Sq,H,D). Naive materialized."""
+    B, Sq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qh = q.reshape(B, Sq, Kv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= cols <= rows
+    if window:
+        m &= cols > rows - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the quantize kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+B_MAX = 2**16
+
+
+def minmax_ref(w: jnp.ndarray):
+    return jnp.min(w), jnp.max(w)
+
+
+def quantize_ref(w: jnp.ndarray, w_min, bucket) -> jnp.ndarray:
+    q = jnp.round((w.astype(jnp.float32) - w_min) / bucket)
+    return jnp.clip(q, 0, B_MAX - 1).astype(jnp.int32)
+
+
+def dequantize_ref(q: jnp.ndarray, w_min, bucket) -> jnp.ndarray:
+    return (w_min + q.astype(jnp.float32) * bucket).astype(jnp.float32)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the block-skip sparse weight gradient."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sparse_mlp.sparse_mlp import sparse_weight_grad_pallas
+
+
+@partial(jax.jit, static_argnames=("block",))
+def sparse_weight_grad(x, g_masked, block: int = 128):
+    return sparse_weight_grad_pallas(
+        x, g_masked, block_i=block, block_j=block, block_b=block
+    )

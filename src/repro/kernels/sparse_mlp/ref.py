@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the sparse weight-gradient kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_weight_grad_ref(x: jnp.ndarray, g_masked: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bi,bj->ij", x.astype(jnp.float32), g_masked.astype(jnp.float32))

@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization. Everything below is a thin CLI over
+# ``repro.launch.dryrun_lib``.
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+from repro.common.config import INPUT_SHAPES  # noqa: E402
+from repro.launch import dryrun_lib  # noqa: E402
+from repro.models.registry import ARCH_IDS  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile")
+    ap.add_argument("--arch", choices=ARCH_IDS, help="architecture id")
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES), help="input shape")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 (512-chip) mesh")
+    ap.add_argument("--all", action="store_true", help="run every supported combo")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in combos:
+        try:
+            res = dryrun_lib.run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out)
+            print(dryrun_lib.summarize(res), flush=True)
+            if res.get("status") not in ("ok", "skipped"):
+                failures += 1
+        except Exception:
+            failures += 1
+            print(f"{arch} {shape} FAILED:\n{traceback.format_exc()}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

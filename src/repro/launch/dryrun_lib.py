@@ -1,0 +1,149 @@
+"""Dry-run core: lower + compile every (arch x input-shape x mesh) combo.
+
+Importable without device-count side effects; the ``repro.launch.dryrun``
+entrypoint sets XLA_FLAGS before any jax import and then calls into here.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import counting
+from repro.common.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline, sharding, specs
+from repro.models import registry
+from repro.optim import make_optimizer
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(f"{mesh.shape[n]}{n}" for n in mesh.axis_names)
+
+
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh, *,
+                    optimizer_name: str = "adam"):
+    """Returns (jitted_fn, arg_specs) ready for .lower(*arg_specs)."""
+    rt = mesh_lib.make_runtime(mesh)
+    p_abs = registry.abstract_params(cfg)
+    p_axes = registry.param_axes(cfg)
+    p_shard = sharding.param_shardings(cfg, p_axes, p_abs, mesh)
+    window = specs.effective_window(cfg, shape)
+
+    if shape.kind == "train":
+        opt = make_optimizer(optimizer_name)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        # ZeRO-1: optimizer state additionally sharded over the data axes.
+        # Each state collection (m/v/acc) mirrors the param tree per leaf.
+        o_shard = {
+            k: sharding.zero1_shardings(p_shard, p_abs, mesh) for k in o_abs
+        }
+        b_abs = specs.batch_specs(cfg, shape)
+        b_shard = sharding.batch_shardings(b_abs, mesh)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        rep = sharding.replicated(mesh)
+
+        fn = make_train_step(cfg, opt, rt, window=window)
+        metrics_shard = {"loss": rep, "ce": rep, "aux": rep}
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_shard, o_shard, rep, b_shard),
+            out_shardings=(p_shard, o_shard, rep, metrics_shard),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (p_abs, o_abs, step_abs, b_abs)
+
+    if shape.kind == "prefill":
+        b_abs = specs.batch_specs(cfg, shape)
+        b_shard = sharding.batch_shardings(b_abs, mesh)
+        logits_shard = sharding.batch_shardings(
+            specs.sds((shape.global_batch, cfg.padded_vocab), cfg.dtype), mesh
+        )
+        fn = make_prefill_step(cfg, rt, window=window)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                         out_shardings=logits_shard)
+        return jitted, (p_abs, b_abs)
+
+    # decode
+    state_abs, tok_abs = specs.decode_specs(cfg, shape, window=window)
+    state_shard = sharding.decode_state_shardings(cfg, state_abs, mesh)
+    tok_shard = sharding.batch_shardings(tok_abs, mesh)
+    fn = make_serve_step(cfg, rt, window=window)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, state_shard, tok_shard),
+        out_shardings=(tok_shard, state_shard),
+        donate_argnums=(1,),
+    )
+    return jitted, (p_abs, state_abs, tok_abs)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = "experiments/dryrun",
+            optimizer_name: str = "adam",
+            overrides: Optional[Dict[str, Any]] = None,
+            tag_suffix: str = "") -> Dict[str, Any]:
+    cfg = registry.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = specs.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    jitted, args = build_lowerable(cfg, shape, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns per-device list
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo_text = compiled.as_text()
+
+    n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    model_flops = counting.model_flops(cfg, n_tokens, shape.kind)
+
+    report = roofline.build_report(
+        arch=arch, shape=shape_name, mesh_name=_mesh_name(mesh),
+        chips=mesh.devices.size, cost=cost, hlo_text=hlo_text,
+        model_flops=model_flops, memory_analysis=mem,
+    )
+    result = report.to_dict()
+    result.update(
+        status="ok", t_lower_s=t_lower, t_compile_s=t_compile,
+        params=cfg.param_count(), params_active=cfg.param_count(active_only=True),
+        hlo_bytes_len=len(hlo_text),
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{'2pod' if multi_pod else '1pod'}{tag_suffix}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def summarize(result: Dict[str, Any]) -> str:
+    if result.get("status") != "ok":
+        return f"{result['arch']:24s} {result['shape']:12s} SKIP: {result.get('reason','?')}"
+    return (
+        f"{result['arch']:24s} {result['shape']:12s} {result['mesh']:18s} "
+        f"compute={result['t_compute']*1e3:8.3f}ms mem={result['t_memory']*1e3:8.3f}ms "
+        f"coll={result['t_collective']*1e3:8.3f}ms -> {result['bottleneck']:10s} "
+        f"useful={result['useful_flops_ratio']:.3f} compile={result['t_compile_s']:.0f}s"
+    )

@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+Pure functions (importing this module never touches jax device state). The
+production target is TPU v5e: one pod = a 16x16 mesh of 256 chips
+(axes ``data`` x ``model``), multi-pod = 2 pods = 512 chips with a leading
+``pod`` axis used (with ``data``) for batch/FSDP sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.common.runtime import Runtime
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_runtime(mesh: Optional[jax.sharding.Mesh]) -> Runtime:
+    if mesh is None:
+        return Runtime(mesh=None)
+    names = mesh.axis_names
+    data_axes = tuple(n for n in names if n != "model")
+    return Runtime(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def make_smoke_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (requires >= n_data*n_model devices)."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = n_data * n_model
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(n_data, n_model), ("data", "model")
+    )

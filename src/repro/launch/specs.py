@@ -1,0 +1,55 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: the dry-run lowers
+``train_step`` / ``prefill_step`` / ``serve_step`` entirely against these.
+The audio/VLM frontends are stubs by assignment: seamless gets precomputed
+frame embeddings (B, S, d_model); chameleon gets VQ token ids in-vocab.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import InputShape, ModelConfig
+from repro.models import registry
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Inputs for train/prefill (full-sequence) steps."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        specs["frames"] = sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, *, window: int = 0
+                 ) -> Tuple[Any, Any]:
+    """(decode state specs, token specs) for one-token serve steps."""
+    b, s = shape.global_batch, shape.seq_len
+    kw = {"src_len": min(s, 4096)} if cfg.family == "encdec" else {}
+    state = registry.decode_state_specs(cfg, b, s, window=window, **kw)
+    tokens = sds((b,), jnp.int32)
+    return state, tokens
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k runs attention archs with the sliding-window variant."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Assignment carve-outs (documented in DESIGN.md)."""
+    if cfg.family == "encdec" and shape.name == "long_500k":
+        return False, "seamless enc-dec: 500k-frame encoder is quadratic; decode bounded by target len (skip per DESIGN.md)"
+    return True, ""

@@ -1,0 +1,89 @@
+"""Distributed training launcher.
+
+On real hardware this runs under the production mesh; on this CPU container
+use ``--smoke`` (reduced config, 1 device) or ``--devices N`` (forced host
+devices, must be set before jax import — hence the env shim below).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke --steps 5
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host device count (mesh n_data x n_model)")
+    ap.add_argument("--mesh", default="", help="e.g. 2x2 (data x model)")
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import store
+    from repro.data.synthetic import lm_batches
+    from repro.launch import mesh as mesh_lib, sharding
+    from repro.models import registry
+    from repro.optim import make_optimizer
+    from repro.train.steps import make_train_step
+
+    cfg = registry.get_config(args.arch, smoke=args.smoke)
+    mesh = None
+    rt = None
+    if args.mesh:
+        nd, nm = (int(x) for x in args.mesh.split("x"))
+        mesh = mesh_lib.make_smoke_mesh(nd, nm)
+        rt = mesh_lib.make_runtime(mesh)
+
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    if mesh is not None:
+        p_abs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        p_sh = sharding.param_shardings(cfg, registry.param_axes(cfg), p_abs, mesh)
+        params = jax.device_put(params, p_sh)
+
+    opt = make_optimizer(args.optimizer, lr=1e-3)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, rt))
+    step = jnp.zeros((), jnp.int32)
+
+    ctx = mesh if mesh is not None else _nullcontext()
+    with ctx:
+        for i, batch in enumerate(
+            lm_batches(cfg.vocab_size, args.batch, args.seq, args.steps)
+        ):
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            if cfg.family == "encdec":
+                b["frames"] = jnp.zeros(
+                    (args.batch, args.seq, cfg.d_model), jnp.dtype(cfg.dtype))
+            params, opt_state, step, m = step_fn(params, opt_state, step, b)
+            print(f"step {i}: loss={float(m['loss']):.4f}", flush=True)
+    if args.ckpt:
+        store.save(args.ckpt, params, opt_state)
+        print(f"checkpointed to {args.ckpt}")
+    return 0
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    sys.exit(main())

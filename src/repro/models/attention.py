@@ -1,0 +1,376 @@
+"""Attention variants: GQA (full / sliding-window) and MLA (DeepSeek-V2).
+
+Design notes
+------------
+* Prefill/train attention is **flash-style chunked**: an outer scan over query
+  chunks and an inner scan over KV chunks with online-softmax running
+  (max, sum, acc) state. Peak memory is O(chunk_q x chunk_k) per (batch,
+  kv_head, q_per_kv) instead of O(S^2) — required for the 32k prefill shape.
+* Decode KV caches are **ring buffers** when a sliding window is active:
+  keys are stored post-RoPE (at their absolute position), so readout needs no
+  position bookkeeping — only a validity mask derived from the write pointer.
+* MLA decode uses the **absorbed** formulation: the cache holds the latent
+  c_kv (rank 512) + shared RoPE key; W_uk is folded into the query and W_uv
+  into the output, so per-step FLOPs and cache bytes scale with kv_lora_rank,
+  not n_heads * head_dim. This is the fidelity point of deepseek-v2's MLA.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pspec import ParamSpec
+from repro.models.layers import apply_rope, rms_norm
+
+Cache = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention core
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Kv, D)
+    v: jnp.ndarray,  # (B, Sk, Kv, D)
+    *,
+    q_offset: int = 0,
+    window: int = 0,
+    causal: bool = True,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = D ** -0.5
+
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, k.shape[1])
+    # pad S to chunk multiples
+    pq = (-Sq) % cq
+    pk = (-k.shape[1]) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sqp, Skp = q.shape[1], k.shape[1]
+    nq, nk = Sqp // cq, Skp // ck
+
+    qc = q.reshape(B, nq, cq, Kv, G, D).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,Kv,G,cq,D)
+    kc = k.reshape(B, nk, ck, Kv, D).transpose(1, 0, 3, 2, 4)  # (nk,B,Kv,ck,D)
+    vc = v.reshape(B, nk, ck, Kv, D).transpose(1, 0, 3, 2, 4)
+
+    valid_k = jnp.arange(Skp) < (Skp - pk)  # mask out k padding
+
+    def q_chunk_body(iq, qi):
+        rows = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_body(carry, inputs):
+            m_run, l_run, acc = carry
+            ik, ki, vi = inputs
+            cols = ik * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qi, ki, preferred_element_type=jnp.float32
+            ) * scale
+            msk = jnp.ones((cq, ck), bool)
+            if causal:
+                msk &= cols[None, :] <= rows[:, None]
+            if window > 0:
+                msk &= cols[None, :] > rows[:, None] - window
+            msk = msk & valid_k[ik * ck + jnp.arange(ck)][None, :]
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Kv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, cq, D), jnp.float32)
+        iks = jnp.arange(nk)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (iks, kc, vc))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out  # (B,Kv,G,cq,D)
+
+    outs = jax.lax.map(lambda args: q_chunk_body(*args), (jnp.arange(nq), qc))
+    # (nq,B,Kv,G,cq,D) -> (B, Sqp, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sqp, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg, d: int | None = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    sp = {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), "scaled", dt, fan_in=d),
+        "wk": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), "scaled", dt, fan_in=d),
+        "wv": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), "scaled", dt, fan_in=d),
+        "wo": ParamSpec((cfg.n_heads, hd, d), ("heads", "head_dim", "embed"), "scaled", dt, fan_in=cfg.n_heads * hd),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((cfg.n_heads, hd), ("heads", "head_dim"), "zeros", dt)
+        sp["bk"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), "zeros", dt)
+        sp["bv"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), "zeros", dt)
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones", dt)
+        sp["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones", dt)
+    return sp
+
+
+def _project_qkv(cfg, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(cfg, p, x, *, window: int = 0, positions=None):
+    """Training / prefill self-attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = flash_attention(q, k, v, window=window,
+                          chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, window: int = 0) -> Cache:
+    """Per-layer cache template (stacked over layers by the caller)."""
+    size = min(window, max_len) if window > 0 else max_len
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def gqa_decode(cfg, p, x, cache: Cache, pos, *, window: int = 0):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (current position).
+
+    Keys are stored post-RoPE. With a window, the cache is a ring buffer of
+    size W and slot validity is derived from the write pointer.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)  # (B,1,H/Kv,D)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    j = jnp.arange(size)
+    if window > 0:
+        # slot j holds absolute position pos - ((pos - j) mod size); valid if >= 0
+        abs_pos = pos - ((pos - j) % size)
+        valid = abs_pos >= 0
+    else:
+        valid = j <= pos
+
+    Kv = cfg.n_kv_heads
+    G = cfg.n_heads // Kv
+    qh = q.reshape(B, Kv, G, -1)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, ck,
+                   preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads, -1).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    sp = {}
+    if r_q:
+        sp["wdq"] = ParamSpec((d, r_q), ("embed", "q_lora"), "scaled", dt)
+        sp["q_norm"] = ParamSpec((r_q,), ("q_lora",), "ones", dt)
+        sp["wuq"] = ParamSpec((r_q, H, nope + rope), ("q_lora", "heads", "head_dim"), "scaled", dt)
+    else:
+        sp["wuq"] = ParamSpec((d, H, nope + rope), ("embed", "heads", "head_dim"), "scaled", dt)
+    sp["wdkv"] = ParamSpec((d, r_kv), ("embed", "kv_lora"), "scaled", dt)
+    sp["kv_norm"] = ParamSpec((r_kv,), ("kv_lora",), "ones", dt)
+    sp["wkr"] = ParamSpec((d, rope), ("embed", "head_dim"), "scaled", dt)
+    sp["wuk"] = ParamSpec((r_kv, H, nope), ("kv_lora", "heads", "head_dim"), "scaled", dt)
+    sp["wuv"] = ParamSpec((r_kv, H, vdim), ("kv_lora", "heads", "head_dim"), "scaled", dt)
+    sp["wo"] = ParamSpec((H, vdim, d), ("heads", "head_dim", "embed"), "scaled", dt, fan_in=H * vdim)
+    return sp
+
+
+def _mla_q(cfg, p, x, positions):
+    if cfg.q_lora_rank:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wuq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"])
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["wkr"])[:, :, None]  # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(cfg, p, x, *, window: int = 0, positions=None):
+    """Training/prefill MLA in expanded form (full materialized K/V)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    ckv, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"])
+    H = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, cfg.qk_rope_dim))], -1
+    )
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    # pad v head_dim up to qk dim for the shared flash kernel, then slice
+    qk_dim, v_dim = q.shape[-1], v.shape[-1]
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - v_dim)))
+    out = flash_attention(q, k, vpad, window=window,
+                          chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)[..., :v_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_mla_cache(cfg, batch: int, max_len: int) -> Cache:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt),
+    }
+
+
+def mla_decode(cfg, p, x, cache: Cache, pos):
+    """Absorbed-form single-token decode: score and readout in latent space."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)  # (B,1,H,*)
+    ckv_new, kr_new = _mla_latent(cfg, p, x, positions)  # (B,1,r), (B,1,rope)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, pos, 0))
+
+    # absorb W_uk into the query: (B,H,r)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wuk"],
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv.dtype), ckv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], kr,
+                       preferred_element_type=jnp.float32)
+    s = s * ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w.astype(ckv.dtype), ckv,
+                     preferred_element_type=jnp.float32)  # (B,H,r)
+    o = jnp.einsum("bhr,rhk->bhk", ctx.astype(p["wuv"].dtype), p["wuv"],
+                   preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), p["wo"])[:, None]
+    return out, {"ckv": ckv, "kr": kr}
+
+
+# ---------------------------------------------------------------------------
+# Int8-quantized KV cache (beyond-paper: §6 quantization applied to serving)
+# ---------------------------------------------------------------------------
+#
+# Decode shapes are memory-bound on cache streaming in every roofline; storing
+# K/V as int8 with a per-(token, kv-head) absmax scale halves-to-quarters the
+# cache bytes. Scores factorize exactly: k = k_int * scale[s] so
+#   s[b,kv,g,s] = scale[b,s,kv] * sum_d q·k_int   (one post-dot multiply)
+# and the readout folds scale_v into the probabilities before the second dot.
+
+def init_kv_cache_int8(cfg, batch: int, max_len: int, window: int = 0) -> Cache:
+    size = min(window, max_len) if window > 0 else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), jnp.int8),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), jnp.int8),
+        "k_scale": jnp.zeros((batch, size, cfg.n_kv_heads), jnp.float32),
+        "v_scale": jnp.zeros((batch, size, cfg.n_kv_heads), jnp.float32),
+    }
+
+
+def _quantize_kv(x):
+    """x: (B, 1, K, D) -> int8 codes + per-(token, head) absmax scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,1,K)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def gqa_decode_int8(cfg, p, x, cache: Cache, pos, *, window: int = 0):
+    """One-token decode against the int8 cache. Same contract as gqa_decode."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    kq, ks = _quantize_kv(k)
+    vq, vs = _quantize_kv(v)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+    cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+    cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+
+    j = jnp.arange(size)
+    if window > 0:
+        abs_pos = pos - ((pos - j) % size)
+        valid = abs_pos >= 0
+    else:
+        valid = j <= pos
+
+    Kv = cfg.n_kv_heads
+    G = cfg.n_heads // Kv
+    qh = q.reshape(B, Kv, G, -1)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, ck.astype(qh.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s * cks.transpose(0, 2, 1)[:, :, None, :]  # fold k scales back in
+    s = s * (q.shape[-1] ** -0.5)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    wv = w * cvs.transpose(0, 2, 1)[:, :, None, :]  # fold v scales into probs
+    o = jnp.einsum("bkgs,bskd->bkgd", wv.astype(x.dtype), cv.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads, -1).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}

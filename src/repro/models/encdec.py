@@ -1,0 +1,172 @@
+"""Seamless-M4T-style encoder-decoder transformer backbone. [arXiv:2308.11596]
+
+The modality frontend (mel-spectrogram + conv feature extractor) is the one
+allowed stub: the encoder consumes precomputed frame embeddings of shape
+(B, S_src, d_model) supplied by ``input_specs``. Encoder is bidirectional
+(non-causal) self-attention with a ReLU FFN — which makes the paper's §4.3
+sparse-ReLU-update trick applicable to this architecture. The decoder adds
+causal self-attention plus cross-attention (no RoPE on cross, per convention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.pspec import ParamSpec
+from repro.models import attention, layers
+from repro.models.attention import flash_attention
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "ln1": layers.norm_specs(cfg),
+        "attn": attention.gqa_specs(cfg),
+        "ln2": layers.norm_specs(cfg),
+        "ffn": layers.ffn_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg):
+    return {
+        "ln1": layers.norm_specs(cfg),
+        "self_attn": attention.gqa_specs(cfg),
+        "ln_x": layers.norm_specs(cfg),
+        "cross": attention.gqa_specs(cfg),
+        "ln2": layers.norm_specs(cfg),
+        "ffn": layers.ffn_specs(cfg),
+    }
+
+
+def param_specs(cfg):
+    assert cfg.n_enc_layers > 0, "encdec requires n_enc_layers"
+    return {
+        "embed": layers.embed_specs(cfg),
+        "enc_layers": pspec.stack(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "enc_ln_f": layers.norm_specs(cfg),
+        "dec_layers": pspec.stack(_dec_layer_specs(cfg), cfg.n_layers),
+        "ln_f": layers.norm_specs(cfg),
+    }
+
+
+def _cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_attend(cfg, p, x, k, v):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = flash_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S_src, d_model) stub embeddings -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        o = flash_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = x + layers.apply_ffn(cfg, lp["ffn"], layers.apply_norm(cfg, lp["ln2"], x))
+        return x, None
+
+    fn = body
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        fn = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return layers.apply_norm(cfg, params["enc_ln_f"], x)
+
+
+def forward(cfg, params, batch, rt=None, *, window=None, last_only: bool = False):
+    """batch: {frames (B,Ss,d), tokens (B,St)} -> decoder logits, aux."""
+    w = cfg.sliding_window if window is None else window
+    enc_out = encode(cfg, params, batch["frames"])
+    x = layers.embed_tokens(cfg, params["embed"], batch["tokens"]).astype(
+        jnp.dtype(cfg.dtype)
+    )
+
+    def body(x, lp):
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        x = x + attention.gqa_forward(cfg, lp["self_attn"], h, window=w)
+        h = layers.apply_norm(cfg, lp["ln_x"], x)
+        k, v = _cross_kv(lp["cross"], enc_out)
+        x = x + _cross_attend(cfg, lp["cross"], h, k, v)
+        x = x + layers.apply_ffn(cfg, lp["ffn"], layers.apply_norm(cfg, lp["ln2"], x))
+        return x, None
+
+    fn = body
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        fn = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.logits(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int, *, window: int = 0, src_len: int = 0):
+    """Self-attn KV rings + precomputed per-layer cross K/V (filled at prefill)."""
+    src_len = src_len or max_len
+    self_one = attention.init_kv_cache(cfg, batch, max_len, window=window)
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    return {
+        "self": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), self_one
+        ),
+        "cross_k": jnp.zeros((L, batch, src_len, cfg.n_kv_heads, hd), dt),
+        "cross_v": jnp.zeros((L, batch, src_len, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cross(cfg, params, state, frames):
+    """Run the encoder and fill the cross-attention caches."""
+    enc_out = encode(cfg, params, frames)
+
+    def body(_, lp):
+        k, v = _cross_kv(lp["cross"], enc_out)
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(state, cross_k=ck, cross_v=cv)
+
+
+def decode_step(cfg, params, state, tokens, rt=None, *, window: int = 0):
+    pos = state["pos"]
+    x = layers.embed_tokens(cfg, params["embed"], tokens[:, None]).astype(
+        jnp.dtype(cfg.dtype)
+    )
+
+    def body(x, scanned):
+        lp, lself, ck, cv = scanned
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        h, newc = attention.gqa_decode(cfg, lp["self_attn"], h, lself, pos, window=window)
+        x = x + h
+        h = layers.apply_norm(cfg, lp["ln_x"], x)
+        x = x + _cross_attend(cfg, lp["cross"], h, ck, cv)
+        x = x + layers.apply_ffn(cfg, lp["ffn"], layers.apply_norm(cfg, lp["ln2"], x))
+        return x, newc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"], state["cross_k"], state["cross_v"])
+    )
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    lg = layers.logits(cfg, params["embed"], x)[:, 0]
+    return lg, dict(state, self=new_self, pos=pos + 1)

@@ -1,0 +1,196 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single weight-shared attention
+block applied every ``attn_period`` positions, with per-occurrence LoRA on the
+concat projection. [arXiv:2411.15242]
+
+Layer plan for ``n_layers`` total positions and period P:
+  ``n_super = n_layers // P`` super-blocks of (P-1 mamba blocks + shared attn),
+  followed by ``n_layers % P`` trailing mamba blocks.
+The shared block consumes concat(hidden, original_embedding) -> d via
+``w_concat`` (LoRA-adapted per occurrence), runs attn+FFN, and its output is
+projected (``w_proj``) and added residually — the Zamba wiring.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.pspec import ParamSpec
+from repro.models import attention, layers, ssm
+
+
+def _n_super(cfg):
+    return cfg.n_layers // cfg.attn_period
+
+
+def _n_tail(cfg):
+    return cfg.n_layers % cfg.attn_period
+
+
+def _mamba_block_specs(cfg):
+    return {"ln": layers.norm_specs(cfg), "mixer": ssm.mamba_specs(cfg)}
+
+
+def _shared_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_concat": ParamSpec((2 * d, d), ("mlp", "embed"), "scaled", dt),
+        "ln1": layers.norm_specs(cfg),
+        "attn": attention.gqa_specs(cfg),
+        "ln2": layers.norm_specs(cfg),
+        "ffn": layers.ffn_specs(cfg),
+        "w_proj": ParamSpec((d, d), ("embed", "mlp"), "scaled", dt),
+    }
+
+
+def _lora_specs(cfg):
+    d, r = cfg.d_model, cfg.lora_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "a": ParamSpec((2 * d, r), ("mlp", "null"), "scaled", dt),
+        "b": ParamSpec((r, d), ("null", "embed"), "zeros", dt),
+    }
+
+
+def param_specs(cfg):
+    assert cfg.attn_period >= 2 and cfg.lora_rank > 0, "hybrid requires attn_period>=2, lora_rank>0"
+    ns, nt = _n_super(cfg), _n_tail(cfg)
+    sp = {
+        "embed": layers.embed_specs(cfg),
+        "mamba": pspec.stack(
+            pspec.stack(_mamba_block_specs(cfg), cfg.attn_period - 1, "stack"), ns
+        ),
+        "shared": _shared_specs(cfg),
+        "ln_f": layers.norm_specs(cfg),
+    }
+    if cfg.lora_rank:
+        sp["lora"] = pspec.stack(_lora_specs(cfg), ns)
+    if nt:
+        sp["tail"] = pspec.stack(_mamba_block_specs(cfg), nt)
+    return sp
+
+
+def _mamba_block(cfg, lp, x):
+    return x + ssm.mamba_forward(cfg, lp["mixer"], layers.apply_norm(cfg, lp["ln"], x))
+
+
+def _shared_block(cfg, sp, lora, x, x0, attn_fn):
+    w = sp["w_concat"]
+    xin = jnp.concatenate([x, x0], axis=-1)
+    h = jnp.einsum("bsd,df->bsf", xin, w)
+    if lora is not None:
+        h = h + jnp.einsum("bsd,dr,rf->bsf", xin, lora["a"], lora["b"])
+    a = attn_fn(sp, layers.apply_norm(cfg, sp["ln1"], h))
+    h = h + a
+    h = h + layers.apply_ffn(cfg, sp["ffn"], layers.apply_norm(cfg, sp["ln2"], h))
+    return x + jnp.einsum("bsf,fd->bsd", h, sp["w_proj"])
+
+
+def forward(cfg, params, tokens, rt=None, *, window=None, last_only: bool = False):
+    w = cfg.sliding_window if window is None else window
+    x0 = layers.embed_tokens(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    shared = params["shared"]
+
+    def attn_fn(sp, h):
+        return attention.gqa_forward(cfg, sp["attn"], h, window=w)
+
+    def super_body(x, scanned):
+        lp, lora = scanned
+        for j in range(cfg.attn_period - 1):
+            bj = jax.tree_util.tree_map(lambda a: a[j], lp)
+            x = _mamba_block(cfg, bj, x)
+        x = _shared_block(cfg, shared, lora, x, x0, attn_fn)
+        return x, None
+
+    fn = super_body
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        fn = jax.checkpoint(super_body, policy=policy)
+    x, _ = jax.lax.scan(fn, x0, (params["mamba"], params["lora"]))
+
+    if _n_tail(cfg):
+        def tail_body(x, lp):
+            return _mamba_block(cfg, lp, x), None
+
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    if last_only:
+        x = x[:, -1:]
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.logits(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int, *, window: int = 0):
+    ns, nt = _n_super(cfg), _n_tail(cfg)
+    m_one = ssm.init_mamba_state(cfg, batch)
+    kv_one = attention.init_kv_cache(cfg, batch, max_len, window=window)
+
+    def stk(tree, n):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree
+        )
+
+    state = {
+        "mamba": stk(stk(m_one, cfg.attn_period - 1), ns),
+        "attn": stk(kv_one, ns),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if nt:
+        state["tail"] = stk(m_one, nt)
+    return state
+
+
+def decode_step(cfg, params, state, tokens, rt=None, *, window: int = 0):
+    pos = state["pos"]
+    x0 = layers.embed_tokens(cfg, params["embed"], tokens[:, None]).astype(
+        jnp.dtype(cfg.dtype)
+    )
+    shared = params["shared"]
+
+    def super_body(x, scanned):
+        lp, lora, mstate, kvcache = scanned
+        new_m = []
+        for j in range(cfg.attn_period - 1):
+            bj = jax.tree_util.tree_map(lambda a: a[j], lp)
+            sj = jax.tree_util.tree_map(lambda a: a[j], mstate)
+            h = layers.apply_norm(cfg, bj["ln"], x)
+            h, ns_ = ssm.mamba_decode(cfg, bj["mixer"], h, sj)
+            x = x + h
+            new_m.append(ns_)
+        new_mstate = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_m)
+
+        newc = {}
+
+        def attn_fn(sp, h):
+            out, c = attention.gqa_decode(cfg, sp["attn"], h, kvcache, pos, window=window)
+            newc["c"] = c
+            return out
+
+        x = _shared_block(cfg, shared, lora, x, x0, attn_fn)
+        return x, (new_mstate, newc["c"])
+
+    scanned = (params["mamba"], params["lora"], state["mamba"], state["attn"])
+    x, (new_mamba, new_attn) = jax.lax.scan(super_body, x0, scanned)
+
+    new_state = dict(state)
+    new_state["mamba"], new_state["attn"] = new_mamba, new_attn
+    if _n_tail(cfg):
+        def tail_body(x, sc):
+            lp, st = sc
+            h = layers.apply_norm(cfg, lp["ln"], x)
+            h, ns_ = ssm.mamba_decode(cfg, lp["mixer"], h, st)
+            return x + h, ns_
+
+        x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], state["tail"]))
+        new_state["tail"] = new_tail
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    lg = layers.logits(cfg, params["embed"], x)[:, 0]
+    new_state["pos"] = pos + 1
+    return lg, new_state

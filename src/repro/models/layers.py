@@ -1,0 +1,133 @@
+"""Shared neural building blocks (pure functions over param dicts)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pspec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg, d: int | None = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((d,), ("embed",), "ones", dt),
+            "bias": ParamSpec((d,), ("embed",), "zeros", dt),
+        }
+    return {"scale": ParamSpec((d,), ("embed",), "ones", dt)}
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm" and "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg, dim: int) -> jnp.ndarray:
+    half = dim // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]  # (..., S, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg, d_ff: int | None = None, d: int | None = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.act == "swiglu":
+        return {
+            "wi": ParamSpec((d, d_ff), ("embed", "mlp"), "scaled", dt),
+            "wg": ParamSpec((d, d_ff), ("embed", "mlp"), "scaled", dt),
+            "wo": ParamSpec((d_ff, d), ("mlp", "embed"), "scaled", dt),
+        }
+    return {
+        "wi": ParamSpec((d, d_ff), ("embed", "mlp"), "scaled", dt),
+        "wo": ParamSpec((d_ff, d), ("mlp", "embed"), "scaled", dt),
+    }
+
+
+def apply_ffn(cfg, p, x):
+    if cfg.act == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        if cfg.act == "relu":
+            h = jnp.maximum(h, 0)
+        else:
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg) -> Dict[str, ParamSpec]:
+    dt = jnp.dtype(cfg.param_dtype)
+    sp = {"tok": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), "embed", dt)}
+    if not cfg.tie_embeddings:
+        sp["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), "scaled", dt
+        )
+    return sp
+
+
+def embed_tokens(cfg, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits(cfg, p, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, p["tok"])
+    return jnp.einsum("...d,dv->...v", x, p["unembed"])
+
+
+def cross_entropy(logits_, labels, vocab_size: int):
+    """Mean CE over all positions; labels < 0 are masked."""
+    lf = logits_.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    losses = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)

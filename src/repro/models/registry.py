@@ -1,0 +1,112 @@
+"""Architecture registry: family -> module, arch id -> config.
+
+The generic entry points used by train/serve/dry-run:
+
+* ``param_specs(cfg)``                       declarative parameter tree
+* ``forward(cfg, params, batch, rt)``        logits over target positions
+* ``loss_fn(cfg, params, batch, rt)``        CE + aux
+* ``init_decode_state / decode_state_specs`` decode caches
+* ``decode_step(cfg, params, state, tok)``   one-token serve step
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.config import ModelConfig
+from repro.models import encdec, hybrid, layers, ssm, transformer
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+ARCH_IDS = (
+    "chameleon-34b",
+    "mamba2-130m",
+    "yi-6b",
+    "seamless-m4t-large-v2",
+    "phi3.5-moe-42b-a6.6b",
+    "llama3.2-1b",
+    "qwen2.5-3b",
+    "deepseek-v2-236b",
+    "zamba2-7b",
+    "granite-8b",
+)
+
+_MODULE_FOR_ARCH = {
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-130m": "mamba2_130m",
+    "yi-6b": "yi_6b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "llama3.2-1b": "llama32_1b",
+    "qwen2.5-3b": "qwen25_3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "zamba2-7b": "zamba2_7b",
+    "granite-8b": "granite_8b",
+}
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch_id]}")
+    return mod.smoke() if smoke else mod.config()
+
+
+def module_for(cfg: ModelConfig):
+    return FAMILY_MODULES[cfg.family]
+
+
+def param_specs(cfg: ModelConfig):
+    return module_for(cfg).param_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key):
+    return pspec.materialize(param_specs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return pspec.abstract(param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return pspec.axes(param_specs(cfg))
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], rt=None, *, window=None,
+            last_only: bool = False):
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return mod.forward(cfg, params, batch, rt, window=window, last_only=last_only)
+    return mod.forward(cfg, params, batch["tokens"], rt, window=window, last_only=last_only)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rt=None, *, window=None):
+    logits, aux = forward(cfg, params, batch, rt, window=window)
+    ce = layers.cross_entropy(logits, batch["labels"], cfg.padded_vocab)
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *, window: int = 0, **kw):
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return mod.init_decode_state(cfg, batch, max_len, window=window, **kw)
+    return mod.init_decode_state(cfg, batch, max_len, window=window)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int, *, window: int = 0, **kw):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len, window=window, **kw)
+    )
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, rt=None, *, window: int = 0):
+    return module_for(cfg).decode_step(cfg, params, state, tokens, rt, window=window)

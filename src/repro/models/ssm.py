@@ -1,0 +1,260 @@
+"""Mamba2 (state-space duality / SSD) blocks. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside fixed-size chunks plus a linear recurrence over chunk
+states. Decode is the O(1)-state recurrence h <- h*exp(dt*A) + dt*(B (x) x).
+
+Shapes: x (B,S,d); inner width d_in = expand*d; H = d_in/headdim SSD heads;
+G groups of (B,C) projections of state size N; depthwise causal conv of width
+d_conv over the [x, B, C] channels.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import pspec
+from repro.common.pspec import ParamSpec
+from repro.models import layers
+
+
+def mamba_specs(cfg) -> Dict[str, ParamSpec]:
+    """Input projections are SPLIT (z / x / BC / dt) rather than fused.
+
+    A fused (d, 2*d_in + 2*G*N + H) projection has an out-dim that is almost
+    never divisible by the model-axis size, forcing GSPMD to replicate it and
+    then reshard every consumer — we measured a ~1900-op collective-permute
+    storm on mamba2-130m prefill. Split projections shard cleanly per piece
+    (z/x: d_in; BC: 2*G*N) with only the tiny dt head replicated.
+    """
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * g * n
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_z": ParamSpec((d, di), ("embed", "ssm_inner"), "scaled", dt),
+        "w_x": ParamSpec((d, di), ("embed", "ssm_inner"), "scaled", dt),
+        "w_bc": ParamSpec((d, 2 * g * n), ("embed", "ssm_inner"), "scaled", dt),
+        "w_dt": ParamSpec((d, h), ("embed", "null"), "scaled", dt),
+        "conv_w": ParamSpec((cfg.d_conv, conv_dim), ("conv", "ssm_inner"), "uniform_conv", dt),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros", dt),
+        "a_log": ParamSpec((h,), ("ssm_heads",), "ones", jnp.float32),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), "ones", jnp.float32),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), "zeros", jnp.float32),
+        "norm": ParamSpec((di,), ("ssm_inner",), "ones", dt),
+        "w_out": ParamSpec((di, d), ("ssm_inner", "embed"), "scaled", dt),
+    }
+
+
+def _project_in(cfg, p, x):
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z = jnp.einsum("bsd,df->bsf", x, p["w_z"])
+    xc = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    bc = jnp.einsum("bsd,df->bsf", x, p["w_bc"])
+    bm, cm = bc[..., : g * n], bc[..., g * n :]
+    dt = jnp.einsum("bsd,df->bsf", x, p["w_dt"])
+    return z, xc, bm, cm, dt
+
+
+def _causal_conv(conv_w, conv_b, u):
+    """Depthwise causal conv. u: (B, S, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * conv_w[i] for i in range(k))
+    return jax.nn.silu((out + conv_b).astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int):
+    """SSD scan. x:(B,S,H,P) dt:(B,S,H) a:(H,) bm/cm:(B,S,G,N) -> (B,S,H,P)."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // q
+
+    f32 = jnp.float32
+    xd = (x.astype(f32) * dt[..., None].astype(f32)).reshape(b, nc, q, h, p)
+    da = (dt.astype(f32) * a.astype(f32)).reshape(b, nc, q, h)
+    bh = jnp.repeat(bm.astype(f32), rep, axis=2).reshape(b, nc, q, h, n)
+    ch = jnp.repeat(cm.astype(f32), rep, axis=2).reshape(b, nc, q, h, n)
+
+    # (b, nc, h, q)
+    cum = jnp.cumsum(da, axis=2).transpose(0, 1, 3, 2)
+    xd_t = xd.transpose(0, 1, 3, 2, 4)  # (b,nc,h,q,p)
+    b_t = bh.transpose(0, 1, 3, 2, 4)  # (b,nc,h,q,n)
+    c_t = ch.transpose(0, 1, 3, 2, 4)
+
+    # intra-chunk (diagonal blocks)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])  # (b,nc,h,q,q)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri, decay, 0.0)
+    scores = jnp.einsum("bchqn,bchkn->bchqk", c_t, b_t)
+    y_diag = jnp.einsum("bchqk,bchkp->bchqp", scores * lmat, xd_t)
+
+    # chunk states and inter-chunk recurrence
+    decay_end = jnp.exp(cum[..., -1:] - cum)  # (b,nc,h,q)
+    states = jnp.einsum("bchq,bchqn,bchqp->bchnp", decay_end, b_t, xd_t)
+    chunk_decay = jnp.exp(cum[..., -1])  # (b,nc,h)
+
+    def rec(carry, inp):
+        st, dec = inp  # (b,h,n,p), (b,h)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    init = jnp.zeros((b, h, n, p), f32)
+    _, prev_states = jax.lax.scan(
+        rec,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+
+    decay_out = jnp.exp(cum)  # (b,nc,h,q)
+    y_off = jnp.einsum("bchqn,bchnp,bchq->bchqp", c_t, prev_states, decay_out)
+
+    y = (y_diag + y_off).transpose(0, 1, 3, 2, 4).reshape(b, sp, h, p)
+    return y[:, :s].astype(x.dtype)
+
+
+def mamba_forward(cfg, p, x):
+    """Full-sequence mamba2 mixer. x: (B, S, d) -> (B, S, d)."""
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    hd = cfg.ssm_headdim
+    z, xc, bm, cm, dt = _project_in(cfg, p, x)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out = _causal_conv(p["conv_w"], p["conv_b"], conv_in)
+    xc = conv_out[..., :di]
+    bm = conv_out[..., di : di + g * n].reshape(*xc.shape[:2], g, n)
+    cm = conv_out[..., di + g * n :].reshape(*xc.shape[:2], g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(*xc.shape[:2], h, hd)
+    y = ssd_chunked(xh, dt, a, bm, cm, cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(*xc.shape[:2], di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    return jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent)
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dt),
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, n, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, p, x, state):
+    """One-token step. x: (B, 1, d) -> (B, 1, d), new state."""
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    hd = cfg.ssm_headdim
+    bsz = x.shape[0]
+    z, xc, bm, cm, dt = _project_in(cfg, p, x)
+    u = jnp.concatenate([xc, bm, cm], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([state["conv"], u], axis=1)  # (B,d_conv,cdim)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)[:, None]
+    new_conv = window[:, 1:]
+
+    xc = conv_out[..., :di]
+    bm = conv_out[..., di : di + g * n].reshape(bsz, 1, g, n)
+    cm = conv_out[..., di + g * n :].reshape(bsz, 1, g, n)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(bsz, h, hd).astype(jnp.float32)
+    rep = h // g
+    bh = jnp.repeat(bm[:, 0].astype(jnp.float32), rep, axis=1)  # (B,H,N)
+    chh = jnp.repeat(cm[:, 0].astype(jnp.float32), rep, axis=1)
+
+    decay = jnp.exp(dtv * a)  # (B,H)
+    new_ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtv, bh, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", chh, new_ssm)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+# ---------------------------------------------------------------------------
+# Full model (embedding + stacked mamba blocks)
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg):
+    return {"ln": layers.norm_specs(cfg), "mixer": mamba_specs(cfg)}
+
+
+def param_specs(cfg):
+    return {
+        "embed": layers.embed_specs(cfg),
+        "layers": pspec.stack(_block_specs(cfg), cfg.n_layers),
+        "ln_f": layers.norm_specs(cfg),
+    }
+
+
+def forward(cfg, params, tokens, rt=None, *, window=None, last_only: bool = False):
+    x = layers.embed_tokens(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, lp):
+        x = carry
+        h = layers.apply_norm(cfg, lp["ln"], x)
+        x = x + mamba_forward(cfg, lp["mixer"], h)
+        return x, None
+
+    fn = body
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        fn = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.logits(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def init_decode_state(cfg, batch: int, max_len: int, *, window: int = 0):
+    one = init_mamba_state(cfg, batch)
+    cache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+    )
+    return {"cache": cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg, params, state, tokens, rt=None, *, window: int = 0):
+    x = layers.embed_tokens(cfg, params["embed"], tokens[:, None]).astype(
+        jnp.dtype(cfg.dtype)
+    )
+
+    def body(carry, scanned):
+        x = carry
+        lp, lstate = scanned
+        h = layers.apply_norm(cfg, lp["ln"], x)
+        h, new_state = mamba_decode(cfg, lp["mixer"], h, lstate)
+        return x + h, new_state
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    lg = layers.logits(cfg, params["embed"], x)[:, 0]
+    return lg, {"cache": new_cache, "pos": state["pos"] + 1}

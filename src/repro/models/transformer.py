@@ -1,0 +1,195 @@
+"""Dense decoder-only transformer (also hosts MoE-FFN and MLA variants).
+
+Families served: ``dense`` (llama/yi/qwen/granite), ``vlm`` (chameleon —
+early-fusion token stream, VQ image tokens live in the vocab), ``moe``
+(phi3.5-moe, deepseek-v2 with MLA).
+
+Layers are stacked and executed with ``jax.lax.scan`` so compile time and HLO
+size are O(1) in depth. ``remat=True`` wraps the layer body in
+``jax.checkpoint`` with a dots-saveable policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import pspec
+from repro.common.pspec import ParamSpec
+from repro.models import attention, layers, moe
+
+
+def _layer_specs(cfg) -> Dict[str, Any]:
+    sp: Dict[str, Any] = {"ln1": layers.norm_specs(cfg), "ln2": layers.norm_specs(cfg)}
+    if cfg.attn_kind == "mla":
+        sp["attn"] = attention.mla_specs(cfg)
+    else:
+        sp["attn"] = attention.gqa_specs(cfg)
+    if cfg.is_moe:
+        sp["moe"] = moe.moe_specs(cfg)
+    else:
+        sp["ffn"] = layers.ffn_specs(cfg)
+    return sp
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    return {
+        "embed": layers.embed_specs(cfg),
+        "layers": pspec.stack(_layer_specs(cfg), cfg.n_layers),
+        "ln_f": layers.norm_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg, p, x, rt, window: int):
+    h = layers.apply_norm(cfg, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        h = attention.mla_forward(cfg, p["attn"], h, window=window)
+    else:
+        h = attention.gqa_forward(cfg, p["attn"], h, window=window)
+    x = x + h
+    h = layers.apply_norm(cfg, p["ln2"], x)
+    if cfg.is_moe:
+        h, aux = moe.moe_forward(cfg, p["moe"], h, rt)
+    else:
+        h, aux = layers.apply_ffn(cfg, p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def forward(cfg, params, tokens, rt=None, *, window: Optional[int] = None,
+            last_only: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, padded_vocab), aux loss scalar.
+
+    ``last_only`` slices the final hidden state to the last position before
+    the unembedding — the prefill step must not materialize (B, S, V) logits.
+    """
+    w = cfg.sliding_window if window is None else window
+    x = layers.embed_tokens(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, lp):
+        x, aux = carry
+        if rt is not None:
+            x = rt.seq_shard(x, cfg)
+        x, a = _layer_fwd(cfg, lp, x, rt, w)
+        return (x, aux + a), None
+
+    fn = body
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        fn = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            (x, aux), _ = fn((x, aux), lp)
+    if last_only:
+        x = x[:, -1:]
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.logits(cfg, params["embed"], x), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int, *, window: int = 0):
+    """Stacked-over-layers KV cache + position counter."""
+    if cfg.attn_kind == "mla":
+        one = attention.init_mla_cache(cfg, batch, max_len)
+    elif cfg.kv_cache_dtype == "int8":
+        one = attention.init_kv_cache_int8(cfg, batch, max_len, window=window)
+    else:
+        one = attention.init_kv_cache(cfg, batch, max_len, window=window)
+    cache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+    )
+    return {"cache": cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_state_specs(cfg, batch: int, max_len: int, *, window: int = 0):
+    """ShapeDtypeStruct version (dry-run: no allocation)."""
+    tree = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len, window=window)
+    )
+    return tree
+
+
+def decode_step(cfg, params, state, tokens, rt=None, *, window: int = 0):
+    """One-token decode. tokens: (B,) int32. Returns (logits, new_state)."""
+    pos = state["pos"]
+    x = layers.embed_tokens(cfg, params["embed"], tokens[:, None]).astype(
+        jnp.dtype(cfg.dtype)
+    )
+
+    def body(carry, scanned):
+        x = carry
+        lp, lcache = scanned
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        if cfg.attn_kind == "mla":
+            h, newc = attention.mla_decode(cfg, lp["attn"], h, lcache, pos)
+        elif cfg.kv_cache_dtype == "int8":
+            h, newc = attention.gqa_decode_int8(cfg, lp["attn"], h, lcache, pos,
+                                                window=window)
+        else:
+            h, newc = attention.gqa_decode(cfg, lp["attn"], h, lcache, pos, window=window)
+        x = x + h
+        h = layers.apply_norm(cfg, lp["ln2"], x)
+        if cfg.is_moe:
+            h, _ = moe.moe_forward(cfg, lp["moe"], h, rt)
+        else:
+            h = layers.apply_ffn(cfg, lp["ffn"], h)
+        return x + h, newc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    lg = layers.logits(cfg, params["embed"], x)[:, 0]
+    return lg, {"cache": new_cache, "pos": pos + 1}
+
+
+def prefill(cfg, params, tokens, state, rt=None, *, window: int = 0):
+    """Batched prefill: one full forward that also fills the KV cache.
+
+    tokens: (B, S_prompt). Returns (last-position logits (B, V), state with
+    the cache's first S_prompt slots written and pos = S_prompt). This is the
+    real serving prefill (one pass, flash attention) — looping decode_step
+    over the prompt is O(S) passes.
+    """
+    if cfg.attn_kind == "mla" or cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError("prefill currently supports native GQA caches")
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = layers.embed_tokens(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def body(x, scanned):
+        lp, lcache = scanned
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = attention._project_qkv(cfg, lp["attn"], h, positions)
+        o = attention.flash_attention(
+            q, k, v, window=window, chunk_q=cfg.attn_chunk_q,
+            chunk_k=cfg.attn_chunk_k)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = layers.apply_norm(cfg, lp["ln2"], x)
+        if cfg.is_moe:
+            h, _ = moe.moe_forward(cfg, lp["moe"], h, None)
+        else:
+            h = layers.apply_ffn(cfg, lp["ffn"], h)
+        size = lcache["k"].shape[1]
+        newc = {
+            "k": jax.lax.dynamic_update_slice(
+                lcache["k"], k.astype(lcache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                lcache["v"], v.astype(lcache["v"].dtype), (0, 0, 0, 0)),
+        }
+        return x + h, newc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    x = layers.apply_norm(cfg, params["ln_f"], x[:, -1:])
+    lg = layers.logits(cfg, params["embed"], x)[:, 0]
+    return lg, {"cache": new_cache, "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adagrad, adam, make_optimizer  # noqa: F401

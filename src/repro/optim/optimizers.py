@@ -1,0 +1,91 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+* ``adagrad`` — what Fwumious Wabbit / VW actually run online (power-t
+  scheduling per the paper's hyperparameter search). State: accumulator.
+* ``adam``    — substrate default for the LLM architectures. State: (m, v).
+
+Optimizer state is ZeRO-1-sharded by the launcher: the dry-run assigns each
+state leaf a fully-sharded NamedSharding (see ``launch.sharding``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        step = step.astype(jnp.float32) + 1.0
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step)
+            vhat = v / (1 - b2 ** step)
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 0.1, power_t: float = 0.5, eps: float = 1e-10,
+            initial_acc: float = 0.0) -> Optimizer:
+    """FW/VW-style AdaGrad with power-t learning-rate scaling.
+
+    effective_lr = lr / acc**power_t   (power_t=0.5 is classic AdaGrad)
+    """
+
+    def init(params):
+        return {
+            "acc": jax.tree_util.tree_map(
+                lambda p: jnp.full(p.shape, initial_acc, jnp.float32), params
+            )
+        }
+
+    def update(grads, state, params, step):
+        def upd(g, a, p):
+            g = g.astype(jnp.float32)
+            a = a + g * g
+            scale = lr / jnp.power(a + eps, power_t)
+            return (p.astype(jnp.float32) - scale * g).astype(p.dtype), a
+
+        out = jax.tree_util.tree_map(upd, grads, state["acc"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_a = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"acc": new_a}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adam":
+        return adam(**kw)
+    if name == "adagrad":
+        return adagrad(**kw)
+    raise ValueError(name)

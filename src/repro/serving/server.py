@@ -1,0 +1,126 @@
+"""Serving layer: the paper's §3 serving service, both workloads.
+
+* ``FFMServer`` — the paper's path: receives weight updates through the
+  quantized-patch channel, serves candidate-scoring requests through the
+  context cache (§5), optionally routing the FFM hot loop through the Pallas
+  kernel; tracks latency/hit-rate stats.
+* ``LLMServer`` — the generalization to the assigned architectures: batched
+  prefill (one forward fills the KV cache) + greedy decode with optional
+  shared-prefix state reuse.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig, ModelConfig
+from repro.core import deepffm
+from repro.models import registry, transformer
+from repro.serving.context_cache import CachedServer
+from repro.train.steps import make_serve_step
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    candidates: int = 0
+    seconds: float = 0.0
+    updates_applied: int = 0
+    update_bytes: int = 0
+
+    @property
+    def predictions_per_s(self) -> float:
+        return self.candidates / max(self.seconds, 1e-9)
+
+
+class FFMServer:
+    """DeepFFM serving instance fed by the trainer's update channel."""
+
+    def __init__(self, cfg: FFMConfig, model: str = "deepffm",
+                 use_pallas_kernel: bool = False, cache_entries: int = 4096):
+        self.cfg, self.model = cfg, model
+        self.use_pallas_kernel = use_pallas_kernel
+        self.cache_entries = cache_entries
+        self._receiver = transfer.Receiver()
+        self._srv: Optional[CachedServer] = None
+        self.stats = ServeStats()
+
+    def apply_update(self, update: bytes, manifest, like_params) -> None:
+        """Ingest one trainer update (full file or patch) and swap weights."""
+        self._receiver.apply_update(update)
+        mode = transfer._unframe(update)[1]
+        params = self._receiver.materialize(mode, manifest, like=like_params)
+        self._srv = CachedServer(self.cfg, params, self.model,
+                                 max_entries=self.cache_entries)
+        self.stats.updates_applied += 1
+        self.stats.update_bytes += len(update)
+
+    def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
+        if self._srv is None:
+            raise RuntimeError("no weights yet — apply_update first")
+        t0 = time.perf_counter()
+        if self.use_pallas_kernel:
+            from repro.kernels.ffm_interaction import ops as ffm_ops
+
+            scores = deepffm.forward(
+                self.cfg, self._srv.params,
+                jnp.concatenate([jnp.broadcast_to(
+                    jnp.asarray(ctx_idx), (cand_idx.shape[0], self.cfg.context_fields)),
+                    jnp.asarray(cand_idx)], axis=1),
+                jnp.concatenate([jnp.broadcast_to(
+                    jnp.asarray(ctx_val), (cand_val.shape[0], self.cfg.context_fields)),
+                    jnp.asarray(cand_val)], axis=1),
+                self.model, interactions_fn=ffm_ops.interactions)
+        else:
+            scores = self._srv.serve(ctx_idx, ctx_val, cand_idx, cand_val)
+        out = np.asarray(jax.nn.sigmoid(scores))
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.requests += 1
+        self.stats.candidates += int(cand_idx.shape[0])
+        return out
+
+    @property
+    def cache_hit_rate(self) -> float:
+        if self._srv is None or (self._srv.hits + self._srv.misses) == 0:
+            return 0.0
+        return self._srv.hits / (self._srv.hits + self._srv.misses)
+
+
+class LLMServer:
+    """Batched prefill + greedy decode for the assigned architectures."""
+
+    def __init__(self, cfg: ModelConfig, params, *, window: int = 0):
+        self.cfg, self.params, self.window = cfg, params, window
+        self._serve = jax.jit(make_serve_step(cfg, window=window))
+        self.stats = ServeStats()
+
+    def generate(self, prompts: jnp.ndarray, gen_len: int) -> jnp.ndarray:
+        """prompts: (B, P) -> generated ids (B, gen_len) (greedy)."""
+        B, P = prompts.shape
+        state = registry.init_decode_state(
+            self.cfg, B, P + gen_len + 1, window=self.window)
+        t0 = time.perf_counter()
+        if (self.cfg.family in ("dense", "vlm") and self.cfg.attn_kind == "gqa"
+                and self.cfg.kv_cache_dtype == "native"):
+            logits, state = transformer.prefill(
+                self.cfg, self.params, prompts, state, window=self.window)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:  # families without batched prefill: stepwise warm-up
+            tok = prompts[:, 0]
+            for i in range(P):
+                tok, state = self._serve(self.params, state, prompts[:, i])
+        outs = []
+        for _ in range(gen_len):
+            outs.append(tok)
+            tok, state = self._serve(self.params, state, tok)
+        gen = jnp.stack(outs, 1)
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.requests += B
+        self.stats.candidates += B * gen_len
+        return gen

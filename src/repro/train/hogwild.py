@@ -1,0 +1,170 @@
+"""Hogwild-based training (paper §4.2), two renditions.
+
+1. ``HogwildTrainer`` — the faithful CPU mechanism: N threads share mutable
+   numpy weight buffers; each thread computes gradients through a jitted JAX
+   function against a lock-free snapshot and applies AdaGrad updates in place
+   without synchronization ("weight overlaps/overrides are allowed as the
+   trade-off for multi-threaded updates").
+
+2. ``local_sgd_round`` — the TPU-native analogue: devices have no shared
+   mutable memory, so the staleness Hogwild tolerates is expressed as
+   **asynchronous local SGD**: W workers each take k unsynchronized steps
+   from the same starting point on different data, then merge by averaging.
+   One Hogwild "round" == one merge. This is what ships in the distributed
+   launcher (workers = the data axis).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+
+
+# ---------------------------------------------------------------------------
+# 1. Faithful CPU Hogwild (threads + shared numpy buffers)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HogwildStats:
+    examples: int = 0
+    seconds: float = 0.0
+    losses: List[float] = field(default_factory=list)
+
+    @property
+    def examples_per_s(self) -> float:
+        return self.examples / max(self.seconds, 1e-9)
+
+
+class HogwildTrainer:
+    def __init__(self, cfg: FFMConfig, model: str = "deepffm", lr: float = 0.05,
+                 power_t: float = 0.5, seed: int = 0):
+        self.cfg, self.model, self.lr, self.power_t = cfg, model, lr, power_t
+        params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), model)
+        # shared, mutable, lock-free buffers
+        self.buffers: Dict[str, np.ndarray] = {
+            k: np.array(v, np.float32) for k, v in _flatten(params).items()
+        }
+        self.acc: Dict[str, np.ndarray] = {
+            k: np.zeros(v.shape, np.float32) for k, v in self.buffers.items()
+        }
+        self._tree = params
+
+        def lossf(p, batch):
+            return deepffm.loss_fn(cfg, p, batch, model)
+
+        self._vg = jax.jit(jax.value_and_grad(lossf))
+
+    def _snapshot(self):
+        flat = {k: jnp.asarray(v) for k, v in self.buffers.items()}
+        return _unflatten(flat, self._tree)
+
+    def _apply(self, grads) -> None:
+        """AdaGrad update, in place, no locks — the Hogwild step."""
+        for k, g in _flatten(grads).items():
+            g = np.asarray(g, np.float32)
+            self.acc[k] += g * g  # racy read-modify-write, by design
+            self.buffers[k] -= self.lr * g / np.power(self.acc[k] + 1e-10, self.power_t)
+
+    def train(self, batches: Iterable[Dict[str, Any]], n_threads: int = 4) -> HogwildStats:
+        stats = HogwildStats()
+        q: "queue.Queue" = queue.Queue(maxsize=2 * n_threads)
+        lock = threading.Lock()  # only guards the *stats*, never the weights
+
+        def worker():
+            while True:
+                b = q.get()
+                if b is None:
+                    return
+                loss, grads = self._vg(self._snapshot(), b)
+                self._apply(grads)
+                with lock:
+                    stats.examples += int(b["label"].shape[0])
+                    stats.losses.append(float(loss))
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for b in batches:
+            q.put(b)
+        for _ in threads:
+            q.put(None)
+        for t in threads:
+            t.join()
+        stats.seconds = time.perf_counter() - t0
+        return stats
+
+    def params(self):
+        return self._snapshot()
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], like):
+    paths = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for path, _ in paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        vals.append(flat[key])
+    return jax.tree_util.tree_unflatten(paths[1], vals)
+
+
+# ---------------------------------------------------------------------------
+# 2. TPU analogue: asynchronous local SGD (one merge = one Hogwild round)
+# ---------------------------------------------------------------------------
+
+def make_local_sgd_round(cfg: FFMConfig, model: str, lr: float = 0.05,
+                         power_t: float = 0.5):
+    """Returns round_fn(params, acc, batches) -> (params, acc, mean_loss).
+
+    batches: pytree with leading (W workers, k local steps, batch...) dims.
+    Workers run k AdaGrad steps independently (vmap = devices), then merge.
+    """
+
+    def lossf(p, batch):
+        return deepffm.loss_fn(cfg, p, batch, model)
+
+    vg = jax.value_and_grad(lossf)
+
+    def local_steps(params, acc, worker_batches):
+        def step(carry, batch):
+            p, a = carry
+            loss, g = vg(p, batch)
+
+            def upd(pl, al, gl):
+                al = al + gl * gl
+                return pl - lr * gl / jnp.power(al + 1e-10, power_t), al
+
+            out = jax.tree_util.tree_map(upd, p, a, g)
+            p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+            a = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+            return (p, a), loss
+
+        (p, a), losses = jax.lax.scan(step, (params, acc), worker_batches)
+        return p, a, jnp.mean(losses)
+
+    @jax.jit
+    def round_fn(params, acc, batches):
+        ps, accs, losses = jax.vmap(lambda b: local_steps(params, acc, b))(batches)
+        merged_p = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0), ps)
+        merged_a = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0), accs)
+        return merged_p, merged_a, jnp.mean(losses)
+
+    return round_fn

@@ -1,0 +1,46 @@
+"""Generic train / serve step builders over the architecture registry."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.optim import make_optimizer
+
+
+def make_train_step(cfg, optimizer, rt=None, *, window: Optional[int] = None):
+    """Returns train_step(params, opt_state, step, batch) -> (params', opt', step', metrics)."""
+
+    def train_step(params, opt_state, step, batch):
+        def lossf(p):
+            return registry.loss_fn(cfg, p, batch, rt, window=window)
+
+        (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        out = {"loss": loss, **metrics}
+        return new_params, new_opt, step + 1, out
+
+    return train_step
+
+
+def make_prefill_step(cfg, rt=None, *, window: Optional[int] = None):
+    """Inference prefill: full forward, last-position logits (+ aux dropped)."""
+
+    def prefill_step(params, batch):
+        logits, _ = registry.forward(cfg, params, batch, rt, window=window, last_only=True)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, rt=None, *, window: int = 0):
+    """One-token greedy decode step."""
+
+    def serve_step(params, state, tokens):
+        logits, new_state = registry.decode_step(cfg, params, state, tokens, rt, window=window)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    return serve_step

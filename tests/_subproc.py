@@ -1,0 +1,23 @@
+"""Run a snippet in a subprocess with a forced host device count."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+        )
+    return proc.stdout

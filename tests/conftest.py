@@ -1,0 +1,10 @@
+# Intentionally does NOT set --xla_force_host_platform_device_count: smoke
+# tests and benches must see the real single device. Multi-device integration
+# tests spawn subprocesses (see tests/_subproc.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

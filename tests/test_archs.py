@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED variant of the same family
+(2 layers, d_model <= 512, <= 4 experts) and runs one forward + one train
+step on CPU, asserting output shapes and the absence of NaNs. Decode-match
+tests prove the serving path (KV caches, SSM states, MLA absorbed decode)
+agrees with the full forward.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import registry
+from repro.optim import make_optimizer
+from repro.train.steps import make_serve_step, make_train_step
+
+ARCHS = registry.ARCH_IDS
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    assert cfg.n_layers <= 8 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(cfg, key)
+    B, S = 2, 16
+    logits, aux = registry.forward(cfg, params, _batch(cfg, key, B, S))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = registry.init_params(cfg, key)
+    opt = make_optimizer("adam", lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    state = opt.init(params)
+    batch = _batch(cfg, key)
+    step = jnp.zeros((), jnp.int32)
+    losses = []
+    for _ in range(3):
+        params, state, step, m = step_fn(params, state, step, batch)
+        losses.append(float(m["loss"]))
+    assert all(not jnp.isnan(l) for l in jnp.asarray(losses))
+    assert losses[-1] < losses[0], f"{arch}: loss did not decrease: {losses}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = registry.init_params(cfg, key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    kw = {}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+        kw["src_len"] = S
+    full, _ = registry.forward(cfg, params, batch)
+
+    state = registry.init_decode_state(cfg, B, S, **kw)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        state = encdec.prefill_cross(cfg, params, state, batch["frames"])
+    outs = []
+    for i in range(S):
+        lg, state = registry.decode_step(cfg, params, state, toks[:, i])
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 5e-3, f"{arch}: decode/forward mismatch rel={rel}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-7b"])
+def test_windowed_decode_ring_buffer(arch):
+    """With window >= S the ring buffer must agree with the full cache."""
+    cfg = registry.get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(3)
+    params = registry.init_params(cfg, key)
+    B, S, W = 2, 10, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    full_state = registry.init_decode_state(cfg, B, S)
+    ring_state = registry.init_decode_state(cfg, B, S + W, window=W)
+    for i in range(S):
+        lf, full_state = registry.decode_step(cfg, params, full_state, toks[:, i])
+        lr_, ring_state = registry.decode_step(
+            cfg, params, ring_state, toks[:, i], window=W
+        )
+        rel = float(jnp.max(jnp.abs(lf - lr_))) / (float(jnp.max(jnp.abs(lf))) + 1e-9)
+        assert rel < 5e-3, f"{arch} step {i}: ring/full mismatch {rel}"
+
+
+def test_serve_step_greedy():
+    cfg = registry.get_config("llama3.2-1b", smoke=True)
+    key = jax.random.PRNGKey(4)
+    params = registry.init_params(cfg, key)
+    serve = jax.jit(make_serve_step(cfg))
+    state = registry.init_decode_state(cfg, 2, 8)
+    tok = jnp.zeros((2,), jnp.int32)
+    for _ in range(4):
+        tok, state = serve(params, state, tok)
+    assert tok.shape == (2,)
+    assert int(state["pos"]) == 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_specs(arch):
+    """The analytic count (roofline MODEL_FLOPS) must match the spec tree."""
+    from repro.common import pspec
+
+    cfg = registry.get_config(arch)
+    analytic = cfg.param_count()
+    true = pspec.count(registry.param_specs(cfg))
+    assert abs(analytic - true) / true < 0.02, (arch, analytic, true)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen2.5-3b"])
+def test_int8_kv_cache_decode(arch):
+    """Quantized KV cache (paper §6 applied to serving): small bounded error."""
+    cfg = registry.get_config(arch, smoke=True).replace(kv_cache_dtype="int8")
+    key = jax.random.PRNGKey(5)
+    params = registry.init_params(cfg, key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = registry.forward(cfg, params, {"tokens": toks})
+    state = registry.init_decode_state(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, state = registry.decode_step(cfg, params, state, toks[:, i])
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 0.05, f"{arch}: int8-cache decode error {rel}"
+    assert state["cache"]["k"].dtype == jnp.int8

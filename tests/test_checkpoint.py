@@ -1,0 +1,98 @@
+"""Checkpoint layout determinism + the quant/patch transfer channel (§6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import layout, store, transfer
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+
+CFG = FFMConfig(n_fields=8, context_fields=4, hash_space=2**12, k=4,
+                mlp_hidden=(16,))
+
+
+def _params(seed=0):
+    return deepffm.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def test_layout_roundtrip_and_determinism():
+    p = _params()
+    buf1, man1 = layout.to_bytes(p)
+    buf2, man2 = layout.to_bytes(p)
+    assert buf1 == buf2 and man1 == man2  # byte-stable across serializations
+    back = layout.from_bytes(buf1, man1, like=p)
+    for (path1, a), (path2, b) in zip(
+        layout.flatten_with_paths(p), layout.flatten_with_paths(back)
+    ):
+        assert path1 == path2
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_handles_bfloat16():
+    p = {"w": jnp.ones((8, 8), jnp.bfloat16) * 1.5}
+    buf, man = layout.to_bytes(p)
+    back = layout.from_bytes(buf, man, like=p)
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32),
+                                  np.asarray(p["w"], np.float32))
+
+
+def test_store_separates_optimizer_state(tmp_path):
+    p = _params()
+    opt_state = {"m": jax.tree_util.tree_map(jnp.zeros_like, p)}
+    store.save(str(tmp_path / "ckpt"), p, opt_state)
+    # weights file alone must be loadable (serving never fetches optimizer)
+    import os
+
+    assert os.path.exists(tmp_path / "ckpt" / "weights.bin")
+    assert os.path.exists(tmp_path / "ckpt" / "optimizer.bin")
+    loaded, oload = store.load(str(tmp_path / "ckpt"), like_params=p, like_opt=opt_state)
+    np.testing.assert_array_equal(
+        np.asarray(loaded["ffm"]["emb"]), np.asarray(p["ffm"]["emb"]))
+    assert oload is not None
+
+
+def _drift(params, scale=1e-4, frac=0.01, seed=1):
+    """Small online-training-style update: a few weights move slightly."""
+    rng = np.random.default_rng(seed)
+
+    def upd(x):
+        a = np.array(x, np.float32)
+        mask = rng.random(a.shape) < frac
+        a = a + mask * rng.normal(0, scale, a.shape).astype(np.float32)
+        return jnp.asarray(a)
+
+    return jax.tree_util.tree_map(upd, params)
+
+
+@pytest.mark.parametrize("mode", transfer.MODES)
+def test_transfer_roundtrip(mode):
+    p0 = _params()
+    p1 = _drift(p0)
+    snd = transfer.Sender(mode=mode)
+    rcv = transfer.Receiver()
+    rcv.apply_update(snd.make_update(p0))
+    rcv.apply_update(snd.make_update(p1))
+    got = rcv.materialize(mode, snd.manifest, like=p1)
+    for (_, a), (_, b) in zip(layout.flatten_with_paths(p1),
+                              layout.flatten_with_paths(got)):
+        if "quant" in mode:
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=5e-4)
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_transfer_size_ordering_matches_table4():
+    """raw (100%) > quant (~50%) > patch > patch+quant (paper Table 4)."""
+    p0 = _params()
+    p1 = _drift(p0)
+    sizes = {}
+    for mode in transfer.MODES:
+        snd = transfer.Sender(mode=mode)
+        snd.make_update(p0)  # first full file
+        sizes[mode] = len(snd.make_update(p1))  # the online update
+    assert sizes["quant"] < sizes["raw"] * 0.55
+    assert sizes["patch"] < sizes["raw"]
+    assert sizes["patch+quant"] < sizes["patch"]
+    assert sizes["patch+quant"] < sizes["raw"] * 0.15  # compounding

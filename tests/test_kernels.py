@@ -1,0 +1,119 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ffm_interaction.ffm_interaction import ffm_interaction_matrix
+from repro.kernels.ffm_interaction.ref import ffm_interaction_matrix_ref
+from repro.kernels.quantize import ops as qops
+from repro.kernels.quantize.quantize import dequantize_pallas, minmax, quantize_pallas
+from repro.kernels.quantize.ref import dequantize_ref, minmax_ref, quantize_ref
+from repro.kernels.sparse_mlp.ops import sparse_weight_grad
+from repro.kernels.sparse_mlp.ref import sparse_weight_grad_ref
+from repro.core import quantization as Q
+
+
+@pytest.mark.parametrize("B,F,K", [(4, 4, 2), (32, 24, 8), (100, 24, 8),
+                                   (7, 10, 16), (1, 6, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ffm_interaction_sweep(B, F, K, dtype):
+    key = jax.random.PRNGKey(B * F + K)
+    e = jax.random.normal(key, (B, F, F, K), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, F), jnp.float32).astype(dtype)
+    got = ffm_interaction_matrix(e, v, block_b=16)
+    want = ffm_interaction_matrix_ref(e, v)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("n", [17, 128, 1000, 8192, 100_001])
+def test_quantize_kernel_sweep(n):
+    key = jax.random.PRNGKey(n)
+    w = jax.random.normal(key, (n,), jnp.float32) * 0.3
+    mn, mx = minmax(w)
+    mn_r, mx_r = minmax_ref(w)
+    assert float(mn) == pytest.approx(float(mn_r))
+    assert float(mx) == pytest.approx(float(mx_r))
+    bucket = jnp.float32((float(mx) - float(mn)) / 65536 + 1e-12)
+    q = quantize_pallas(w, mn, bucket)
+    q_ref = quantize_ref(w, mn, bucket)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    wd = dequantize_pallas(q, mn, bucket)
+    wd_ref = dequantize_ref(q_ref, mn, bucket)
+    np.testing.assert_allclose(np.asarray(wd), np.asarray(wd_ref), rtol=1e-6,
+                               atol=1e-6)  # fma vs mul+add near zero
+
+
+def test_quantize_ops_bit_exact_with_core():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (10_000,), jnp.float32) * 0.2
+    qk, mk = qops.quantize(w)
+    qc, mc, _ = Q.quantize(w)
+    assert mk == mc
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qc).astype(np.int32))
+
+
+@pytest.mark.parametrize("B,I,J", [(16, 8, 8), (64, 32, 48), (200, 130, 260),
+                                   (128, 128, 128), (33, 257, 65)])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 1.0])
+def test_sparse_weight_grad_sweep(B, I, J, sparsity):
+    key = jax.random.PRNGKey(B + I + J)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, I))
+    g = jax.random.normal(ks[1], (B, J))
+    mask = jax.random.bernoulli(ks[2], 1.0 - sparsity, (B, J))
+    gm = g * mask
+    got = sparse_weight_grad(x, gm, block=64)
+    want = sparse_weight_grad_ref(x, gm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_weight_grad_skips_zero_columns():
+    """All-zero gradient => all-zero dW regardless of x (the skip is safe)."""
+    x = jnp.ones((64, 32))
+    gm = jnp.zeros((64, 128))
+    got = sparse_weight_grad(x, gm)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash-attention kernel (beyond-paper optimization)
+# ---------------------------------------------------------------------------
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("S,H,Kv,D,causal,window", [
+    (64, 4, 4, 16, True, 0), (100, 8, 2, 32, True, 0),
+    (128, 4, 4, 16, True, 48), (96, 4, 2, 64, False, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_sweep(S, H, Kv, D, causal, window, dtype):
+    key = jax.random.PRNGKey(S + H)
+    ks = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, D), jnp.float32).astype(dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_kernel_matches_model_flash():
+    """The kernel agrees with the model-stack jnp flash implementation."""
+    from repro.models.attention import flash_attention as jnp_flash
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 80, 8, 32))
+    k = jax.random.normal(ks[1], (2, 80, 4, 32))
+    v = jax.random.normal(ks[2], (2, 80, 4, 32))
+    a = flash_attention_pallas(q, k, v, block_q=32, block_k=16)
+    b = jnp_flash(q, k, v, chunk_q=32, chunk_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,66 @@
+"""Property tests for the byte-level patcher (paper §6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patcher
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2**63 - 1), max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_varint_roundtrip(values):
+    v = np.asarray(values, np.uint64)
+    assert (patcher.varint_decode(patcher.varint_encode(v)) == v).all()
+
+
+@given(
+    st.binary(min_size=1, max_size=4096),
+    st.lists(st.tuples(st.integers(0, 4095), st.integers(0, 255)), max_size=64),
+)
+@settings(max_examples=200, deadline=None)
+def test_patch_roundtrip(old, edits):
+    new = bytearray(old)
+    for pos, val in edits:
+        if pos < len(new):
+            new[pos] = val
+    new = bytes(new)
+    p = patcher.diff(old, new)
+    assert patcher.apply_patch(old, p) == new
+
+
+def test_patch_identical_is_tiny():
+    buf = np.random.default_rng(0).integers(0, 256, 1_000_000, np.uint8).tobytes()
+    p = patcher.diff(buf, buf)
+    assert len(p) < 100
+    assert patcher.apply_patch(buf, p) == buf
+
+
+def test_patch_size_scales_with_changes():
+    rng = np.random.default_rng(1)
+    old = rng.integers(0, 256, 1_000_000, np.uint8)
+    sizes = []
+    for n_changes in (10, 1000, 100_000):
+        new = old.copy()
+        pos = rng.choice(old.size, n_changes, replace=False)
+        new[pos] = ((new[pos].astype(np.int16) + 1) % 256).astype(np.uint8)
+        sizes.append(len(patcher.diff(old.tobytes(), new.tobytes())))
+    assert sizes[0] < sizes[1] < sizes[2]
+    assert sizes[2] < old.size  # still smaller than shipping the file
+
+
+def test_patch_rejects_size_mismatch():
+    with pytest.raises(ValueError):
+        patcher.diff(b"abc", b"abcd")
+
+
+def test_patch_relative_offsets_beat_absolute():
+    """The paper's point: relative offsets + varints compress dense changes."""
+    rng = np.random.default_rng(2)
+    old = rng.integers(0, 256, 2_000_000, np.uint8)
+    new = old.copy()
+    # clustered changes late in the buffer (large absolute indices, small gaps)
+    pos = 1_900_000 + np.arange(0, 50_000, 5)
+    new[pos] = ((new[pos].astype(np.int16) + 1) % 256).astype(np.uint8)
+    p = patcher.diff(old.tobytes(), new.tobytes())
+    naive = pos.size * (8 + 1)  # absolute u64 index + byte
+    assert len(p) < naive

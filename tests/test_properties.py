@@ -1,0 +1,81 @@
+"""Extra property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.launch import hlo_analysis
+from repro.serving.context_cache import CachedServer
+
+
+@given(
+    n_fields=st.integers(4, 16),
+    ctx_frac=st.floats(0.2, 0.8),
+    k=st.sampled_from([2, 4, 8]),
+    n_cand=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_context_cache_equivalence_any_config(n_fields, ctx_frac, k, n_cand, seed):
+    """Cached context/candidate decomposition == full forward, any field split."""
+    fc = max(1, min(n_fields - 1, int(n_fields * ctx_frac)))
+    cfg = FFMConfig(n_fields=n_fields, context_fields=fc, hash_space=2**10, k=k,
+                    mlp_hidden=(8,))
+    rng = np.random.default_rng(seed)
+    params = deepffm.init_params(cfg, jax.random.PRNGKey(seed % 97))
+    params["lr"]["w"] = jnp.asarray(rng.normal(0, 0.1, cfg.hash_space), jnp.float32)
+    srv = CachedServer(cfg, params)
+    ci = rng.integers(0, cfg.hash_space, fc).astype(np.int32)
+    cv = rng.normal(1, 0.2, fc).astype(np.float32)
+    ki = rng.integers(0, cfg.hash_space, (n_cand, n_fields - fc)).astype(np.int32)
+    kv = rng.normal(1, 0.2, (n_cand, n_fields - fc)).astype(np.float32)
+    a = np.asarray(srv.serve(ci, cv, ki, kv))
+    b = np.asarray(srv.serve_uncached(ci, cv, ki, kv))
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+@given(trips=st.integers(1, 6), inner=st.integers(1, 5),
+       m=st.sampled_from([8, 16, 32]))
+@settings(max_examples=15, deadline=None)
+def test_hlo_analyzer_nested_scan_flops(trips, inner, m):
+    """Nested scan trip counts multiply through the analyzer's call walk."""
+    def g(x, ws):
+        def outer(x, w):
+            def inner_body(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner_body, x, None, length=inner)
+            return x, None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    c = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((trips, m, m), jnp.float32),
+    ).compile()
+    r = hlo_analysis.analyze(c.as_text())
+    want = trips * inner * 2 * m * m * m
+    assert r["flops_per_device"] == pytest.approx(want, rel=0.05), (
+        r["flops_per_device"], want)
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_quantization_hysteresis_keeps_grid(n_big, n_small, seed):
+    """Sub-threshold outliers never regrid; codes for unchanged weights stay."""
+    from repro.core import quantization as Q
+
+    rng = np.random.default_rng(seed)
+    w0 = rng.normal(0, 0.1, 100_000).astype(np.float32)
+    q0, m0, _ = Q.quantize(jnp.asarray(w0))
+    w1 = w0.copy()
+    idx = rng.choice(w1.size, n_big, replace=False)
+    w1[idx] += 10.0  # way outside the grid -> outliers
+    q1, m1, out = Q.quantize(jnp.asarray(w1), prev=m0)
+    assert (m1.w_min, m1.bucket_size) == (m0.w_min, m0.bucket_size)
+    assert m1.n_outliers == n_big
+    wd = np.asarray(Q.dequantize(q1.copy(), m1, out))
+    np.testing.assert_allclose(wd[idx], w1[idx], atol=1e-6)  # outliers exact
+    untouched = np.setdiff1d(np.arange(w1.size), idx)[:1000]
+    assert (np.asarray(q1)[untouched] == np.asarray(q0)[untouched]).all()

@@ -1,0 +1,64 @@
+"""Property tests for the dynamic-range 16-bit quantizer (paper §6)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+
+@given(
+    st.lists(st.floats(min_value=-100, max_value=100, allow_nan=False,
+                       width=32), min_size=1, max_size=500),
+    st.integers(1, 4),
+    st.integers(1, 4),
+)
+@settings(max_examples=150, deadline=None)
+def test_error_within_half_bucket(values, alpha, beta):
+    w = jnp.asarray(np.asarray(values, np.float32))
+    q, meta, _ = Q.quantize(w, alpha=alpha, beta=beta)
+    wd = np.asarray(Q.dequantize(q, meta))
+    err = np.abs(wd - np.asarray(values, np.float32)).max()
+    # half a bucket + float32 arithmetic slack
+    bound = Q.max_error(meta) + 1e-5 * max(1.0, np.abs(values).max())
+    assert err <= bound, (err, bound, meta)
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False, width=32), min_size=1,
+                max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_bytes_roundtrip(values):
+    w = jnp.asarray(np.asarray(values, np.float32))
+    buf = Q.quantize_to_bytes(w)
+    q, meta, _ = Q.from_bytes(buf)
+    assert meta.n == len(values)
+    wd1 = Q.dequantize_from_bytes(buf)
+    wd2 = np.asarray(Q.dequantize(jnp.asarray(q.copy()), meta))
+    np.testing.assert_array_equal(wd1, wd2)
+
+
+def test_constant_weights_degenerate_range():
+    w = jnp.full((100,), 0.5, jnp.float32)
+    q, meta, _ = Q.quantize(w)
+    wd = np.asarray(Q.dequantize(q, meta))
+    assert np.abs(wd - 0.5).max() < 1e-2
+
+
+def test_half_size_payload():
+    """fp32 -> u16: the paper's ~50% update-size row (Table 4)."""
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 1, 100_000), jnp.float32)
+    buf = Q.quantize_to_bytes(w)
+    assert len(buf) <= w.size * 2 + Q.HEADER_SIZE
+
+
+def test_bound_rounding_stabilizes_grid():
+    """Rounded bounds (paper's alpha/beta trick): small weight drift must not
+    move the bucket grid, so most codes stay identical across updates."""
+    rng = np.random.default_rng(0)
+    w0 = rng.normal(0, 0.1, 50_000).astype(np.float32)
+    w1 = w0 + rng.normal(0, 1e-6, w0.size).astype(np.float32)  # tiny drift
+    q0, m0, _ = Q.quantize(jnp.asarray(w0))
+    q1, m1, _ = Q.quantize(jnp.asarray(w1))
+    assert m0.w_min == m1.w_min and m0.bucket_size == m1.bucket_size
+    frac_same = float((np.asarray(q0) == np.asarray(q1)).mean())
+    assert frac_same > 0.90  # the compounding that makes patch+quant tiny
