@@ -1,0 +1,92 @@
+"""Unified serving engine: cached+Pallas vs cached-reference vs uncached.
+
+A request stream with realistic context repetition through one
+:class:`InferenceEngine` per configuration; reports predictions/s and
+p50/p95/p99 request latency, and writes ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._util import row
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.data.synthetic import CTRStream
+from repro.serving.engine import InferenceEngine, ServeStats
+
+CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
+                mlp_hidden=(64, 32))
+
+
+def _drive(engine: InferenceEngine, reqs, *, uncached: bool = False) -> dict:
+    serve = engine.score_uncached if uncached else engine.score
+    np.asarray(serve(*reqs[0]))  # warmup/compile
+    engine.stats = ServeStats()  # drop the compile latency from percentiles
+    t0 = time.perf_counter()
+    candidates = 0
+    for r in reqs:
+        if uncached:
+            # score_uncached bypasses the engine's stats; time it here
+            t1 = time.perf_counter()
+            np.asarray(jax.block_until_ready(serve(*r)))
+            engine.stats.record(time.perf_counter() - t1, r[2].shape[0])
+        else:
+            np.asarray(serve(*r))
+        candidates += r[2].shape[0]
+    dt = time.perf_counter() - t0
+    return {
+        "seconds": dt,
+        "predictions_per_s": candidates / max(dt, 1e-12),
+        "per_request_us": dt / len(reqs) * 1e6,
+        "p50_ms": engine.stats.p50_ms,
+        "p95_ms": engine.stats.p95_ms,
+        "p99_ms": engine.stats.p99_ms,
+        "cache_hit_rate": engine.cache_hit_rate,
+    }
+
+
+def run(quick: bool = False):
+    rows = []
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    stream = CTRStream(CFG, seed=0)
+    n_requests = 30 if quick else 100
+    n_candidates = 32
+
+    # request pool with repeated contexts (real traffic shape)
+    pool = [stream.request(n_candidates) for _ in range(8)]
+    reqs = [pool[i % len(pool)] for i in range(n_requests)]
+
+    results = {}
+    results["uncached"] = _drive(
+        InferenceEngine(CFG, params=params), reqs, uncached=True)
+    results["cached_reference"] = _drive(
+        InferenceEngine(CFG, params=params, backend="reference"), reqs)
+    results["cached_pallas"] = _drive(
+        InferenceEngine(CFG, params=params, backend="pallas"), reqs)
+
+    base = results["uncached"]["predictions_per_s"]
+    for name, r in results.items():
+        speedup = r["predictions_per_s"] / max(base, 1e-12)
+        derived = (f"preds/s={r['predictions_per_s']:.0f} "
+                   f"speedup={speedup:.2f}x "
+                   f"p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms "
+                   f"hit_rate={r['cache_hit_rate']:.2f}")
+        rows.append(row(f"serving_engine/{name}", r["per_request_us"], derived))
+
+    with open("BENCH_serving.json", "w") as f:
+        json.dump({"config": {"n_fields": CFG.n_fields,
+                              "context_fields": CFG.context_fields,
+                              "k": CFG.k, "hash_space": CFG.hash_space},
+                   "n_requests": n_requests, "n_candidates": n_candidates,
+                   "results": results}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

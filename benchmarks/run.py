@@ -13,6 +13,7 @@ BENCHES = (
     ("table3_sparse_updates", "benchmarks.bench_sparse_updates"),
     ("table4_quantization", "benchmarks.bench_quantization"),
     ("fig4_context_cache", "benchmarks.bench_context_cache"),
+    ("serving_engine", "benchmarks.bench_serving_engine"),
     ("fig5_simd", "benchmarks.bench_simd"),
     ("fig6_patcher", "benchmarks.bench_patcher"),
     ("sec4.1_prefetch", "benchmarks.bench_prefetch"),

@@ -30,18 +30,43 @@ from repro.core import patcher, quantization as Q
 
 MODES = ("raw", "quant", "patch", "patch+quant")
 
-_KIND_FULL, _KIND_PATCH = 0, 1
+KIND_FULL, KIND_PATCH = 0, 1
 
 
-def _frame(kind: int, mode: str, body: bytes) -> bytes:
+@dataclass(frozen=True)
+class UpdateFrame:
+    """Decoded update header — the public view of one trainer->server blob.
+
+    ``version`` is the trainer's monotonic round stamp (``Sender.make_update``
+    auto-increments it; ``train.loop`` stamps its round counter), letting the
+    serving layer tag cache generations without re-deriving state from bytes.
+    """
+
+    kind: int        # KIND_FULL | KIND_PATCH
+    mode: str        # one of MODES
+    version: int     # trainer round stamp, monotonically increasing
+    payload: bytes   # framed sidecar + diffable body
+
+    @property
+    def is_patch(self) -> bool:
+        return self.kind == KIND_PATCH
+
+
+_FRAME_MAGIC = 0xFB  # guards against version-skewed / foreign blobs
+
+
+def _frame(kind: int, mode: str, body: bytes, version: int = 0) -> bytes:
     m = mode.encode()
-    return struct.pack("<BB", kind, len(m)) + m + body
+    return struct.pack("<BBBI", _FRAME_MAGIC, kind, len(m), version) + m + body
 
 
-def _unframe(update: bytes) -> Tuple[int, str, bytes]:
-    kind, mlen = struct.unpack_from("<BB", update, 0)
-    mode = update[2 : 2 + mlen].decode()
-    return kind, mode, update[2 + mlen :]
+def unframe(update: bytes) -> UpdateFrame:
+    """Decode an update blob's header (public API — serving must not parse bytes)."""
+    magic, kind, mlen, version = struct.unpack_from("<BBBI", update, 0)
+    if magic != _FRAME_MAGIC:
+        raise ValueError("not a transfer update frame (bad magic byte)")
+    mode = update[7 : 7 + mlen].decode()
+    return UpdateFrame(kind, mode, version, update[7 + mlen :])
 
 
 @dataclass
@@ -51,6 +76,7 @@ class Sender:
     mode: str = "patch+quant"
     alpha: int = 2
     beta: int = 2
+    version: int = 0
     _last: Optional[bytes] = None
     _last_meta: Optional[Q.QuantMeta] = None
     manifest: Any = None
@@ -81,16 +107,19 @@ class Sender:
             return fixed, sidecar
         return b"".join(np.asarray(a).tobytes() for _, a in flat), b""
 
-    def make_update(self, params) -> bytes:
+    def make_update(self, params, version: Optional[int] = None) -> bytes:
+        """Emit one versioned update blob. ``version`` (the trainer's round
+        stamp) defaults to auto-increment; explicit stamps must be monotonic."""
         cur, sidecar = self._serialize(params)
         if "patch" in self.mode and self._last is not None and len(self._last) == len(cur):
-            body, kind = patcher.diff(self._last, cur), _KIND_PATCH
+            body, kind = patcher.diff(self._last, cur), KIND_PATCH
         else:
             # first round (or layout change) ships the full file
-            body, kind = cur, _KIND_FULL
+            body, kind = cur, KIND_FULL
         self._last = cur
+        self.version = self.version + 1 if version is None else version
         framed_side = struct.pack("<Q", len(sidecar)) + sidecar
-        return _frame(kind, self.mode, framed_side + body)
+        return _frame(kind, self.mode, framed_side + body, version=self.version)
 
 
 @dataclass
@@ -101,21 +130,31 @@ class Receiver:
 
     _sidecar: Optional[bytes] = None
 
+    version: int = 0  # stamp of the last applied update
+    mode: Optional[str] = None
+
     def apply_update(self, update: bytes) -> bytes:
-        kind, mode, payload = _unframe(update)
+        frame = unframe(update)
+        payload = frame.payload
         (side_len,) = struct.unpack_from("<Q", payload, 0)
         self._sidecar = payload[8 : 8 + side_len]
         body = payload[8 + side_len :]
-        if kind == _KIND_PATCH:
+        if frame.is_patch:
             if self._current is None:
                 raise ValueError("patch received before any full weight file")
             self._current = patcher.apply_patch(self._current, body)
         else:
             self._current = body
+        self.version, self.mode = frame.version, frame.mode
         return self._current
 
-    def materialize(self, mode: str, manifest, like=None):
-        """Decode current bytes back into a params pytree (dequantizing if needed)."""
+    def materialize(self, mode: Optional[str] = None, manifest=None, like=None):
+        """Decode current bytes back into a params pytree (dequantizing if needed).
+
+        ``mode`` defaults to the mode of the last applied update frame."""
+        if self._current is None:
+            raise ValueError("no update applied yet — apply_update first")
+        mode = self.mode if mode is None else mode
         buf = self._current
         if "quant" in mode:
             w = Q.dequantize_from_bytes(buf)

@@ -91,6 +91,27 @@ def merge_norm(cfg: FFMConfig, p, lr_out, ffm_vec):
     return (zn * p["merge_scale"] + p["merge_bias"]).astype(z.dtype)
 
 
+def head_from_parts(cfg: FFMConfig, params, lr_out, ffm_vec, model: str = "deepffm"):
+    """Shared ffm/deepffm tail: LR logits (B,) + pair vector (B, n_pairs) -> logits.
+
+    The single place that composes the wide and deep parts, whether the pair
+    vector came from the full forward, the context-cache decomposition, or the
+    Pallas candidate kernel.
+
+    FFNN over MergeNorm(LR, FFM) plus the additive LR/FFM shortcut — FW
+    composes blocks additively (regressor.rs sums block outputs), so the MLP
+    learns a residual on top of the classic wide terms. This is what gives
+    DeepFFM linear-level early learning with later gains (paper: "DeepFFMs
+    dominate after enough data is seen").
+    """
+    if model == "ffm":
+        return lr_out + jnp.sum(ffm_vec, axis=-1)
+    if model == "deepffm":
+        z = merge_norm(cfg, params, lr_out, ffm_vec)
+        return lr_out + jnp.sum(ffm_vec, axis=-1) + mlp_apply(cfg, params["mlp"], z)
+    raise ValueError(model)
+
+
 def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
             interactions_fn=None):
     """Returns logits (B,). ``interactions_fn`` lets the serving layer inject
@@ -104,17 +125,7 @@ def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
         return lr_out + mlp_apply(cfg, params["mlp"], pooled)
     inter = interactions_fn or ffm.interactions
     ffm_vec = inter(cfg, params["ffm"]["emb"], idx, val)
-    if model == "ffm":
-        return lr_out + jnp.sum(ffm_vec, axis=-1)
-    if model == "deepffm":
-        # FFNN over MergeNorm(LR, FFM) plus the additive LR/FFM shortcut —
-        # FW composes blocks additively (regressor.rs sums block outputs), so
-        # the MLP learns a residual on top of the classic wide terms. This is
-        # what gives DeepFFM linear-level early learning with later gains
-        # (paper: "DeepFFMs dominate after enough data is seen").
-        z = merge_norm(cfg, params, lr_out, ffm_vec)
-        return lr_out + jnp.sum(ffm_vec, axis=-1) + mlp_apply(cfg, params["mlp"], z)
-    raise ValueError(model)
+    return head_from_parts(cfg, params, lr_out, ffm_vec, model)
 
 
 def loss_fn(cfg: FFMConfig, params, batch, model: str = "deepffm"):

@@ -43,6 +43,21 @@ def pair_indices(n_fields: int) -> Tuple[np.ndarray, np.ndarray]:
     return iu[0].astype(np.int32), iu[1].astype(np.int32)
 
 
+def pair_split(cfg: FFMConfig):
+    """Global DiagMask pair order split into ctx-ctx / ctx-cand / cand-cand.
+
+    Positions into the canonical ``pair_indices`` order; the serving layer
+    caches the ctx-ctx block per request context (§5) and recomputes only the
+    ctx-cand / cand-cand blocks per candidate.
+    """
+    pi, pj = pair_indices(cfg.n_fields)
+    fc = cfg.context_fields
+    cc = np.flatnonzero((pi < fc) & (pj < fc))
+    xc = np.flatnonzero((pi < fc) & (pj >= fc))
+    aa = np.flatnonzero((pi >= fc) & (pj >= fc))
+    return (pi, pj), cc, xc, aa
+
+
 def lookup(cfg: FFMConfig, emb: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """idx: (B, F) -> E: (B, F, F, k) with E[b, i, j] = emb[idx[b,i], j]."""
     return jnp.take(emb, idx, axis=0)

@@ -55,3 +55,70 @@ def ffm_interaction_matrix(e: jnp.ndarray, v: jnp.ndarray, *, block_b: int = 64,
         interpret=interpret,
     )(e, v)
     return out[:b]
+
+
+def _cand_kernel(ectx_ref, vctx_ref, ecx_ref, ecc_ref, vcand_ref, xc_ref, aa_ref):
+    ectx = ectx_ref[0]   # (Fc, Fcand, K) — cached ctx embeddings in cand fields
+    vctx = vctx_ref[0]   # (Fc,)
+    ecx = ecx_ref[0]     # (Nt, Fcand, Fc, K) — cand embeddings in ctx fields
+    ecc = ecc_ref[0]     # (Nt, Fcand, Fcand, K) — cand embeddings in cand fields
+    vc = vcand_ref[0]    # (Nt, Fcand)
+    # ctx-cand: D[n, i, jc] = <ectx[i, jc], ecx[n, jc, i]> * vctx[i] * vc[n, jc]
+    ecx_t = jnp.swapaxes(ecx, 1, 2)  # (Nt, Fc, Fcand, K)
+    dots_xc = jnp.sum(ectx[None] * ecx_t, axis=-1)  # (Nt, Fc, Fcand)
+    xc_ref[0] = dots_xc * vctx[None, :, None] * vc[:, None, :]
+    # cand-cand: D[n, ic, jc] = <ecc[n, ic, jc], ecc[n, jc, ic]> * vc[n,ic] * vc[n,jc]
+    dots_aa = jnp.sum(ecc * jnp.swapaxes(ecc, 1, 2), axis=-1)  # (Nt, Fcand, Fcand)
+    aa_ref[0] = dots_aa * vc[:, :, None] * vc[:, None, :]
+
+
+def ffm_candidate_matrices(ectx: jnp.ndarray, vctx: jnp.ndarray, ecx: jnp.ndarray,
+                           ecc: jnp.ndarray, vcand: jnp.ndarray, *,
+                           block_n: int = 64, interpret: bool = True):
+    """Candidate-block interactions consuming cached context partials (§5).
+
+    The companion of :func:`ffm_interaction_matrix` for the context-cache
+    serving path: the ctx-ctx block is already cached per request, so this
+    kernel computes only the candidate-dependent ctx-cand and cand-cand dot
+    matrices. Request-batched: grid (R, N tiles); each step keeps the request's
+    whole cached (Fc, Fcand, K) context block plus one (Nt, Fcand, ·, K)
+    candidate tile resident in VMEM.
+
+    ectx:  (R, Fc, Fcand, K)    cached context embeddings for candidate fields
+    vctx:  (R, Fc)              cached context values
+    ecx:   (R, N, Fcand, Fc, K) candidate embeddings for context fields
+    ecc:   (R, N, Fcand, Fcand, K) candidate embeddings for candidate fields
+    vcand: (R, N, Fcand)        candidate values
+    ->     xc (R, N, Fc, Fcand), aa (R, N, Fcand, Fcand) dot matrices
+    """
+    r, fc, fcand, k = ectx.shape
+    n = ecx.shape[1]
+    nt = min(block_n, n)
+    pad = (-n) % nt
+    if pad:
+        ecx = jnp.pad(ecx, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        ecc = jnp.pad(ecc, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        vcand = jnp.pad(vcand, ((0, 0), (0, pad), (0, 0)))
+    np_ = ecx.shape[1]
+    grid = (r, np_ // nt)
+    xc, aa = pl.pallas_call(
+        _cand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, fc, fcand, k), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, fc), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nt, fcand, fc, k), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, nt, fcand, fcand, k), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, nt, fcand), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nt, fc, fcand), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, nt, fcand, fcand), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, np_, fc, fcand), ectx.dtype),
+            jax.ShapeDtypeStruct((r, np_, fcand, fcand), ecc.dtype),
+        ],
+        interpret=interpret,
+    )(ectx, vctx, ecx, ecc, vcand)
+    return xc[:, :n], aa[:, :n]

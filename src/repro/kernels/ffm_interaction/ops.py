@@ -1,7 +1,11 @@
-"""Jitted public wrapper: DiagMask'd FFM interactions via the Pallas kernel.
+"""Jitted public wrappers: DiagMask'd FFM interactions via the Pallas kernels.
 
-Drop-in replacement for ``repro.core.ffm.interactions`` (same signature), so
-the serving layer can inject it through ``deepffm.forward(interactions_fn=…)``.
+* ``interactions`` — drop-in replacement for ``repro.core.ffm.interactions``
+  (same signature), so the serving layer can inject it through
+  ``deepffm.forward(interactions_fn=…)``.
+* ``candidate_interactions`` — the context-cache companion (§5): consumes a
+  request's cached context partials and computes only the candidate-dependent
+  ctx-cand / cand-cand pair columns, gathered into global DiagMask order.
 """
 from __future__ import annotations
 
@@ -11,7 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ffm as ffm_core
-from repro.kernels.ffm_interaction.ffm_interaction import ffm_interaction_matrix
+from repro.kernels.ffm_interaction.ffm_interaction import (
+    ffm_candidate_matrices,
+    ffm_interaction_matrix,
+)
 
 
 @partial(jax.jit, static_argnums=(0,))
@@ -21,3 +28,21 @@ def interactions(cfg, emb, idx, val):
     d = ffm_interaction_matrix(e, val)
     pi, pj = ffm_core.pair_indices(cfg.n_fields)
     return d[:, pi, pj]
+
+
+@partial(jax.jit, static_argnums=(0,))
+def candidate_interactions(cfg, emb_ctx, val_ctx, ec, cand_val):
+    """Candidate-block pair columns from cached context partials.
+
+    emb_ctx: (R, Fc, F, K) cached context embeddings; val_ctx: (R, Fc);
+    ec: (R, N, Fcand, F, K) candidate embeddings; cand_val: (R, N, Fcand)
+    -> (pairs_xc (R, N, n_xc), pairs_aa (R, N, n_aa)) in the positions given
+    by ``ffm.pair_split(cfg)``.
+    """
+    fc = cfg.context_fields
+    xc_mat, aa_mat = ffm_candidate_matrices(
+        emb_ctx[:, :, fc:], val_ctx, ec[..., :fc, :], ec[..., fc:, :], cand_val)
+    (pi, pj), _, xc, aa = ffm_core.pair_split(cfg)
+    pairs_xc = xc_mat[:, :, pi[xc], pj[xc] - fc]
+    pairs_aa = aa_mat[:, :, pi[aa] - fc, pj[aa] - fc]
+    return pairs_xc, pairs_aa

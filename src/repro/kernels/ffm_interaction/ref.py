@@ -8,3 +8,17 @@ def ffm_interaction_matrix_ref(e: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     """e: (B, F, F, K); v: (B, F) -> (B, F, F)."""
     dots = jnp.einsum("bijk,bjik->bij", e, e)
     return dots * (v[:, :, None] * v[:, None, :])
+
+
+def ffm_candidate_matrices_ref(ectx, vctx, ecx, ecc, vcand):
+    """Oracle for the candidate-block kernel (same layouts).
+
+    ectx: (R, Fc, Fcand, K); vctx: (R, Fc); ecx: (R, N, Fcand, Fc, K);
+    ecc: (R, N, Fcand, Fcand, K); vcand: (R, N, Fcand)
+    -> xc (R, N, Fc, Fcand), aa (R, N, Fcand, Fcand)
+    """
+    dots_xc = jnp.einsum("rijk,rnjik->rnij", ectx, ecx)
+    xc = dots_xc * vctx[:, None, :, None] * vcand[:, :, None, :]
+    dots_aa = jnp.einsum("rnijk,rnjik->rnij", ecc, ecc)
+    aa = dots_aa * vcand[:, :, :, None] * vcand[:, :, None, :]
+    return xc, aa

@@ -53,6 +53,22 @@ def logical_rules(cfg, mesh: Mesh) -> Dict[str, Optional[Tuple[str, ...]]]:
     return rules
 
 
+def abstract_mesh(axis_sizes: Tuple[int, ...], axis_names: Tuple[str, ...]):
+    """Construct an ``AbstractMesh`` across jax versions.
+
+    The constructor changed signature: jax >= 0.5 takes
+    ``(axis_sizes, axis_names)``, jax 0.4.x takes a single tuple of
+    ``(name, size)`` pairs — passing the new-style arguments to the old
+    constructor dies with ``TypeError: 'int' object is not iterable``.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
     n = 1
     for a in axes:

@@ -15,131 +15,77 @@ The paper keys its cache with a radix tree over the raw request strings; the
 string processing is not the transferable insight, so we key a dict on the
 hashed (idx, val) context bytes.
 
+The decomposition itself (``compute_context`` / ``candidates_forward``) and
+the LRU + generation bookkeeping live in :mod:`repro.serving.engine`;
+``CachedServer`` is the thin §5-only view over one
+:class:`~repro.serving.engine.InferenceEngine`.
+
 ``CachedServer.serve`` == ``deepffm.forward`` on the full feature vector
 (equivalence-tested) while recomputing only candidate-dependent terms.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.config import FFMConfig
-from repro.core import deepffm, ffm
+from repro.serving.engine import (  # noqa: F401  (re-exported API)
+    InferenceEngine,
+    batched_candidates_forward,
+    candidates_forward,
+    compute_context,
+)
 
 
-def _pair_split(cfg: FFMConfig):
-    """Global DiagMask pair order split into ctx-ctx / ctx-cand / cand-cand."""
-    pi, pj = ffm.pair_indices(cfg.n_fields)
-    fc = cfg.context_fields
-    cc = np.flatnonzero((pi < fc) & (pj < fc))
-    xc = np.flatnonzero((pi < fc) & (pj >= fc))
-    aa = np.flatnonzero((pi >= fc) & (pj >= fc))
-    return (pi, pj), cc, xc, aa
-
-
-@partial(jax.jit, static_argnums=(0,))
-def compute_context(cfg: FFMConfig, params, ctx_idx, ctx_val):
-    """Context-only pass. ctx_idx/val: (Fc,). Returns the cacheable partials."""
-    fc = cfg.context_fields
-    emb = params["ffm"]["emb"]
-    e = jnp.take(emb, ctx_idx, axis=0)  # (Fc, F, k)
-    (pi, pj), cc, _, _ = _pair_split(cfg)
-    # ctx-ctx interactions (in global pair order positions cc)
-    dots = jnp.einsum("ijk,jik->ij", e[:, :fc], e[:, :fc])
-    vv = ctx_val[:, None] * ctx_val[None, :]
-    ctx_pairs = (dots * vv)[pi[cc], pj[cc]]
-    lr_ctx = jnp.sum(jnp.take(params["lr"]["w"], ctx_idx) * ctx_val)
-    return {
-        "emb_ctx": e,          # (Fc, F, k) — ctx features' embeddings for all fields
-        "val_ctx": ctx_val,    # (Fc,)
-        "pairs_cc": ctx_pairs, # (n_cc,)
-        "lr_ctx": lr_ctx,      # ()
-    }
-
-
-@partial(jax.jit, static_argnums=(0, 1))
-def candidates_forward(cfg: FFMConfig, model: str, params, cached, cand_idx, cand_val):
-    """Per-candidate completion. cand_idx/val: (N, F-Fc). Returns logits (N,)."""
-    fc = cfg.n_fields - cfg.context_fields  # candidate field count
-    f0 = cfg.context_fields
-    emb = params["ffm"]["emb"]
-    n = cand_idx.shape[0]
-    ec = jnp.take(emb, cand_idx, axis=0)  # (N, Fcand, F, k)
-
-    (pi, pj), cc, xc, aa = _pair_split(cfg)
-
-    # ctx-cand: pair (i ctx, j cand): dot(emb_ctx[i, j], ec[j-f0, i]) * v_i * v_j
-    exi = cached["emb_ctx"][pi[xc], pj[xc]]            # (n_xc, k) ctx side
-    exj = ec[:, pj[xc] - f0, pi[xc]]                   # (N, n_xc, k) cand side
-    vx = cached["val_ctx"][pi[xc]] * cand_val[:, pj[xc] - f0]
-    pairs_xc = jnp.einsum("xk,nxk->nx", exi, exj) * vx
-
-    # cand-cand
-    eai = ec[:, pi[aa] - f0, pj[aa]]                   # (N, n_aa, k)
-    eaj = ec[:, pj[aa] - f0, pi[aa]]
-    va = cand_val[:, pi[aa] - f0] * cand_val[:, pj[aa] - f0]
-    pairs_aa = jnp.einsum("nxk,nxk->nx", eai, eaj) * va
-
-    # assemble the full pair vector in canonical global order
-    n_pairs = cfg.n_pairs
-    vec = jnp.zeros((n, n_pairs), pairs_aa.dtype)
-    vec = vec.at[:, cc].set(jnp.broadcast_to(cached["pairs_cc"], (n, cc.size)))
-    vec = vec.at[:, xc].set(pairs_xc)
-    vec = vec.at[:, aa].set(pairs_aa)
-
-    lr_cand = jnp.sum(jnp.take(params["lr"]["w"], cand_idx, axis=0) * cand_val, axis=-1)
-    lr_out = cached["lr_ctx"] + lr_cand + params["lr"]["b"]
-
-    if model == "ffm":
-        return lr_out + jnp.sum(vec, axis=-1)
-    z = deepffm.merge_norm(cfg, params, lr_out, vec)
-    return lr_out + jnp.sum(vec, axis=-1) + deepffm.mlp_apply(cfg, params["mlp"], z)
-
-
-@dataclass
 class CachedServer:
-    """LRU context cache in front of the candidate batch forward."""
+    """LRU context cache in front of the candidate batch forward.
 
-    cfg: FFMConfig
-    params: Dict
-    model: str = "deepffm"
-    max_entries: int = 4096
-    _cache: "OrderedDict[bytes, Dict]" = field(default_factory=OrderedDict)
-    hits: int = 0
-    misses: int = 0
+    Thin compatibility wrapper over :class:`InferenceEngine` (reference
+    backend): same constructor and serve/serve_uncached surface as the seed,
+    with hit/miss counters and the raw cache dict exposed for tests.
+    """
 
-    def _key(self, ctx_idx: np.ndarray, ctx_val: np.ndarray) -> bytes:
-        return ctx_idx.tobytes() + ctx_val.tobytes()
+    def __init__(self, cfg: FFMConfig, params: Dict, model: str = "deepffm",
+                 max_entries: int = 4096):
+        self.engine = InferenceEngine(cfg, model, params=params,
+                                      cache_entries=max_entries)
+
+    @property
+    def cfg(self) -> FFMConfig:
+        return self.engine.cfg
+
+    @property
+    def model(self) -> str:
+        return self.engine.model
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, value):
+        self.engine.install_params(value)
+
+    @property
+    def max_entries(self) -> int:
+        return self.engine.cache_entries
+
+    @property
+    def hits(self) -> int:
+        return self.engine.hits
+
+    @property
+    def misses(self) -> int:
+        return self.engine.misses
+
+    @property
+    def _cache(self):
+        return self.engine._cache
 
     def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> jnp.ndarray:
-        key = self._key(np.asarray(ctx_idx), np.asarray(ctx_val))
-        cached = self._cache.get(key)
-        if cached is None:
-            self.misses += 1
-            cached = compute_context(self.cfg, self.params, jnp.asarray(ctx_idx),
-                                     jnp.asarray(ctx_val))
-            self._cache[key] = cached
-            if len(self._cache) > self.max_entries:
-                self._cache.popitem(last=False)
-        else:
-            self.hits += 1
-            self._cache.move_to_end(key)
-        return candidates_forward(self.cfg, self.model, self.params, cached,
-                                  jnp.asarray(cand_idx), jnp.asarray(cand_val))
+        return self.engine.score(ctx_idx, ctx_val, cand_idx, cand_val)
 
     def serve_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val) -> jnp.ndarray:
         """Baseline: full forward per candidate (context recomputed each time)."""
-        n = cand_idx.shape[0]
-        idx = jnp.concatenate(
-            [jnp.broadcast_to(jnp.asarray(ctx_idx), (n, self.cfg.context_fields)),
-             jnp.asarray(cand_idx)], axis=1)
-        val = jnp.concatenate(
-            [jnp.broadcast_to(jnp.asarray(ctx_val), (n, self.cfg.context_fields)),
-             jnp.asarray(cand_val)], axis=1)
-        return deepffm.forward(self.cfg, self.params, idx, val, self.model)
+        return self.engine.score_uncached(ctx_idx, ctx_val, cand_idx, cand_val)

@@ -1,9 +1,11 @@
 """Serving layer: the paper's §3 serving service, both workloads.
 
-* ``FFMServer`` — the paper's path: receives weight updates through the
-  quantized-patch channel, serves candidate-scoring requests through the
-  context cache (§5), optionally routing the FFM hot loop through the Pallas
-  kernel; tracks latency/hit-rate stats.
+* ``FFMServer`` — the paper's path, now a thin deployment wrapper over
+  :class:`repro.serving.engine.InferenceEngine`: receives weight updates
+  through the quantized-patch channel (cache-preserving hot swaps), serves
+  candidate-scoring requests through the context cache (§5) with the FFM hot
+  loop optionally on the Pallas kernel — the two compose instead of being
+  mutually exclusive; tracks latency/hit-rate stats with percentiles.
 * ``LLMServer`` — the generalization to the assigned architectures: batched
   prefill (one forward fills the KV cache) + greedy decode with optional
   shared-prefix state reuse.
@@ -11,85 +13,64 @@
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import transfer
 from repro.common.config import FFMConfig, ModelConfig
-from repro.core import deepffm
 from repro.models import registry, transformer
-from repro.serving.context_cache import CachedServer
+from repro.serving.engine import InferenceEngine, ServeStats  # noqa: F401 (re-export)
 from repro.train.steps import make_serve_step
-
-
-@dataclass
-class ServeStats:
-    requests: int = 0
-    candidates: int = 0
-    seconds: float = 0.0
-    updates_applied: int = 0
-    update_bytes: int = 0
-
-    @property
-    def predictions_per_s(self) -> float:
-        return self.candidates / max(self.seconds, 1e-9)
 
 
 class FFMServer:
     """DeepFFM serving instance fed by the trainer's update channel."""
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm",
-                 use_pallas_kernel: bool = False, cache_entries: int = 4096):
-        self.cfg, self.model = cfg, model
-        self.use_pallas_kernel = use_pallas_kernel
-        self.cache_entries = cache_entries
-        self._receiver = transfer.Receiver()
-        self._srv: Optional[CachedServer] = None
-        self.stats = ServeStats()
+                 use_pallas_kernel: bool = False, cache_entries: int = 4096,
+                 backend: Optional[str] = None):
+        backend = backend or ("pallas" if use_pallas_kernel else "reference")
+        self.engine = InferenceEngine(cfg, model, backend=backend,
+                                      cache_entries=cache_entries)
 
-    def apply_update(self, update: bytes, manifest, like_params) -> None:
-        """Ingest one trainer update (full file or patch) and swap weights."""
-        self._receiver.apply_update(update)
-        mode = transfer._unframe(update)[1]
-        params = self._receiver.materialize(mode, manifest, like=like_params)
-        self._srv = CachedServer(self.cfg, params, self.model,
-                                 max_entries=self.cache_entries)
-        self.stats.updates_applied += 1
-        self.stats.update_bytes += len(update)
+    @property
+    def cfg(self) -> FFMConfig:
+        return self.engine.cfg
 
-    def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
-        if self._srv is None:
-            raise RuntimeError("no weights yet — apply_update first")
-        t0 = time.perf_counter()
-        if self.use_pallas_kernel:
-            from repro.kernels.ffm_interaction import ops as ffm_ops
+    @property
+    def model(self) -> str:
+        return self.engine.model
 
-            scores = deepffm.forward(
-                self.cfg, self._srv.params,
-                jnp.concatenate([jnp.broadcast_to(
-                    jnp.asarray(ctx_idx), (cand_idx.shape[0], self.cfg.context_fields)),
-                    jnp.asarray(cand_idx)], axis=1),
-                jnp.concatenate([jnp.broadcast_to(
-                    jnp.asarray(ctx_val), (cand_val.shape[0], self.cfg.context_fields)),
-                    jnp.asarray(cand_val)], axis=1),
-                self.model, interactions_fn=ffm_ops.interactions)
-        else:
-            scores = self._srv.serve(ctx_idx, ctx_val, cand_idx, cand_val)
-        out = np.asarray(jax.nn.sigmoid(scores))
-        self.stats.seconds += time.perf_counter() - t0
-        self.stats.requests += 1
-        self.stats.candidates += int(cand_idx.shape[0])
-        return out
+    @property
+    def use_pallas_kernel(self) -> bool:
+        return self.engine.backend == "pallas"
+
+    @property
+    def stats(self) -> ServeStats:
+        return self.engine.stats
 
     @property
     def cache_hit_rate(self) -> float:
-        if self._srv is None or (self._srv.hits + self._srv.misses) == 0:
-            return 0.0
-        return self._srv.hits / (self._srv.hits + self._srv.misses)
+        return self.engine.cache_hit_rate
+
+    def apply_update(self, update: bytes, manifest, like_params) -> None:
+        """Ingest one trainer update (full file or patch) and hot-swap weights.
+
+        Delegates to the engine: weights swap in place under a generation
+        counter and the context cache survives (stale entries refresh lazily)."""
+        self.engine.apply_update(update, manifest, like_params)
+
+    def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
+        """Score one request; returns sigmoid probabilities (N,)."""
+        scores = self.engine.score(ctx_idx, ctx_val, cand_idx, cand_val)
+        return np.asarray(jax.nn.sigmoid(scores))
+
+    def serve_batch(self, requests: Sequence[Tuple]) -> List[np.ndarray]:
+        """Microbatched scoring: one jitted call for many requests."""
+        outs = self.engine.score_batch(requests)
+        return [np.asarray(jax.nn.sigmoid(s)) for s in outs]
 
 
 class LLMServer:
@@ -120,7 +101,5 @@ class LLMServer:
             outs.append(tok)
             tok, state = self._serve(self.params, state, tok)
         gen = jnp.stack(outs, 1)
-        self.stats.seconds += time.perf_counter() - t0
-        self.stats.requests += B
-        self.stats.candidates += B * gen_len
+        self.stats.record(time.perf_counter() - t0, B * gen_len, requests=B)
         return gen

@@ -54,7 +54,7 @@ class OnlineTrainer:
             lambda p, i, v: deepffm.predict_proba(cfg, p, i, v, model))
 
     def run_round(self, batches: Iterable[Dict[str, Any]]) -> bytes:
-        """One online round; returns the update blob for the serving layer."""
+        """One online round; returns the versioned update blob for serving."""
         t0 = time.perf_counter()
         losses, labels, scores, n = [], [], [], 0
         for b in Prefetcher(batches, depth=self.prefetch_depth):
@@ -69,7 +69,9 @@ class OnlineTrainer:
                 self.params, g, self.acc)
             losses.append(float(loss))
             n += int(b["label"].shape[0])
-        update = self.sender.make_update(self.params)
+        # stamp the round number into the update frame: the serving engine
+        # tracks it as weights_version for its cache-generation bookkeeping
+        update = self.sender.make_update(self.params, version=len(self.reports) + 1)
         self.reports.append(RoundReport(
             round=len(self.reports), examples=n,
             seconds=time.perf_counter() - t0,

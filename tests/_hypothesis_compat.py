@@ -1,0 +1,31 @@
+"""Import hypothesis if available; otherwise provide stubs so that modules
+using ``@given`` still collect — the property tests skip, the plain pytest
+tests in the same files keep running."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy construction (st.lists(st.integers(...), ...))."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

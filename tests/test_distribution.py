@@ -4,7 +4,7 @@ analyzer's accounting invariants."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import hlo_analysis, sharding
 from repro.models.registry import get_config
@@ -12,7 +12,7 @@ from tests._subproc import run_with_devices
 
 
 def _amesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return sharding.abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_spec_for_divisibility_fallback():

@@ -1,7 +1,7 @@
 """Property tests for the byte-level patcher (paper §6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import patcher
 

@@ -1,0 +1,162 @@
+"""InferenceEngine behaviour: oracle equivalence (both backends), candidate
+kernel vs ref, cache survival across hot weight swaps, bucketed microbatching,
+latency percentiles, and the versioned update frames."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.data.synthetic import CTRStream
+from repro.kernels.ffm_interaction.ffm_interaction import ffm_candidate_matrices
+from repro.kernels.ffm_interaction.ref import ffm_candidate_matrices_ref
+from repro.serving.engine import InferenceEngine, batched_candidates_forward
+from repro.serving.server import FFMServer
+from repro.train.loop import OnlineTrainer
+
+CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**13, k=4,
+                mlp_hidden=(16,))
+
+
+def _full_forward(cfg, params, model, ci, cv, ki, kv):
+    n = ki.shape[0]
+    idx = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(ci), (n, cfg.context_fields)),
+         jnp.asarray(ki)], axis=1)
+    val = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(cv), (n, cfg.context_fields)),
+         jnp.asarray(kv)], axis=1)
+    return np.asarray(deepffm.forward(cfg, params, idx, val, model))
+
+
+@pytest.mark.parametrize("model", ["ffm", "deepffm"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_engine_matches_full_forward(model, backend):
+    """Cache + kernel composition == deepffm.forward on concatenated features."""
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0), model)
+    params["lr"]["w"] = jax.random.normal(
+        jax.random.PRNGKey(1), params["lr"]["w"].shape) * 0.1
+    eng = InferenceEngine(CFG, model, backend=backend, params=params)
+    stream = CTRStream(CFG, seed=3)
+    for n in (1, 5, 9):
+        ci, cv, ki, kv = stream.request(n)
+        got = np.asarray(eng.score(ci, cv, ki, kv))
+        want = _full_forward(CFG, params, model, ci, cv, ki, kv)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    assert eng.hits >= 0 and eng.misses >= 1
+
+
+@pytest.mark.parametrize("R,N,Fc,Fcand,K", [(1, 5, 3, 2, 4), (3, 9, 8, 4, 8),
+                                            (2, 64, 4, 7, 2), (2, 6, 5, 1, 4)])
+def test_candidate_kernel_matches_ref(R, N, Fc, Fcand, K):
+    ks = jax.random.split(jax.random.PRNGKey(R * N + K), 5)
+    ectx = jax.random.normal(ks[0], (R, Fc, Fcand, K))
+    vctx = jax.random.normal(ks[1], (R, Fc))
+    ecx = jax.random.normal(ks[2], (R, N, Fcand, Fc, K))
+    ecc = jax.random.normal(ks[3], (R, N, Fcand, Fcand, K))
+    vcand = jax.random.normal(ks[4], (R, N, Fcand))
+    got_xc, got_aa = ffm_candidate_matrices(ectx, vctx, ecx, ecc, vcand,
+                                            block_n=16)
+    want_xc, want_aa = ffm_candidate_matrices_ref(ectx, vctx, ecx, ecc, vcand)
+    np.testing.assert_allclose(np.asarray(got_xc), np.asarray(want_xc),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_aa), np.asarray(want_aa),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_cache_survives_weight_update(backend):
+    """A patch+quant hot swap must not rebuild the server or drop the cache:
+    a repeated context still hits, and post-swap scores match a fresh full
+    forward with the new weights."""
+    stream = CTRStream(CFG, seed=7)
+    trainer = OnlineTrainer(CFG, lr=0.1)
+    srv = FFMServer(CFG, backend=backend)
+    upd = trainer.run_round(stream.batches(256, 10))
+    srv.apply_update(upd, trainer.sender.manifest, trainer.params)
+
+    engine = srv.engine
+    cache_obj = engine._cache
+    ci, cv, ki, kv = stream.request(6)
+    srv.serve(ci, cv, ki, kv)
+    srv.serve(ci, cv, ki, kv)
+    assert engine.hits == 1
+
+    upd2 = trainer.run_round(stream.batches(256, 10))  # patch+quant round
+    assert transfer.unframe(upd2).is_patch
+    srv.apply_update(upd2, trainer.sender.manifest, trainer.params)
+
+    # no reconstruction on the update path: same engine, same cache object,
+    # entries retained (stale ones refresh lazily on next lookup)
+    assert srv.engine is engine and engine._cache is cache_obj
+    assert len(cache_obj) == 1
+    assert engine.generation == 2 and engine.weights_version == 2
+
+    probs = srv.serve(ci, cv, ki, kv)   # stale entry -> recompute under new gen
+    probs2 = srv.serve(ci, cv, ki, kv)  # repeated context -> cache hit again
+    assert engine.hits >= 2 and srv.cache_hit_rate > 0
+    np.testing.assert_allclose(probs, probs2, rtol=1e-6, atol=1e-7)
+    fresh = np.asarray(jax.nn.sigmoid(
+        engine.score_uncached(ci, cv, ki, kv)))
+    np.testing.assert_allclose(probs, fresh, rtol=2e-4, atol=2e-5)
+
+
+def test_bucketed_batching_bounds_compilations():
+    """Candidate counts pad to power-of-two buckets: many request shapes, few
+    compiled shapes."""
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = InferenceEngine(CFG, params=params, min_bucket=8)
+    stream = CTRStream(CFG, seed=5)
+    size_before = (batched_candidates_forward._cache_size()
+                   if hasattr(batched_candidates_forward, "_cache_size") else None)
+    for n in (1, 2, 3, 5, 7, 8, 6, 4):
+        ci, cv, ki, kv = stream.request(n)
+        out = eng.score(ci, cv, ki, kv)
+        assert out.shape == (n,)
+    if size_before is not None:
+        # all eight shapes landed in the single (1, 8)-bucket compilation
+        assert batched_candidates_forward._cache_size() - size_before <= 1
+    assert eng.plan.bucket(1) == 8 and eng.plan.bucket(9) == 16
+
+
+def test_score_batch_matches_single_requests():
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = InferenceEngine(CFG, params=params)
+    stream = CTRStream(CFG, seed=6)
+    reqs = [stream.request(n) for n in (3, 7, 5, 8, 2)]
+    batched = eng.score_batch(reqs)
+    for (ci, cv, ki, kv), out in zip(reqs, batched):
+        single = eng.score(ci, cv, ki, kv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(single),
+                                   rtol=1e-5, atol=1e-6)
+    assert eng.stats.requests == len(reqs) * 2
+    assert eng.stats.candidates == 2 * sum(r[2].shape[0] for r in reqs)
+
+
+def test_latency_percentiles_ordered():
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = InferenceEngine(CFG, params=params)
+    stream = CTRStream(CFG, seed=8)
+    for _ in range(12):
+        eng.score(*stream.request(4))
+    s = eng.stats
+    assert 0 < s.p50_ms <= s.p95_ms <= s.p99_ms
+    assert s.predictions_per_s > 0
+
+
+def test_update_frames_are_versioned():
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    snd = transfer.Sender(mode="patch+quant")
+    u1, u2 = snd.make_update(params), snd.make_update(params)
+    f1, f2 = transfer.unframe(u1), transfer.unframe(u2)
+    assert (f1.version, f2.version) == (1, 2)
+    assert f1.mode == "patch+quant" and not f1.is_patch and f2.is_patch
+    # explicit stamps (train loop's round counter) override the auto-counter
+    u3 = snd.make_update(params, version=10)
+    assert transfer.unframe(u3).version == 10
+    rcv = transfer.Receiver()
+    for u in (u1, u2, u3):
+        rcv.apply_update(u)
+    assert rcv.version == 10 and rcv.mode == "patch+quant"
