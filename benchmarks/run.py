@@ -21,15 +21,24 @@ BENCHES = (
 )
 
 
+SMOKE = ("serving_engine",)  # fast CI smoke subset (implies --quick)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="substring filter on bench name")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke check: run only the serving bench, quick")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
 
     failures = 0
     print("name,us_per_call,derived")
     for name, module in BENCHES:
+        if args.smoke and name not in SMOKE:
+            continue
         if args.only and args.only not in name:
             continue
         try:

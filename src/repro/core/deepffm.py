@@ -112,6 +112,20 @@ def head_from_parts(cfg: FFMConfig, params, lr_out, ffm_vec, model: str = "deepf
     raise ValueError(model)
 
 
+def split_request(cfg: FFMConfig, idx, val):
+    """Split full feature rows (B, F) into the serving decomposition:
+    ``(ctx_idx (Fc,), ctx_val (Fc,), cand_idx (B, F-Fc), cand_val (B, F-Fc))``.
+
+    Inverse of the concatenation the serving oracle performs: all rows must
+    share their first ``context_fields`` columns (one request = one context).
+    The field-prefix structure this relies on is the same one the prefix
+    cache exploits (``ffm.extend_context_prefix``).
+    """
+    fc = cfg.context_fields
+    idx, val = jnp.asarray(idx), jnp.asarray(val)
+    return idx[0, :fc], val[0, :fc], idx[:, fc:], val[:, fc:]
+
+
 def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
             interactions_fn=None):
     """Returns logits (B,). ``interactions_fn`` lets the serving layer inject

@@ -58,6 +58,119 @@ def pair_split(cfg: FFMConfig):
     return (pi, pj), cc, xc, aa
 
 
+# ---------------------------------------------------------------------------
+# Partial-context decomposition over field prefixes (serving §5 prefix cache)
+# ---------------------------------------------------------------------------
+#
+# A context of Fc fields decomposes over its *prefixes*: every cacheable term
+# of the context partial is either per-field (embeddings, values, LR terms) or
+# a pair (i, j) with i < j < Fc, which belongs to prefix length j+1. Ordering
+# the ctx-ctx pairs j-major (all pairs of field j come after all pairs of
+# fields < j) makes the pair vector of a depth-p prefix a *contiguous slice*
+# of the full vector — so a cached prefix partial extends by appending, and a
+# deeper partial slices down to any shallower depth for free.
+
+
+def prefix_pair_count(p: int) -> int:
+    """Number of ctx-ctx pairs among the first ``p`` context fields."""
+    return p * (p - 1) // 2
+
+
+def prefix_pair_order(fc: int) -> Tuple[np.ndarray, np.ndarray]:
+    """j-major ctx-ctx pair order: for j in [1, fc), all (i, j) with i < j.
+
+    Appending context field j appends exactly its pairs, so the pair vector of
+    any prefix depth p is the first ``prefix_pair_count(p)`` entries.
+    """
+    if fc < 2:
+        z = np.zeros(0, np.int32)
+        return z, z.copy()
+    ii = np.concatenate([np.arange(j) for j in range(1, fc)])
+    jj = np.concatenate([np.full(j, j) for j in range(1, fc)])
+    return ii.astype(np.int32), jj.astype(np.int32)
+
+
+def prefix_to_cc_perm(cfg: FFMConfig) -> np.ndarray:
+    """Permutation from j-major prefix pair order to the global cc order.
+
+    ``pairs_cc_global = pairs_prefix[prefix_to_cc_perm(cfg)]`` where
+    ``pairs_cc_global`` lines up with the ``cc`` positions of ``pair_split``.
+    """
+    (pi, pj), cc, _, _ = pair_split(cfg)
+    ii, jj = prefix_pair_order(cfg.context_fields)
+    pos = {(int(i), int(j)): t for t, (i, j) in enumerate(zip(ii, jj))}
+    return np.asarray([pos[(int(pi[c]), int(pj[c]))] for c in cc], np.int32)
+
+
+def tail_pair_gather(fc: int, p: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather indices for the pairs appended when extending depth p -> fc.
+
+    Returns (ii, jt) such that the new j-major pairs are
+    ``pair_matrix[ii, jt]`` where ``pair_matrix[i, jt]`` holds the (i, p+jt)
+    interaction for every context field i and tail field p+jt.
+    """
+    if fc - p < 1 or fc < 2:
+        z = np.zeros(0, np.int32)
+        return z, z.copy()
+    ii = np.concatenate([np.arange(j) for j in range(p, fc)])
+    jt = np.concatenate([np.full(j, j - p) for j in range(p, fc)])
+    return ii.astype(np.int32), jt.astype(np.int32)
+
+
+def empty_context_prefix(cfg: FFMConfig, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """The depth-0 context prefix state (identity of ``extend_context_prefix``)."""
+    return {
+        "emb": jnp.zeros((0, cfg.n_fields, cfg.k), dtype),
+        "val": jnp.zeros((0,), jnp.float32),
+        "pairs": jnp.zeros((0,), jnp.float32),
+        "lr_terms": jnp.zeros((0,), jnp.float32),
+    }
+
+
+def extend_context_prefix(cfg: FFMConfig, emb: jnp.ndarray, lr_w: jnp.ndarray,
+                          prefix: Dict[str, jnp.ndarray],
+                          tail_idx: jnp.ndarray, tail_val: jnp.ndarray
+                          ) -> Dict[str, jnp.ndarray]:
+    """Extend a depth-p context prefix state by ``t`` tail fields.
+
+    ``prefix`` holds the per-prefix partial state (all in j-major order):
+
+    * ``emb``      (p, F, k) — context features' embeddings for every field
+    * ``val``      (p,)      — feature values
+    * ``pairs``    (p(p-1)/2,) — ctx-ctx interactions among the prefix
+    * ``lr_terms`` (p,)      — per-field LR contributions
+
+    Only the tail's embeddings are gathered and only pairs (i, j) with
+    j >= p are computed; everything about the prefix is reused as-is. The
+    result is the depth-(p+t) state, sliceable back to any depth <= p+t.
+    """
+    p = prefix["emb"].shape[0]
+    fc = p + tail_idx.shape[0]
+    te = jnp.take(emb, tail_idx, axis=0)                    # (t, F, k)
+    e = jnp.concatenate([prefix["emb"], te], axis=0)        # (p+t, F, k)
+    v = jnp.concatenate([prefix["val"], tail_val.astype(jnp.float32)])
+    # pair (i, j): dot(e[i, field j], e[j, field i]) * v_i * v_j
+    dots = jnp.einsum("itk,tik->it", e[:, p:fc], te[:, :fc])  # (p+t, t)
+    pm = dots * (v[:, None] * v[None, p:])
+    ii, jt = tail_pair_gather(fc, p)
+    pairs = jnp.concatenate([prefix["pairs"], pm[ii, jt].astype(jnp.float32)])
+    lr_tail = (jnp.take(lr_w, tail_idx) * tail_val).astype(jnp.float32)
+    lr_terms = jnp.concatenate([prefix["lr_terms"], lr_tail])
+    return {"emb": e, "val": v, "pairs": pairs, "lr_terms": lr_terms}
+
+
+def slice_context_prefix(state: Dict[str, jnp.ndarray], depth: int
+                         ) -> Dict[str, jnp.ndarray]:
+    """View of a prefix state at a shallower ``depth`` (pure slicing, by
+    construction of the j-major pair order)."""
+    return {
+        "emb": state["emb"][:depth],
+        "val": state["val"][:depth],
+        "pairs": state["pairs"][: prefix_pair_count(depth)],
+        "lr_terms": state["lr_terms"][:depth],
+    }
+
+
 def lookup(cfg: FFMConfig, emb: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """idx: (B, F) -> E: (B, F, F, k) with E[b, i, j] = emb[idx[b,i], j]."""
     return jnp.take(emb, idx, axis=0)

@@ -11,12 +11,18 @@ For the DeepFFM the decomposition is exact. Let fields [0, Fc) be context and
   ctx-cand   pairs — need cached ctx embeddings + the candidate's own lookup
   cand-cand  pairs — per candidate
 and the LR sum splits into a cached context part + a per-candidate part.
-The paper keys its cache with a radix tree over the raw request strings; the
-string processing is not the transferable insight, so we key a dict on the
-hashed (idx, val) context bytes.
+
+The paper keys its cache with a radix tree over the raw request strings, so
+partial contexts share cached prefixes. The cache here is the structured
+equivalent: a prefix tree over ``(idx, val)`` field tokens
+(:mod:`repro.serving.prefix_cache`) whose lookups reuse the deepest cached
+prefix partial; only the context *tail* is recomputed, batched across miss
+bursts. The ctx-ctx block further decomposes over field prefixes
+(``repro.core.ffm.extend_context_prefix``), which is what makes a cached
+depth-p partial extendable to depth Fc without touching the prefix.
 
 The decomposition itself (``compute_context`` / ``candidates_forward``) and
-the LRU + generation bookkeeping live in :mod:`repro.serving.engine`;
+the trie + generation bookkeeping live in :mod:`repro.serving.engine`;
 ``CachedServer`` is the thin §5-only view over one
 :class:`~repro.serving.engine.InferenceEngine`.
 
@@ -25,9 +31,10 @@ the LRU + generation bookkeeping live in :mod:`repro.serving.engine`;
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.config import FFMConfig
 from repro.serving.engine import (  # noqa: F401  (re-exported API)
@@ -35,21 +42,24 @@ from repro.serving.engine import (  # noqa: F401  (re-exported API)
     batched_candidates_forward,
     candidates_forward,
     compute_context,
+    compute_context_tails,
 )
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401  (re-export)
 
 
 class CachedServer:
-    """LRU context cache in front of the candidate batch forward.
+    """Prefix-tree context cache in front of the candidate batch forward.
 
     Thin compatibility wrapper over :class:`InferenceEngine` (reference
     backend): same constructor and serve/serve_uncached surface as the seed,
-    with hit/miss counters and the raw cache dict exposed for tests.
+    with hit/miss counters and the underlying cache exposed for tests.
     """
 
     def __init__(self, cfg: FFMConfig, params: Dict, model: str = "deepffm",
-                 max_entries: int = 4096):
+                 max_entries: int = 4096, prefix_stride: Optional[int] = 4):
         self.engine = InferenceEngine(cfg, model, params=params,
-                                      cache_entries=max_entries)
+                                      cache_entries=max_entries,
+                                      prefix_stride=prefix_stride)
 
     @property
     def cfg(self) -> FFMConfig:
@@ -80,10 +90,11 @@ class CachedServer:
         return self.engine.misses
 
     @property
-    def _cache(self):
+    def _cache(self) -> PrefixCache:
         return self.engine._cache
 
-    def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> jnp.ndarray:
+    def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
+        """Score one request's candidates; logits (N,)."""
         return self.engine.score(ctx_idx, ctx_val, cand_idx, cand_val)
 
     def serve_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val) -> jnp.ndarray:

@@ -8,31 +8,43 @@ composition point; each component maps to a paper section:
   service on the receiving end of the trainer's update channel.
   :meth:`InferenceEngine.apply_update` swaps weights **in place** under a
   generation counter (no server reconstruction), so the context cache and the
-  jit caches survive every quantized-patch round.
-* **§5 (context cache)** — :func:`compute_context` computes the cacheable
-  context partials once per distinct request context (ctx-ctx DiagMask pairs,
-  context embeddings, LR partial); :func:`batched_candidates_forward` completes
-  the forward with only candidate-dependent work. Cache entries are stamped
-  with the weight generation and lazily refreshed after a hot swap.
+  jit caches survive every quantized-patch round. The (params, generation)
+  pair is published atomically, so scoring threads always see one coherent
+  weights version even while updates land concurrently.
+* **§5 (context cache)** — the cache is a *prefix tree* over ``(idx, val)``
+  field tokens (:mod:`repro.serving.prefix_cache`), mirroring the paper's
+  radix tree over raw request strings: a lookup reuses the deepest cached
+  prefix partial and only the context *tail* is computed, batched across a
+  whole cache-miss burst (:func:`compute_context_tails` is vmap-batched over
+  each miss group). Entries are stamped with the weight generation and lazily
+  refreshed after a hot swap.
+* **§5 (candidate dedup)** — real multi-request traffic repeats candidates:
+  :meth:`InferenceEngine.score_batch` dedups identical ``(context,
+  candidate)`` rows across the microbatch, scores each unique row once per
+  weight generation, and scatters results back per request.
 * **§5 (SIMD hot loop)** — the candidate completion can route its pair
   computation through the Pallas candidate-block kernel
   (``kernels/ffm_interaction``), selected per engine via
-  ``backend="reference" | "pallas"``. This is the composition the seed lacked:
-  the kernel consumes *cached* context partials instead of bypassing the cache.
+  ``backend="reference" | "pallas"``: the kernel consumes *cached* context
+  partials instead of bypassing the cache.
 * **§6 (weight transfer)** — updates arrive as versioned quantized-patch
   frames (``checkpoint.transfer.unframe``); the engine tracks the trainer's
   version stamp alongside its own generation counter.
 
 Request batching: candidate counts are padded to power-of-two buckets and
 multiple requests are stacked into one jitted call
-(:meth:`InferenceEngine.score_batch`), so ``candidates_forward`` compiles once
-per bucket instead of once per request shape. Latency is tracked per request
-with p50/p95/p99 percentiles in :class:`ServeStats`.
+(:meth:`InferenceEngine.score_batch`), so the forward compiles once per
+bucket instead of once per request shape — and because the prefix cache's
+checkpoint depths close the set of tail shapes too, the *entire* compiled
+shape set is enumerable up front: :meth:`InferenceEngine.warmup` pre-compiles
+it at construction so no request ever pays compile latency. Latency is
+tracked per request with p50/p95/p99 percentiles in :class:`ServeStats`.
 """
 from __future__ import annotations
 
+import threading
 import time
-from collections import OrderedDict
+from collections import Counter
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -44,6 +56,7 @@ import numpy as np
 from repro.checkpoint import transfer
 from repro.common.config import FFMConfig
 from repro.core import deepffm, ffm
+from repro.serving.prefix_cache import PrefixCache, context_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -52,13 +65,24 @@ from repro.core import deepffm, ffm
 
 @dataclass
 class ServeStats:
-    """Serving counters + a bounded window of per-request latencies."""
+    """Serving counters + a bounded window of per-request latencies.
+
+    ``candidates`` counts *requested* rows; ``rows_scored`` counts rows that
+    actually went through the forward after cross-request dedup (pre-padding).
+    ``ctx_partials_full`` counts contexts computed from scratch (no cached
+    prefix) and ``ctx_tail_fields`` the total context fields actually
+    computed — the prefix cache shrinks both relative to an exact-match
+    cache on prefix-sharing traffic.
+    """
 
     requests: int = 0
     candidates: int = 0
+    rows_scored: int = 0
     seconds: float = 0.0
     updates_applied: int = 0
     update_bytes: int = 0
+    ctx_partials_full: int = 0
+    ctx_tail_fields: int = 0
     latency_window: int = 4096
     _latencies_s: List[float] = field(default_factory=list, repr=False)
 
@@ -71,6 +95,11 @@ class ServeStats:
         self._latencies_s.extend([seconds] * requests)
         if len(self._latencies_s) > self.latency_window:
             del self._latencies_s[: -self.latency_window]
+
+    @property
+    def dedup_saved(self) -> int:
+        """Candidate rows the cross-request dedup avoided scoring."""
+        return self.candidates - self.rows_scored
 
     @property
     def predictions_per_s(self) -> float:
@@ -125,6 +154,16 @@ class ScoringPlan:
             b *= 2
         return b
 
+    def buckets_upto(self, n: int, minimum: Optional[int] = None) -> List[int]:
+        """All buckets the engine can emit for sizes in [1, n] — the closed
+        shape set :meth:`InferenceEngine.warmup` pre-compiles."""
+        out, b = [], self.bucket(1, minimum)
+        top = self.bucket(n, minimum)
+        while b <= top:
+            out.append(b)
+            b *= 2
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Jitted scoring path
@@ -132,33 +171,45 @@ class ScoringPlan:
 
 @partial(jax.jit, static_argnums=(0,))
 def compute_context(cfg: FFMConfig, params, ctx_idx, ctx_val):
-    """Context-only pass (§5). ctx_idx/val: (Fc,). Returns the cacheable partials."""
-    fc = cfg.context_fields
-    emb = params["ffm"]["emb"]
-    e = jnp.take(emb, ctx_idx, axis=0)  # (Fc, F, k)
-    (pi, pj), cc, _, _ = ffm.pair_split(cfg)
-    # ctx-ctx interactions (in global pair order positions cc)
-    dots = jnp.einsum("ijk,jik->ij", e[:, :fc], e[:, :fc])
-    vv = ctx_val[:, None] * ctx_val[None, :]
-    ctx_pairs = (dots * vv)[pi[cc], pj[cc]]
-    lr_ctx = jnp.sum(jnp.take(params["lr"]["w"], ctx_idx) * ctx_val)
-    return {
-        "emb_ctx": e,          # (Fc, F, k) — ctx features' embeddings for all fields
-        "val_ctx": ctx_val,    # (Fc,)
-        "pairs_cc": ctx_pairs, # (n_cc,)
-        "lr_ctx": lr_ctx,      # ()
-    }
+    """Context-only pass (§5). ctx_idx/val: (Fc,). Returns the cacheable
+    partial in *prefix state* format (see ``ffm.extend_context_prefix``):
+    ``emb`` (Fc, F, k), ``val`` (Fc,), ``pairs`` (j-major ctx-ctx
+    interactions), ``lr_terms`` (Fc,). Any prefix depth of the state is a
+    pure slice of it."""
+    prefix = ffm.empty_context_prefix(cfg, params["ffm"]["emb"].dtype)
+    return ffm.extend_context_prefix(cfg, params["ffm"]["emb"],
+                                     params["lr"]["w"], prefix,
+                                     ctx_idx, ctx_val)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def compute_context_tails(cfg: FFMConfig, params, prefix, tail_idx, tail_val):
+    """Batched context-tail pass over one cache-miss group (§5, prefix cache).
+
+    All members share one cached-prefix depth p; ``prefix`` leaves carry a
+    leading group axis M (emb (M, p, F, k), val (M, p), pairs (M, p(p-1)/2),
+    lr_terms (M, p)); tail_idx/val: (M, Fc-p). Returns the stacked full-depth
+    prefix states — one vmapped call per miss burst instead of one
+    ``compute_context`` per request.
+    """
+    def one(pe, pv, pp, pl, ti, tv):
+        return ffm.extend_context_prefix(
+            cfg, params["ffm"]["emb"], params["lr"]["w"],
+            {"emb": pe, "val": pv, "pairs": pp, "lr_terms": pl}, ti, tv)
+
+    return jax.vmap(one)(prefix["emb"], prefix["val"], prefix["pairs"],
+                         prefix["lr_terms"], tail_idx, tail_val)
 
 
 @partial(jax.jit, static_argnums=(0, 1, 2))
 def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
                                params, cached, cand_idx, cand_val):
-    """Candidate completion for a stack of R requests.
+    """Candidate completion for a stack of R request rows.
 
-    ``cached`` leaves carry a leading request axis R (stacked
-    :func:`compute_context` outputs); cand_idx/val: (R, N, F-Fc).
-    Returns logits (R, N). Pair computation routes through the Pallas
-    candidate kernel when ``backend == "pallas"``.
+    ``cached`` leaves carry a leading row axis R (stacked prefix states from
+    :func:`compute_context` / :func:`compute_context_tails`); cand_idx/val:
+    (R, N, F-Fc). Returns logits (R, N). Pair computation routes through the
+    Pallas candidate kernel when ``backend == "pallas"``.
     """
     f0 = cfg.context_fields
     emb = params["ffm"]["emb"]
@@ -166,17 +217,20 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     ec = jnp.take(emb, cand_idx, axis=0)  # (R, N, Fcand, F, k)
 
     (pi, pj), cc, xc, aa = ffm.pair_split(cfg)
+    emb_ctx, val_ctx = cached["emb"], cached["val"]
+    pairs_cc = cached["pairs"][:, ffm.prefix_to_cc_perm(cfg)]
+    lr_ctx = jnp.sum(cached["lr_terms"], axis=-1)
 
     if backend == "pallas":
         from repro.kernels.ffm_interaction import ops as ffm_ops
 
         pairs_xc, pairs_aa = ffm_ops.candidate_interactions(
-            cfg, cached["emb_ctx"], cached["val_ctx"], ec, cand_val)
+            cfg, emb_ctx, val_ctx, ec, cand_val)
     else:
         # ctx-cand: pair (i ctx, j cand): dot(emb_ctx[i, j], ec[j-f0, i]) * v_i * v_j
-        exi = cached["emb_ctx"][:, pi[xc], pj[xc]]        # (R, n_xc, k) ctx side
+        exi = emb_ctx[:, pi[xc], pj[xc]]                  # (R, n_xc, k) ctx side
         exj = ec[:, :, pj[xc] - f0, pi[xc]]               # (R, N, n_xc, k) cand side
-        vx = (cached["val_ctx"][:, pi[xc]][:, None, :]
+        vx = (val_ctx[:, pi[xc]][:, None, :]
               * cand_val[:, :, pj[xc] - f0])
         pairs_xc = jnp.einsum("rxk,rnxk->rnx", exi, exj) * vx
 
@@ -189,13 +243,13 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     # assemble the full pair vector in canonical global order
     vec = jnp.zeros((r, n, cfg.n_pairs), pairs_aa.dtype)
     vec = vec.at[:, :, cc].set(
-        jnp.broadcast_to(cached["pairs_cc"][:, None, :], (r, n, cc.size)))
+        jnp.broadcast_to(pairs_cc[:, None, :], (r, n, cc.size)))
     vec = vec.at[:, :, xc].set(pairs_xc)
     vec = vec.at[:, :, aa].set(pairs_aa)
 
     lr_cand = jnp.sum(jnp.take(params["lr"]["w"], cand_idx, axis=0) * cand_val,
                       axis=-1)
-    lr_out = cached["lr_ctx"][:, None] + lr_cand + params["lr"]["b"]
+    lr_out = lr_ctx[:, None] + lr_cand + params["lr"]["b"]
 
     logits = deepffm.head_from_parts(
         cfg, params, lr_out.reshape(-1), vec.reshape(r * n, cfg.n_pairs), model)
@@ -204,8 +258,8 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
 
 def candidates_forward(cfg: FFMConfig, model: str, params, cached,
                        cand_idx, cand_val):
-    """Single-request compatibility wrapper (reference backend). cand_idx/val:
-    (N, F-Fc) -> logits (N,)."""
+    """Single-request compatibility wrapper (reference backend). ``cached`` is
+    one :func:`compute_context` state; cand_idx/val: (N, F-Fc) -> logits (N,)."""
     lifted = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], cached)
     return batched_candidates_forward(
         cfg, model, "reference", params, lifted,
@@ -217,22 +271,42 @@ def candidates_forward(cfg: FFMConfig, model: str, params, cached,
 # ---------------------------------------------------------------------------
 
 class InferenceEngine:
-    """Single scoring path for the serving stack: context cache x Pallas kernel
-    x cache-preserving hot weight swaps x bucketed request batching."""
+    """Single scoring path for the serving stack: prefix-sharing context cache
+    x cross-request candidate dedup x Pallas kernel x cache-preserving hot
+    weight swaps x bucketed request batching.
+
+    Constructor knobs beyond the PR 1 surface:
+
+    * ``prefix_stride`` — spacing of the prefix cache's checkpoint depths.
+      ``None`` stores only full-depth entries (exact-match caching, the PR 1
+      behaviour); smaller strides share more prefix work per miss.
+    * ``dedup`` — score each unique ``(context, candidate)`` row once per
+      microbatch and scatter results back per request.
+    * ``warmup_buckets`` — ``(max_requests, max_candidates)``; when given
+      (and params are installed) every padding-bucket/tail shape combination
+      is pre-compiled at construction via :meth:`warmup`.
+    """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
                  backend: str = "reference", params=None,
-                 cache_entries: int = 4096, min_bucket: int = 8):
+                 cache_entries: int = 4096, min_bucket: int = 8,
+                 prefix_stride: Optional[int] = 4, dedup: bool = True,
+                 warmup_buckets: Optional[Tuple[int, int]] = None):
         self.plan = ScoringPlan(cfg, model, backend=backend, min_bucket=min_bucket)
-        self.params = params
         self.cache_entries = cache_entries
-        self.generation = 0          # bumped on every weight swap
+        self.dedup = dedup
         self.weights_version = 0     # trainer's stamp from the update frame
-        self._cache: "OrderedDict[bytes, Tuple[int, Dict]]" = OrderedDict()
+        self._weights: Tuple[Optional[Dict], int] = (params, 0)
+        self._cache = PrefixCache(cfg.context_fields, cache_entries,
+                                  stride=prefix_stride)
+        self._lock = threading.Lock()  # cache structure + counters + receiver
         self.hits = 0
         self.misses = 0
         self.stats = ServeStats()
         self._receiver = transfer.Receiver()
+        if warmup_buckets is not None and params is not None:
+            self.warmup(max_requests=warmup_buckets[0],
+                        max_candidates=warmup_buckets[1])
 
     # -- configuration passthroughs ----------------------------------------
     @property
@@ -248,107 +322,336 @@ class InferenceEngine:
         return self.plan.backend
 
     @property
+    def params(self):
+        return self._weights[0]
+
+    @property
+    def generation(self) -> int:
+        return self._weights[1]
+
+    @property
     def cache_hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    @property
+    def prefix_hit_depths(self) -> Counter:
+        """Histogram of cached-prefix depth matched per context lookup
+        (depth == context_fields is a full hit, 0 a cold miss)."""
+        return self._cache.hit_depths
+
     # -- weight management (§3 / §6) ---------------------------------------
     def install_params(self, params) -> None:
-        """Directly swap the weight pytree in place (tests / local serving)."""
-        self.params = params
-        self.generation += 1
+        """Directly swap the weight pytree in place (tests / local serving).
+        The (params, generation) pair is published atomically, so concurrent
+        scorers see either the old or the new version, never a mix."""
+        with self._lock:  # serialize the generation bump against apply_update
+            self._weights = (params, self._weights[1] + 1)
 
     def apply_update(self, update: bytes, manifest=None, like_params=None) -> None:
         """Ingest one trainer update (full file or patch) and hot-swap weights.
 
-        Cache-preserving: the context cache keeps its entries; lookups compare
+        Cache-preserving: the prefix tree keeps its entries; lookups compare
         each entry's generation stamp and lazily recompute stale partials, so
-        the LRU structure, stats, and jit caches all survive the swap.
+        the trie structure, stats, and jit caches all survive the swap.
         """
-        self._receiver.apply_update(update)
-        self.params = self._receiver.materialize(manifest=manifest,
-                                                 like=like_params)
-        self.generation += 1
-        self.weights_version = self._receiver.version
-        self.stats.updates_applied += 1
-        self.stats.update_bytes += len(update)
+        with self._lock:
+            self._receiver.apply_update(update)
+            params = self._receiver.materialize(manifest=manifest,
+                                                like=like_params)
+            self._weights = (params, self._weights[1] + 1)
+            self.weights_version = self._receiver.version
+            self.stats.updates_applied += 1
+            self.stats.update_bytes += len(update)
 
-    # -- context cache (§5) -------------------------------------------------
-    def _context_partials(self, ctx_idx: np.ndarray, ctx_val: np.ndarray) -> Dict:
-        key = ctx_idx.tobytes() + ctx_val.tobytes()
-        entry = self._cache.get(key)
-        if entry is not None and entry[0] == self.generation:
-            self.hits += 1
-            self._cache.move_to_end(key)
-            return entry[1]
-        # absent or stale (weights swapped since it was computed): recompute
-        self.misses += 1
-        part = compute_context(self.cfg, self.params, jnp.asarray(ctx_idx),
-                               jnp.asarray(ctx_val))
-        self._cache[key] = (self.generation, part)
-        self._cache.move_to_end(key)
-        if len(self._cache) > self.cache_entries:
-            self._cache.popitem(last=False)
-        return part
+    # -- context cache (§5, prefix tree) ------------------------------------
+    def _resolve_contexts(self, ctxs: List[Tuple[Tuple[bytes, ...],
+                                                 np.ndarray, np.ndarray]],
+                          params, generation: int
+                          ) -> Tuple[List[Dict], List[bool]]:
+        """Full-depth prefix states for each unique (tokens, idx, val) context,
+        plus a full-depth-hit flag per context.
+
+        Prefix-tree lookups find the deepest cached partial per context; the
+        remaining tails are computed in vmap-batched groups, one jitted call
+        per distinct cached depth (a closed set — see ``PrefixCache``), with
+        the group axis padded to a power of two.
+
+        Resolution runs in rounds so prefix sharing works *within* a miss
+        burst too: when several uncached contexts share a checkpoint prefix,
+        one representative per distinct prefix is computed (and inserted)
+        first, and the rest re-look-up in the next round to reuse it — the
+        sequential walk a radix tree would do, restructured to keep the tail
+        computation batched.
+        """
+        fc = self.cfg.context_fields
+        checkpoints = [d for d in self._cache.checkpoint_depths() if d < fc]
+        states: List[Optional[Dict]] = [None] * len(ctxs)
+        full_hit: List[bool] = [False] * len(ctxs)
+        emb_dt = params["ffm"]["emb"].dtype
+
+        pending = list(range(len(ctxs)))
+        first_round = True
+        while pending:
+            with self._lock:
+                looked = {i: self._cache.lookup(ctxs[i][0], generation)
+                          for i in pending}
+            claimed: set = set()
+            miss_groups: Dict[int, List[int]] = {}
+            deferred: List[int] = []
+            for i in pending:
+                depth, state = looked[i]
+                if depth == fc:
+                    # only possible in the first round: contexts are unique
+                    # within a burst, so later rounds never find a full match
+                    states[i] = state
+                    full_hit[i] = first_round
+                    with self._lock:
+                        self._cache.hit_depths[fc] += 1
+                    continue
+                above = [(d, ctxs[i][0][:d]) for d in checkpoints if d > depth]
+                if any(c in claimed for c in above):
+                    deferred.append(i)  # another context computes this prefix
+                else:
+                    claimed.update(above)
+                    miss_groups.setdefault(depth, []).append(i)
+            first_round = False
+
+            for depth, members in sorted(miss_groups.items()):
+                t = fc - depth
+                mb = self.plan.bucket(len(members), minimum=1)
+                pad = mb - len(members)
+
+                # cached states live as host numpy arrays: slicing, stacking
+                # and padding here are cheap views/copies, with one device
+                # transfer per leaf at the jit boundary below
+                def stack(leaf, pad_shape, dtype):
+                    rows = leaf + [np.zeros(pad_shape, dtype)] * pad
+                    return np.stack(rows)
+
+                empty = {"emb": np.zeros((0, self.cfg.n_fields, self.cfg.k),
+                                         emb_dt),
+                         "val": np.zeros((0,), np.float32),
+                         "pairs": np.zeros((0,), np.float32),
+                         "lr_terms": np.zeros((0,), np.float32)}
+                sliced = [ffm.slice_context_prefix(looked[i][1], depth)
+                          if looked[i][1] is not None else empty
+                          for i in members]
+                prefix = {
+                    "emb": stack([s["emb"] for s in sliced],
+                                 (depth, self.cfg.n_fields, self.cfg.k),
+                                 emb_dt),
+                    "val": stack([s["val"] for s in sliced], (depth,),
+                                 np.float32),
+                    "pairs": stack([s["pairs"] for s in sliced],
+                                   (ffm.prefix_pair_count(depth),),
+                                   np.float32),
+                    "lr_terms": stack([s["lr_terms"] for s in sliced],
+                                      (depth,), np.float32),
+                }
+                ti = np.zeros((mb, t), np.int32)
+                tv = np.zeros((mb, t), np.float32)
+                for m, i in enumerate(members):
+                    ti[m] = ctxs[i][1][depth:]
+                    tv[m] = ctxs[i][2][depth:]
+                full = compute_context_tails(self.cfg, params, prefix, ti, tv)
+                full = jax.tree_util.tree_map(np.asarray, full)
+                with self._lock:
+                    self.stats.ctx_partials_full += sum(
+                        1 for i in members if looked[i][0] == 0)
+                    self.stats.ctx_tail_fields += t * len(members)
+                    for m, i in enumerate(members):
+                        self._cache.hit_depths[depth] += 1
+                        # copy out of the stacked group buffer: a view would
+                        # keep the whole (mb, ...) batch alive for as long as
+                        # any one member stays cached
+                        states[i] = {k: v[m].copy() for k, v in full.items()}
+                        self._cache.insert(ctxs[i][0], generation, states[i])
+            pending = deferred
+        return states, full_hit
 
     # -- scoring ------------------------------------------------------------
     def _require_params(self):
         if self.params is None:
             raise RuntimeError("no weights yet — apply_update first")
 
-    def _pad_candidates(self, ki: np.ndarray, kv: np.ndarray, nb: int):
-        n = ki.shape[0]
-        if n == nb:
-            return ki, kv
-        ip = np.zeros((nb,) + ki.shape[1:], ki.dtype)
-        vp = np.zeros((nb,) + kv.shape[1:], kv.dtype)
-        ip[:n], vp[:n] = ki, kv
-        return ip, vp
-
-    def score(self, ctx_idx, ctx_val, cand_idx, cand_val) -> jnp.ndarray:
+    def score(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
         """Score one request's candidates against its context. Returns logits (N,)."""
         return self.score_batch([(ctx_idx, ctx_val, cand_idx, cand_val)])[0]
 
-    def score_batch(self, requests: Sequence[Tuple]) -> List[jnp.ndarray]:
+    def score_batch(self, requests: Sequence[Tuple]) -> List[np.ndarray]:
         """Microbatch several (ctx_idx, ctx_val, cand_idx, cand_val) requests.
 
-        All requests are padded to one power-of-two candidate bucket and the
-        request axis to a power-of-two too, so the whole batch is a single
-        jitted call with a small, closed set of compiled shapes.
+        Contexts are resolved through the prefix cache (tails batched per miss
+        group); identical ``(context, candidate)`` rows across the microbatch
+        are scored once and scattered back (``dedup=True``). The scored rows
+        are padded to one power-of-two candidate bucket and a power-of-two row
+        axis, so the whole batch is a single jitted call with a small, closed
+        set of compiled shapes. Scores are computed against exactly one
+        atomically published (params, generation) snapshot.
         """
         self._require_params()
         if not requests:
             return []
         t0 = time.perf_counter()
-        parts, idxs, vals, ns = [], [], [], []
-        for ci, cv, ki, kv in requests:
-            parts.append(self._context_partials(np.asarray(ci), np.asarray(cv)))
-            ki, kv = np.asarray(ki), np.asarray(kv)
-            ns.append(ki.shape[0])
-            idxs.append((ki, kv))
-        nb = self.plan.bucket(max(ns))
-        padded = [self._pad_candidates(ki, kv, nb) for ki, kv in idxs]
-        rb = self.plan.bucket(len(requests), minimum=1)
-        ki_b = np.stack([p[0] for p in padded])
-        kv_b = np.stack([p[1] for p in padded])
-        if rb > len(requests):
-            pad_r = rb - len(requests)
-            ki_b = np.concatenate([ki_b, np.zeros((pad_r,) + ki_b.shape[1:],
-                                                  ki_b.dtype)])
-            kv_b = np.concatenate([kv_b, np.zeros((pad_r,) + kv_b.shape[1:],
-                                                  kv_b.dtype)])
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *parts)
-        if rb > len(requests):
+        params, generation = self._weights
+
+        reqs = [(np.asarray(ci, np.int32), np.asarray(cv, np.float32),
+                 np.asarray(ki, np.int32), np.asarray(kv, np.float32))
+                for ci, cv, ki, kv in requests]
+
+        # unique contexts across the microbatch
+        u_of: List[int] = []
+        u_index: Dict[Tuple[bytes, ...], int] = {}
+        u_ctxs: List[Tuple[Tuple[bytes, ...], np.ndarray, np.ndarray]] = []
+        for ci, cv, ki, kv in reqs:
+            toks = context_tokens(ci, cv)
+            u = u_index.get(toks)
+            if u is None:
+                u = u_index[toks] = len(u_ctxs)
+                u_ctxs.append((toks, ci, cv))
+            u_of.append(u)
+
+        fc = self.cfg.context_fields
+        states, full_hit = self._resolve_contexts(u_ctxs, params, generation)
+        # hit/miss bookkeeping matches the flat cache: first request of an
+        # uncached context is the miss, every other request this batch (and
+        # every full-depth match) is a hit
+        seen_full = dict(enumerate(full_hit))
+        with self._lock:
+            for u in u_of:
+                if seen_full[u]:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+                    seen_full[u] = True
+
+        # candidate rows: dedup identical (context, candidate) pairs across
+        # requests, or keep one row-group per request (PR 1 behaviour)
+        if self.dedup:
+            group_of_req = u_of
+            n_groups = len(u_ctxs)
+            group_state = states
+        else:
+            group_of_req = list(range(len(reqs)))
+            n_groups = len(reqs)
+            group_state = [states[u] for u in u_of]
+        rows: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(n_groups)]
+        row_index: List[Dict[bytes, int]] = [{} for _ in range(n_groups)]
+        placements: List[List[Tuple[int, int]]] = []  # per request: (group, pos)
+        for r, (ci, cv, ki, kv) in enumerate(reqs):
+            g = group_of_req[r]
+            place = []
+            if self.dedup:  # one tobytes per array, sliced per candidate row
+                bi, bv = ki.tobytes(), kv.tobytes()
+                ri, rv = ki.shape[1] * ki.itemsize, kv.shape[1] * kv.itemsize
+            for c in range(ki.shape[0]):
+                if self.dedup:
+                    key = (bi[c * ri:(c + 1) * ri]
+                           + bv[c * rv:(c + 1) * rv])
+                    pos = row_index[g].get(key)
+                else:
+                    pos = None
+                if pos is None:
+                    pos = len(rows[g])
+                    rows[g].append((ki[c], kv[c]))
+                    if self.dedup:
+                        row_index[g][key] = pos
+                place.append((g, pos))
+            placements.append(place)
+
+        # a dedup group unions candidates from several requests and can exceed
+        # the per-request bucket; chunk groups to the request-level bucket so
+        # padded work never exceeds the no-dedup layout and the compiled shape
+        # set stays the closed per-request one (see warmup)
+        n_rows = sum(len(g) for g in rows)
+        nb = self.plan.bucket(max(r[2].shape[0] for r in reqs))
+        chunks: List[Tuple[int, int]] = []           # (group, start offset)
+        chunk_of: Dict[Tuple[int, int], int] = {}    # (group, chunk no) -> row
+        for g, grows in enumerate(rows):
+            for s in range(0, len(grows), nb):
+                chunk_of[(g, s // nb)] = len(chunks)
+                chunks.append((g, s))
+        if not chunks:  # every request carried an empty slate
+            with self._lock:
+                self.stats.record(time.perf_counter() - t0, 0,
+                                  requests=len(reqs))
+            return [np.zeros((0,), np.float32) for _ in reqs]
+        rb = self.plan.bucket(len(chunks), minimum=1)
+        fcand = self.cfg.n_fields - fc
+        ki_b = np.zeros((rb, nb, fcand), np.int32)
+        kv_b = np.zeros((rb, nb, fcand), np.float32)
+        for row_i, (g, s) in enumerate(chunks):
+            for pos, (ki, kv) in enumerate(rows[g][s:s + nb]):
+                ki_b[row_i, pos], kv_b[row_i, pos] = ki, kv
+
+        chunk_state = [group_state[g] for g, _ in chunks]
+        stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *chunk_state)
+        if rb > len(chunks):
             stacked = jax.tree_util.tree_map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.zeros((rb - len(requests),) + x.shape[1:], x.dtype)]),
+                lambda x: np.concatenate(
+                    [x, np.zeros((rb - len(chunks),) + x.shape[1:], x.dtype)]),
                 stacked)
         out = batched_candidates_forward(
-            self.cfg, self.model, self.backend, self.params, stacked,
-            jnp.asarray(ki_b), jnp.asarray(kv_b))
-        out = jax.block_until_ready(out)
-        self.stats.record(time.perf_counter() - t0, sum(ns), requests=len(requests))
-        return [out[i, :n] for i, n in enumerate(ns)]
+            self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
+        out = np.asarray(jax.block_until_ready(out))  # one transfer, then
+        # plain numpy scatter-back (no per-request device gathers)
+        results = [out[[chunk_of[(g, p // nb)] for g, p in place],
+                       [p % nb for _, p in place]]
+                   for place in placements]
+        with self._lock:
+            self.stats.rows_scored += n_rows
+            self.stats.record(time.perf_counter() - t0,
+                              sum(r[2].shape[0] for r in reqs),
+                              requests=len(reqs))
+        return results
+
+    def warmup(self, *, max_requests: int = 8, max_candidates: int = 64) -> int:
+        """Pre-compile every jitted shape the engine can emit for microbatches
+        of up to ``max_requests`` requests with up to ``max_candidates``
+        candidates each: all (row-bucket, candidate-bucket) combinations of
+        :func:`batched_candidates_forward` plus all (miss-group-bucket, tail
+        length) combinations of :func:`compute_context_tails`. Returns the
+        number of warmup calls issued. Uses the installed params, so it must
+        run after weights are available (the constructor's ``warmup_buckets``
+        runs it when params are passed in)."""
+        self._require_params()
+        params, _ = self._weights
+        cfg = self.cfg
+        fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+        emb_dt = params["ffm"]["emb"].dtype
+        rbs = self.plan.buckets_upto(max_requests, minimum=1)
+        calls = 0
+        # numpy dummies, matching the hot path: jax's jit cache keys on the
+        # argument container type, so warming with device arrays would leave
+        # the numpy-argument entries cold
+        for rb in rbs:
+            cached = {
+                "emb": np.zeros((rb, fc, cfg.n_fields, cfg.k), emb_dt),
+                "val": np.zeros((rb, fc), np.float32),
+                "pairs": np.zeros((rb, ffm.prefix_pair_count(fc)), np.float32),
+                "lr_terms": np.zeros((rb, fc), np.float32),
+            }
+            for nb in self.plan.buckets_upto(max_candidates):
+                batched_candidates_forward(
+                    cfg, self.model, self.backend, params, cached,
+                    np.zeros((rb, nb, fcand), np.int32),
+                    np.zeros((rb, nb, fcand), np.float32))
+                calls += 1
+            for t in self._cache.tail_lengths():
+                d = fc - t
+                prefix = {
+                    "emb": np.zeros((rb, d, cfg.n_fields, cfg.k), emb_dt),
+                    "val": np.zeros((rb, d), np.float32),
+                    "pairs": np.zeros((rb, ffm.prefix_pair_count(d)),
+                                      np.float32),
+                    "lr_terms": np.zeros((rb, d), np.float32),
+                }
+                compute_context_tails(cfg, params, prefix,
+                                      np.zeros((rb, t), np.int32),
+                                      np.zeros((rb, t), np.float32))
+                calls += 1
+        return calls
 
     def score_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val,
                        use_backend: bool = False) -> jnp.ndarray:

@@ -1,0 +1,180 @@
+"""Prefix-sharing context cache for FFM serving (paper §5, radix-tree keys).
+
+The paper keys its context cache on the *raw request strings* via a radix
+tree, so two requests whose contexts agree on a leading run of fields share
+the cached work for that run. This module is the structured equivalent over
+hashed features: a trie whose edges are ``(idx, val)`` field tokens and whose
+nodes can hold a *prefix partial* — the FFM context state restricted to the
+fields along the path (``repro.core.ffm.extend_context_prefix`` format).
+
+A lookup walks the trie as deep as the request's tokens match and returns the
+deepest node holding a partial that is (a) stamped with the current weight
+generation and (b) complete up to that node's depth. The serving engine then
+computes only the context *tail* from there (batched across a miss group).
+
+Storage policy: one insert stores the full-depth state once and registers
+entry pointers at a closed set of *checkpoint depths* (multiples of
+``stride`` plus the full depth). Because the j-major prefix pair order makes
+any shallower depth a pure slice of a deeper state, every checkpoint shares
+the same underlying arrays — memory cost is one full state per cached
+context, not one per depth. The closed depth set also closes the set of tail
+shapes the engine must compile (see ``InferenceEngine.warmup``).
+
+Eviction is LRU over *full contexts*: each node counts the cached full
+contexts routed through it, and evicting a context prunes every node whose
+count drops to zero — exactly the radix-tree behaviour of dropping a leaf and
+any run of edges only it used.
+"""
+from __future__ import annotations
+
+from collections import Counter, OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ffm
+
+
+class _Node:
+    """One trie node; ``entry`` is ``(generation, depth, state)`` where
+    ``state`` is a full-depth prefix state usable up to ``depth`` fields."""
+
+    __slots__ = ("children", "entry", "refs")
+
+    def __init__(self):
+        self.children: Dict[bytes, _Node] = {}
+        self.entry: Optional[Tuple[int, int, Dict]] = None
+        self.refs = 0
+
+
+def context_tokens(ctx_idx: np.ndarray, ctx_val: np.ndarray) -> Tuple[bytes, ...]:
+    """Per-field ``(idx, val)`` byte tokens — the trie's edge alphabet.
+    One ``tobytes`` per array, sliced per field (hot-path cheap)."""
+    ctx_idx = np.ascontiguousarray(ctx_idx)
+    ctx_val = np.ascontiguousarray(ctx_val)
+    bi, bv = ctx_idx.tobytes(), ctx_val.tobytes()
+    si, sv = ctx_idx.itemsize, ctx_val.itemsize
+    return tuple(bi[i * si:(i + 1) * si] + bv[i * sv:(i + 1) * sv]
+                 for i in range(ctx_idx.shape[0]))
+
+
+class PrefixCache:
+    """LRU-bounded prefix tree over context field tokens.
+
+    ``max_entries`` bounds the number of cached *full contexts* (``len(self)``
+    reports exactly that, matching the flat-cache semantics it replaces);
+    checkpoint partials ride along with their context and are pruned with it.
+    ``stride=None`` disables intermediate checkpoints — only full-depth
+    entries are stored, which reproduces the flat exact-match cache (the PR 1
+    engine) inside the same structure.
+    """
+
+    def __init__(self, fc: int, max_entries: int = 4096,
+                 stride: Optional[int] = 4):
+        if fc < 1:
+            raise ValueError("need at least one context field")
+        if stride is not None and stride < 1:
+            raise ValueError("stride must be >= 1 (or None to disable)")
+        self.fc = fc
+        self.max_entries = max_entries
+        self.stride = stride
+        self.root = _Node()
+        self._lru: "OrderedDict[Tuple[bytes, ...], None]" = OrderedDict()
+        # depth of cached prefix actually reused per resolved context; filled
+        # by the caller (which may re-look-up while resolving a miss burst,
+        # so it alone knows the final reuse depth)
+        self.hit_depths: Counter = Counter()
+
+    def checkpoint_depths(self) -> List[int]:
+        """The closed set of depths at which partials are stored."""
+        if self.stride is None:
+            return [self.fc]
+        ds = list(range(self.stride, self.fc, self.stride))
+        return ds + [self.fc]
+
+    def tail_lengths(self) -> List[int]:
+        """Closed set of tail shapes a lookup can leave to compute (misses at
+        depth 0 or any checkpoint depth short of the full context)."""
+        return sorted({self.fc - d for d in [0] + self.checkpoint_depths()
+                       if d < self.fc}, reverse=True)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # -- lookup / insert -----------------------------------------------------
+    def lookup(self, tokens: Sequence[bytes], generation: int
+               ) -> Tuple[int, Optional[Dict]]:
+        """Walk the trie along ``tokens``; return the deepest cached prefix
+        ``(depth, state)`` valid under ``generation`` (``(0, None)`` if no
+        prefix is cached). ``depth == len(tokens)`` is a full-context hit."""
+        node, depth = self.root, 0
+        best_depth, best_state = 0, None
+        for d, tok in enumerate(tokens, start=1):
+            node = node.children.get(tok)
+            if node is None:
+                break
+            e = node.entry
+            if e is not None and e[0] == generation and e[1] >= d:
+                best_depth, best_state = d, e[2]
+        if best_depth == len(tokens):
+            self._lru.move_to_end(tuple(tokens))
+        return best_depth, best_state
+
+    def insert(self, tokens: Sequence[bytes], generation: int,
+               state: Dict) -> None:
+        """Register a freshly computed full-depth prefix ``state`` for
+        ``tokens``, installing checkpoint entries along the path."""
+        key = tuple(tokens)
+        if len(key) != self.fc:
+            raise ValueError(f"expected {self.fc} tokens, got {len(key)}")
+        depths = set(self.checkpoint_depths())
+        is_new = key not in self._lru
+        node = self.root
+        if is_new:
+            node.refs += 1
+        for d, tok in enumerate(key, start=1):
+            child = node.children.get(tok)
+            if child is None:
+                child = node.children[tok] = _Node()
+            if is_new:
+                child.refs += 1
+            if d in depths:
+                # replace only strictly older entries: a scorer still holding
+                # a pre-swap weights snapshot must not clobber a fresher
+                # generation's partial (generations are monotonic); within a
+                # generation, deeper-usable entries win
+                e = child.entry
+                if e is None or e[0] < generation or (e[0] == generation
+                                                      and e[1] < self.fc):
+                    child.entry = (generation, self.fc, state)
+            node = child
+        self._lru[key] = None
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.max_entries:
+            self._evict()
+
+    def _evict(self) -> None:
+        key, _ = self._lru.popitem(last=False)
+        node = self.root
+        node.refs -= 1
+        path = []
+        for d, tok in enumerate(key, start=1):
+            path.append((node, tok))
+            node = node.children[tok]
+            node.refs -= 1
+            # a surviving shared node may hold the *evicted* context's
+            # full-depth state; truncate it to the node's own depth (copied
+            # slices) so eviction really releases the full state and memory
+            # stays one full state per *live* context
+            if node.refs > 0 and node.entry is not None and node.entry[1] > d:
+                gen, _, s = node.entry
+                node.entry = (gen, d, {
+                    k: v.copy()
+                    for k, v in ffm.slice_context_prefix(s, d).items()})
+        # prune the unshared suffix of the path (radix-tree leaf drop)
+        for parent, tok in reversed(path):
+            child = parent.children[tok]
+            if child.refs <= 0:
+                del parent.children[tok]
+            else:
+                break

@@ -1,11 +1,12 @@
 """Serving layer: the paper's §3 serving service, both workloads.
 
-* ``FFMServer`` — the paper's path, now a thin deployment wrapper over
+* ``FFMServer`` — the paper's path, a thin deployment wrapper over
   :class:`repro.serving.engine.InferenceEngine`: receives weight updates
   through the quantized-patch channel (cache-preserving hot swaps), serves
-  candidate-scoring requests through the context cache (§5) with the FFM hot
-  loop optionally on the Pallas kernel — the two compose instead of being
-  mutually exclusive; tracks latency/hit-rate stats with percentiles.
+  candidate-scoring requests through the prefix-sharing context cache (§5)
+  with cross-request candidate dedup and the FFM hot loop optionally on the
+  Pallas kernel — the tricks compose instead of being mutually exclusive;
+  tracks latency/hit-rate stats with percentiles.
 * ``LLMServer`` — the generalization to the assigned architectures: batched
   prefill (one forward fills the KV cache) + greedy decode with optional
   shared-prefix state reuse.
@@ -26,14 +27,24 @@ from repro.train.steps import make_serve_step
 
 
 class FFMServer:
-    """DeepFFM serving instance fed by the trainer's update channel."""
+    """DeepFFM serving instance fed by the trainer's update channel.
+
+    ``prefix_stride``/``dedup`` tune the engine's prefix-sharing context
+    cache and cross-request candidate dedup (see
+    :class:`~repro.serving.engine.InferenceEngine`); the defaults enable
+    both. Weights arrive later through :meth:`apply_update`, so bucket
+    warmup (``engine.warmup``) is available once the first update lands.
+    """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm",
                  use_pallas_kernel: bool = False, cache_entries: int = 4096,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 prefix_stride: Optional[int] = 4, dedup: bool = True):
         backend = backend or ("pallas" if use_pallas_kernel else "reference")
         self.engine = InferenceEngine(cfg, model, backend=backend,
-                                      cache_entries=cache_entries)
+                                      cache_entries=cache_entries,
+                                      prefix_stride=prefix_stride,
+                                      dedup=dedup)
 
     @property
     def cfg(self) -> FFMConfig:

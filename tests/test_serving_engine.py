@@ -1,6 +1,10 @@
 """InferenceEngine behaviour: oracle equivalence (both backends), candidate
-kernel vs ref, cache survival across hot weight swaps, bucketed microbatching,
-latency percentiles, and the versioned update frames."""
+kernel vs ref, cache survival across hot weight swaps, bucketed microbatching
+with warmup-bounded compilation, torn-generation safety under concurrent
+updates, latency percentiles, and the versioned update frames."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +16,8 @@ from repro.core import deepffm
 from repro.data.synthetic import CTRStream
 from repro.kernels.ffm_interaction.ffm_interaction import ffm_candidate_matrices
 from repro.kernels.ffm_interaction.ref import ffm_candidate_matrices_ref
-from repro.serving.engine import InferenceEngine, batched_candidates_forward
+from repro.serving.engine import (InferenceEngine, batched_candidates_forward,
+                                  compute_context_tails)
 from repro.serving.server import FFMServer
 from repro.train.loop import OnlineTrainer
 
@@ -119,6 +124,85 @@ def test_bucketed_batching_bounds_compilations():
         # all eight shapes landed in the single (1, 8)-bucket compilation
         assert batched_candidates_forward._cache_size() - size_before <= 1
     assert eng.plan.bucket(1) == 8 and eng.plan.bucket(9) == 16
+
+
+def test_warmup_precompiles_all_bucket_shapes():
+    """After construction-time warmup, scoring across *all* candidate bucket
+    sizes, request-batch sizes, and prefix-tail depths triggers zero new jit
+    compilations — both for the candidate forward and the batched tail pass."""
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = InferenceEngine(CFG, params=params, min_bucket=8, prefix_stride=4,
+                          warmup_buckets=(8, 32))
+    before = (batched_candidates_forward._cache_size(),
+              compute_context_tails._cache_size())
+    stream = CTRStream(CFG, seed=5)
+    for n in (1, 7, 8, 9, 16, 17, 31, 32):  # every candidate bucket
+        assert eng.score(*stream.request(n)).shape == (n,)
+    for r in (2, 3, 5, 8):                  # every request bucket
+        eng.score_batch([stream.request(4) for _ in range(r)])
+    # prefix-shared contexts: tails start at every checkpoint depth
+    ci, cv, ki, kv = stream.request(4)
+    eng.score(ci, cv, ki, kv)
+    for keep in (4, 6):
+        ci2 = ci.copy()
+        ci2[keep:] = (ci2[keep:] + 1) % CFG.hash_space
+        eng.score(ci2, cv, ki, kv)
+    after = (batched_candidates_forward._cache_size(),
+             compute_context_tails._cache_size())
+    assert after == before, (before, after)
+
+
+def test_concurrent_updates_never_serve_torn_generation():
+    """Interleaved apply-update + scoring from threads: every score must
+    correspond to exactly one installed params version, never a mix of a
+    cached context partial from one generation and candidate work from
+    another. Weights encode their version v (lr w = v, everything else zero),
+    so any torn combination v_a*Fc + v_b*(F-Fc) of two versions is detectably
+    not in the valid score set {v * F} (versions are powers of 3)."""
+    cfg = CFG
+    versions = [float(3 ** i) for i in range(5)]
+
+    def params_v(v):
+        p = deepffm.init_params(cfg, jax.random.PRNGKey(0), "ffm")
+        p = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), p)
+        p["lr"]["w"] = jnp.full_like(p["lr"]["w"], v)
+        return p
+
+    eng = InferenceEngine(cfg, "ffm", params=params_v(versions[0]),
+                          warmup_buckets=(4, 8))  # pre-compile off-thread
+    valid = {round(v * cfg.n_fields, 3) for v in versions}
+    errors, stop = [], threading.Event()
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+
+    def scorer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            reqs = []
+            for _ in range(rng.integers(1, 4)):
+                ci = rng.integers(0, cfg.hash_space, fc).astype(np.int32)
+                ki = rng.integers(0, cfg.hash_space,
+                                  (rng.integers(1, 5), fcand)).astype(np.int32)
+                reqs.append((ci, np.ones(fc, np.float32), ki,
+                             np.ones(ki.shape, np.float32)))
+            outs = eng.score_batch(reqs)
+            got = {round(float(x), 3) for o in outs for x in np.asarray(o)}
+            if not got <= valid:
+                errors.append(got - valid)
+            if len(got) > 1:  # one snapshot per batch -> one version per batch
+                errors.append(got)
+
+    threads = [threading.Thread(target=scorer, args=(s,)) for s in (1, 2, 3)]
+    for t in threads:
+        t.start()
+    for v in versions[1:]:
+        time.sleep(0.1)  # let scorers run against the current version
+        eng.install_params(params_v(v))
+    time.sleep(0.1)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    assert eng.generation == len(versions) - 1  # constructor params are gen 0
 
 
 def test_score_batch_matches_single_requests():

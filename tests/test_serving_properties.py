@@ -1,0 +1,344 @@
+"""Property-based serving equivalence suite.
+
+Random request mixes with *controlled* context-prefix overlap and candidate
+duplication must score identically to the ``deepffm.forward`` oracle on the
+concatenated feature rows — for both backends, through both ``score`` and
+``score_batch``, across prefix-cache strides (including the exact-match
+``None`` mode) and with dedup on or off. The hypothesis versions explore the
+knob space when hypothesis is installed (via ``_hypothesis_compat``); the
+parametrized versions pin a deterministic grid so CI always exercises the
+same invariants.
+
+Also here: the strictly-less-work property (prefix cache + dedup must score
+fewer rows and compute fewer context partials than the PR 1 engine on
+overlapping traffic) and the engine/oracle agreement under weight hot swaps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.common.config import FFMConfig
+from repro.core import deepffm, ffm
+from repro.serving.engine import InferenceEngine
+from repro.serving.prefix_cache import context_tokens
+
+CFG = FFMConfig(n_fields=10, context_fields=6, hash_space=2**11, k=4,
+                mlp_hidden=(8,))
+
+
+def _params(cfg, seed=0):
+    params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), "deepffm")
+    params["lr"]["w"] = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), params["lr"]["w"].shape) * 0.1
+    return params
+
+
+PARAMS = _params(CFG)
+
+
+def make_mix(rng, cfg, n_requests, prefix_overlap, dup_rate, max_cands=7,
+             n_bases=2, pool_size=6):
+    """Random request mix with controlled overlap structure.
+
+    ``prefix_overlap`` is the probability a request's context is a variant of
+    one of ``n_bases`` base contexts (sharing a random-length field prefix,
+    possibly the whole context); ``dup_rate`` the probability a candidate row
+    is drawn from a small shared pool rather than fresh — together they
+    produce the prefix-shared partial contexts and cross-request candidate
+    repetition of real traffic.
+    """
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+
+    def ctx():
+        return (rng.integers(0, cfg.hash_space, fc).astype(np.int32),
+                rng.normal(1, 0.25, fc).astype(np.float32))
+
+    bases = [ctx() for _ in range(n_bases)]
+    pool = [(rng.integers(0, cfg.hash_space, fcand).astype(np.int32),
+             rng.normal(1, 0.25, fcand).astype(np.float32))
+            for _ in range(pool_size)]
+    reqs = []
+    for _ in range(n_requests):
+        if rng.random() < prefix_overlap:
+            bi, bv = bases[rng.integers(0, n_bases)]
+            keep = int(rng.integers(1, fc + 1))
+            ci, cv = bi.copy(), bv.copy()
+            if keep < fc:
+                ci[keep:] = rng.integers(0, cfg.hash_space, fc - keep)
+                cv[keep:] = rng.normal(1, 0.25, fc - keep)
+        else:
+            ci, cv = ctx()
+        n = int(rng.integers(1, max_cands + 1))
+        ki = np.empty((n, fcand), np.int32)
+        kv = np.empty((n, fcand), np.float32)
+        for c in range(n):
+            if rng.random() < dup_rate:
+                ki[c], kv[c] = pool[rng.integers(0, pool_size)]
+            else:
+                ki[c] = rng.integers(0, cfg.hash_space, fcand)
+                kv[c] = rng.normal(1, 0.25, fcand)
+        reqs.append((ci, cv, ki, kv))
+    return reqs
+
+
+def oracle(cfg, params, model, req):
+    """Full ``deepffm.forward`` on the concatenated feature rows."""
+    ci, cv, ki, kv = req
+    n = ki.shape[0]
+    idx = np.concatenate(
+        [np.broadcast_to(ci, (n, cfg.context_fields)), ki], axis=1)
+    val = np.concatenate(
+        [np.broadcast_to(cv, (n, cfg.context_fields)), kv], axis=1)
+    return np.asarray(deepffm.forward(cfg, params, jnp.asarray(idx),
+                                      jnp.asarray(val), model))
+
+
+def _check_mix(backend, model, seed, prefix_overlap, dup_rate, *,
+               stride=3, dedup=True, batched=True, n_requests=6):
+    rng = np.random.default_rng(seed)
+    reqs = make_mix(rng, CFG, n_requests, prefix_overlap, dup_rate)
+    eng = InferenceEngine(CFG, model, backend=backend, params=PARAMS,
+                          prefix_stride=stride, dedup=dedup, min_bucket=8)
+    if batched:
+        outs = eng.score_batch(reqs)
+    else:
+        outs = [eng.score(*r) for r in reqs]
+    for req, out in zip(reqs, outs):
+        np.testing.assert_allclose(np.asarray(out),
+                                   oracle(CFG, PARAMS, model, req),
+                                   rtol=2e-4, atol=2e-5)
+    assert eng.stats.candidates == sum(r[2].shape[0] for r in reqs)
+    assert eng.stats.rows_scored <= eng.stats.candidates
+
+
+# -- deterministic grid (always runs) ---------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("batched", [True, False])
+@pytest.mark.parametrize("seed,overlap,dup", [(0, 0.8, 0.8), (1, 0.0, 0.0),
+                                              (2, 1.0, 0.5), (3, 0.5, 1.0)])
+def test_mix_matches_oracle(backend, batched, seed, overlap, dup):
+    _check_mix(backend, "deepffm", seed, overlap, dup, batched=batched)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 6, None])
+def test_mix_matches_oracle_any_stride(stride):
+    """Checkpoint spacing (incl. exact-match mode) never changes scores."""
+    _check_mix("reference", "deepffm", 4, 0.9, 0.6, stride=stride)
+
+
+@pytest.mark.parametrize("model", ["ffm", "deepffm"])
+@pytest.mark.parametrize("dedup", [True, False])
+def test_mix_matches_oracle_dedup_modes(model, dedup):
+    _check_mix("reference", model, 5, 0.7, 0.9, dedup=dedup)
+
+
+def test_degenerate_batches_match_oracle():
+    """All-identical requests and single-candidate requests stay exact."""
+    rng = np.random.default_rng(6)
+    fc, fcand = CFG.context_fields, CFG.n_fields - CFG.context_fields
+    ci = rng.integers(0, CFG.hash_space, fc).astype(np.int32)
+    cv = rng.normal(1, 0.25, fc).astype(np.float32)
+    ki = rng.integers(0, CFG.hash_space, (3, fcand)).astype(np.int32)
+    kv = rng.normal(1, 0.25, (3, fcand)).astype(np.float32)
+    eng = InferenceEngine(CFG, params=PARAMS)
+    outs = eng.score_batch([(ci, cv, ki, kv)] * 5 + [(ci, cv, ki[:1], kv[:1])])
+    want = oracle(CFG, PARAMS, "deepffm", (ci, cv, ki, kv))
+    for out in outs[:5]:
+        np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(outs[5]), want[:1],
+                               rtol=2e-4, atol=2e-5)
+    # six requests, one unique context, three unique candidate rows
+    assert eng.stats.candidates == 16 and eng.stats.rows_scored == 3
+    assert eng.stats.ctx_partials_full == 1
+
+
+# -- hypothesis exploration (skips when hypothesis is absent) ----------------
+
+@given(backend=st.sampled_from(["reference", "pallas"]),
+       seed=st.integers(0, 10_000),
+       overlap=st.floats(0.0, 1.0), dup=st.floats(0.0, 1.0),
+       stride=st.sampled_from([1, 2, 3, 6, None]),
+       dedup=st.booleans(), batched=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_mix_matches_oracle_hypothesis(backend, seed, overlap, dup, stride,
+                                       dedup, batched):
+    _check_mix(backend, "deepffm", seed, overlap, dup, stride=stride,
+               dedup=dedup, batched=batched)
+
+
+@given(n_fields=st.integers(4, 12), ctx_frac=st.floats(0.2, 0.8),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_mix_matches_oracle_any_split_hypothesis(n_fields, ctx_frac, seed):
+    """Any context/candidate field split, fresh params per config."""
+    fc = max(1, min(n_fields - 1, int(n_fields * ctx_frac)))
+    cfg = FFMConfig(n_fields=n_fields, context_fields=fc, hash_space=2**10,
+                    k=4, mlp_hidden=(8,))
+    params = _params(cfg, seed % 97)
+    rng = np.random.default_rng(seed)
+    reqs = make_mix(rng, cfg, 4, 0.8, 0.8, max_cands=5)
+    eng = InferenceEngine(cfg, params=params, prefix_stride=2, min_bucket=4)
+    for req, out in zip(reqs, eng.score_batch(reqs)):
+        np.testing.assert_allclose(np.asarray(out),
+                                   oracle(cfg, params, "deepffm", req),
+                                   rtol=5e-4, atol=5e-4)
+
+
+# -- strictly-less-work vs the PR 1 engine -----------------------------------
+
+def test_prefix_and_dedup_strictly_reduce_work():
+    """On overlapping traffic the prefix cache + dedup engine scores strictly
+    fewer candidate rows and computes strictly fewer (and shallower) context
+    partials than the PR 1 exact-match/no-dedup engine, with identical
+    predictions (both match the uncached oracle within 1e-5)."""
+    rng = np.random.default_rng(7)
+    batches = [make_mix(rng, CFG, 6, 0.9, 0.8) for _ in range(4)]
+    pr1 = InferenceEngine(CFG, params=PARAMS, prefix_stride=None, dedup=False)
+    new = InferenceEngine(CFG, params=PARAMS, prefix_stride=2, dedup=True)
+    for reqs in batches:
+        outs_pr1 = pr1.score_batch(reqs)
+        outs_new = new.score_batch(reqs)
+        for req, a, b in zip(reqs, outs_pr1, outs_new):
+            want = oracle(CFG, PARAMS, "deepffm", req)
+            np.testing.assert_allclose(np.asarray(a), want, atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(b), want, atol=1e-5, rtol=1e-5)
+    assert new.stats.candidates == pr1.stats.candidates
+    assert new.stats.rows_scored < pr1.stats.rows_scored
+    assert new.stats.ctx_partials_full < pr1.stats.ctx_partials_full
+    assert new.stats.ctx_tail_fields < pr1.stats.ctx_tail_fields
+    # the histogram actually recorded intermediate-depth prefix hits
+    fc = CFG.context_fields
+    assert any(0 < d < fc for d in new.prefix_hit_depths)
+    assert all(d in (0, fc) for d in pr1.prefix_hit_depths)
+
+
+def test_empty_candidate_slates():
+    """Zero-candidate requests return empty logits, alone or mixed."""
+    rng = np.random.default_rng(10)
+    fc, fcand = CFG.context_fields, CFG.n_fields - CFG.context_fields
+    ci = rng.integers(0, CFG.hash_space, fc).astype(np.int32)
+    cv = rng.normal(1, 0.25, fc).astype(np.float32)
+    empty = (ci, cv, np.zeros((0, fcand), np.int32),
+             np.zeros((0, fcand), np.float32))
+    ki = rng.integers(0, CFG.hash_space, (4, fcand)).astype(np.int32)
+    kv = rng.normal(1, 0.25, (4, fcand)).astype(np.float32)
+    eng = InferenceEngine(CFG, params=PARAMS)
+    outs = eng.score_batch([empty, empty])
+    assert [o.shape for o in outs] == [(0,), (0,)]
+    outs = eng.score_batch([empty, (ci, cv, ki, kv)])
+    assert outs[0].shape == (0,)
+    np.testing.assert_allclose(np.asarray(outs[1]),
+                               oracle(CFG, PARAMS, "deepffm",
+                                      (ci, cv, ki, kv)),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_split_request_roundtrips_through_engine():
+    """``deepffm.split_request`` inverts the oracle's concatenation: scoring
+    the split of full feature rows matches ``deepffm.forward`` on the rows."""
+    stream_batch = np.random.default_rng(8)
+    n, fc = 5, CFG.context_fields
+    idx = stream_batch.integers(0, CFG.hash_space,
+                                (n, CFG.n_fields)).astype(np.int32)
+    idx[:, :fc] = idx[0, :fc]  # one request = one shared context
+    val = stream_batch.normal(1, 0.25, (n, CFG.n_fields)).astype(np.float32)
+    val[:, :fc] = val[0, :fc]
+    ci, cv, ki, kv = deepffm.split_request(CFG, idx, val)
+    assert ki.shape == (n, CFG.n_fields - fc)
+    eng = InferenceEngine(CFG, params=PARAMS)
+    got = np.asarray(eng.score(ci, cv, ki, kv))
+    want = np.asarray(deepffm.forward(CFG, PARAMS, jnp.asarray(idx),
+                                      jnp.asarray(val)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+# -- prefix decomposition unit properties ------------------------------------
+
+def test_eviction_releases_full_states_on_shared_nodes():
+    """Evicting a context must not leave its full-depth state referenced by
+    surviving shared checkpoint nodes: entries the evicted path passes are
+    truncated (copied) to the node's own depth, and scores stay correct."""
+    rng = np.random.default_rng(9)
+    fc = CFG.context_fields
+    eng = InferenceEngine(CFG, params=PARAMS, prefix_stride=2,
+                          cache_entries=2)
+    base = (rng.integers(0, CFG.hash_space, fc).astype(np.int32),
+            rng.normal(1, 0.25, fc).astype(np.float32))
+    reqs = []
+    for _ in range(4):  # 4 contexts sharing the first 2 fields, LRU cap 2
+        ci, cv = base[0].copy(), base[1].copy()
+        ci[2:] = rng.integers(0, CFG.hash_space, fc - 2)
+        ki = rng.integers(0, CFG.hash_space,
+                          (3, CFG.n_fields - fc)).astype(np.int32)
+        kv = rng.normal(1, 0.25, (3, CFG.n_fields - fc)).astype(np.float32)
+        reqs.append((ci, cv, ki, kv))
+    eng.score_batch(reqs)  # one multi-context miss burst
+    assert len(eng._cache) == 2
+    # cached states own their memory: not views into the stacked miss-group
+    # buffer (which would keep every member's state alive past eviction)
+    for key in eng._cache._lru:
+        node = eng._cache.root
+        for tok in key:
+            node = node.children[tok]
+        assert all(v.base is None for v in node.entry[2].values())
+    # the shared depth-2 checkpoint node survived eviction but holds only a
+    # depth-2 slice, not an evicted context's full (fc, F, k) state
+    node = eng._cache.root
+    for tok in context_tokens(*base)[:2]:
+        node = node.children[tok]
+    assert node.refs == 2 and node.entry is not None
+    assert node.entry[1] == 2 and node.entry[2]["emb"].shape[0] == 2
+    # and scoring after eviction still matches the oracle
+    for req in reqs:
+        np.testing.assert_allclose(np.asarray(eng.score(*req)),
+                                   oracle(CFG, PARAMS, "deepffm", req),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("fc", [1, 2, 5, 8])
+def test_prefix_pair_order_is_append_only(fc):
+    ii, jj = ffm.prefix_pair_order(fc)
+    assert ii.size == ffm.prefix_pair_count(fc)
+    assert (ii < jj).all()
+    # depth-p pairs are exactly the first prefix_pair_count(p) entries
+    for p in range(fc + 1):
+        n = ffm.prefix_pair_count(p)
+        assert (jj[:n] < p).all()
+        assert n == ii.size or jj[n] >= p
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_extend_context_prefix_composes(seed):
+    """Extending 0->p then p->Fc equals extending 0->Fc in one go, and the
+    permuted pair vector equals the seed ``compute_context`` ctx-ctx block."""
+    cfg = CFG
+    rng = np.random.default_rng(seed)
+    fc = cfg.context_fields
+    ci = rng.integers(0, cfg.hash_space, fc).astype(np.int32)
+    cv = rng.normal(1, 0.25, fc).astype(np.float32)
+    emb, w = PARAMS["ffm"]["emb"], PARAMS["lr"]["w"]
+    empty = ffm.empty_context_prefix(cfg, emb.dtype)
+    whole = ffm.extend_context_prefix(cfg, emb, w, empty, ci, cv)
+    for p in (1, fc // 2, fc - 1):
+        head = ffm.extend_context_prefix(cfg, emb, w, empty, ci[:p], cv[:p])
+        two = ffm.extend_context_prefix(cfg, emb, w, head, ci[p:], cv[p:])
+        for key in whole:
+            np.testing.assert_allclose(np.asarray(two[key]),
+                                       np.asarray(whole[key]),
+                                       rtol=1e-6, atol=1e-6)
+        sliced = ffm.slice_context_prefix(whole, p)
+        for key in head:
+            np.testing.assert_allclose(np.asarray(sliced[key]),
+                                       np.asarray(head[key]),
+                                       rtol=1e-6, atol=1e-6)
+    # prefix order + permutation reproduce the global cc pair values
+    (pi, pj), cc, _, _ = ffm.pair_split(cfg)
+    e = np.asarray(jnp.take(emb, jnp.asarray(ci), axis=0))
+    dots = np.einsum("ijk,jik->ij", e[:, :fc], e[:, :fc])
+    want_cc = (dots * np.outer(cv, cv))[pi[cc], pj[cc]]
+    got_cc = np.asarray(whole["pairs"])[ffm.prefix_to_cc_perm(cfg)]
+    np.testing.assert_allclose(got_cc, want_cc, rtol=1e-5, atol=1e-6)
