@@ -14,6 +14,7 @@ BENCHES = (
     ("table4_quantization", "benchmarks.bench_quantization"),
     ("fig4_context_cache", "benchmarks.bench_context_cache"),
     ("serving_engine", "benchmarks.bench_serving_engine"),
+    ("training_pipeline", "benchmarks.bench_training_pipeline"),
     ("fig5_simd", "benchmarks.bench_simd"),
     ("fig6_patcher", "benchmarks.bench_patcher"),
     ("sec4.1_prefetch", "benchmarks.bench_prefetch"),
@@ -21,7 +22,7 @@ BENCHES = (
 )
 
 
-SMOKE = ("serving_engine",)  # fast CI smoke subset (implies --quick)
+SMOKE = ("serving_engine", "training_pipeline")  # fast CI smoke (implies --quick)
 
 
 def main() -> None:

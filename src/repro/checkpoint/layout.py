@@ -28,7 +28,13 @@ def _np_dtype(name: str) -> np.dtype:
     return _EXTRA_DTYPES.get(name) or np.dtype(name)
 
 
-def _path_str(path) -> str:
+def path_str(path) -> str:
+    """Canonical "a/b/c" string for a jax key path — the manifest key.
+
+    Public API: both sides of the transfer channel (``Sender`` serialization
+    and ``Receiver.materialize``) key leaves by this exact string, so it is
+    part of the wire contract, not an implementation detail.
+    """
     parts = []
     for p in path:
         if hasattr(p, "key"):
@@ -40,9 +46,12 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+_path_str = path_str  # pre-PR-3 private alias, kept for compatibility
+
+
 def flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = [(_path_str(path), np.asarray(leaf)) for path, leaf in leaves]
+    out = [(path_str(path), np.asarray(leaf)) for path, leaf in leaves]
     out.sort(key=lambda kv: kv[0])
     return out
 
@@ -73,7 +82,7 @@ def from_bytes(buf: bytes, manifest: List[Dict[str, Any]], like=None):
     if like is None:
         return flat
     leaves = jax.tree_util.tree_flatten_with_path(like)
-    vals = [flat[_path_str(path)] for path, _ in leaves[0]]
+    vals = [flat[path_str(path)] for path, _ in leaves[0]]
     return jax.tree_util.tree_unflatten(leaves[1], vals)
 
 

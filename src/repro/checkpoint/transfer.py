@@ -13,15 +13,27 @@ The compounding is non-linear: quantization snaps small weight drifts to the
 same 16-bit bucket, so most bytes of consecutive quantized files are
 *identical* and the byte-diff collapses.
 
+On top of any mode, a trainer that knows *which embedding rows it touched*
+this round (online learning touches only the rows whose features occurred —
+Juan et al. 2017) can ship a **row-delta frame** (``KIND_DELTA``): the byte
+ranges of the touched rows plus every dense (non-row-sparse) leaf, with an
+XOR-against-previous payload sliced from the serialized buffer. Steady-state
+update bytes then scale with rows touched, not model size; the XOR stream's
+near-zero entropy (codes move by a few buckets per round) compresses below
+the byte-diff's changed-bytes-plus-varints, compounding with the quantized
+grid hysteresis. Layout changes, grid regrids, and the first round fall back
+to full/patch frames.
+
 ``Sender`` keeps the last shipped byte-buffer; ``Receiver`` reconstructs the
-inference weights by applying patches ("serving layer on-the-fly reconstructs
-the final inference weights via a patching mechanism").
+inference weights by applying patches/deltas ("serving layer on-the-fly
+reconstructs the final inference weights via a patching mechanism").
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,7 +42,7 @@ from repro.core import patcher, quantization as Q
 
 MODES = ("raw", "quant", "patch", "patch+quant")
 
-KIND_FULL, KIND_PATCH = 0, 1
+KIND_FULL, KIND_PATCH, KIND_DELTA = 0, 1, 2
 
 
 @dataclass(frozen=True)
@@ -42,7 +54,7 @@ class UpdateFrame:
     serving layer tag cache generations without re-deriving state from bytes.
     """
 
-    kind: int        # KIND_FULL | KIND_PATCH
+    kind: int        # KIND_FULL | KIND_PATCH | KIND_DELTA
     mode: str        # one of MODES
     version: int     # trainer round stamp, monotonically increasing
     payload: bytes   # framed sidecar + diffable body
@@ -50,6 +62,10 @@ class UpdateFrame:
     @property
     def is_patch(self) -> bool:
         return self.kind == KIND_PATCH
+
+    @property
+    def is_delta(self) -> bool:
+        return self.kind == KIND_DELTA
 
 
 _FRAME_MAGIC = 0xFB  # guards against version-skewed / foreign blobs
@@ -69,6 +85,70 @@ def unframe(update: bytes) -> UpdateFrame:
     return UpdateFrame(kind, mode, version, update[7 + mlen :])
 
 
+# ---------------------------------------------------------------------------
+# Row-delta frame body: sorted byte ranges (varint gap/length) + XOR payload
+# ---------------------------------------------------------------------------
+
+_DELTA_HDR = "<IQ"  # (n_ranges: u32, compressed varint-metadata length: u64)
+
+
+def _encode_delta(starts: np.ndarray, lengths: np.ndarray, old: bytes,
+                  new: bytes, compress_level: int = 6) -> bytes:
+    """Ranges (sorted, non-overlapping byte spans) -> delta body.
+
+    Gap encoding mirrors the patcher ("relative locations are stored"), but a
+    range is a whole touched row — one varint pair per row instead of one per
+    contiguous changed-byte run. The payload is ``old XOR new`` over the
+    ranges: steady-state AdaGrad steps move a 16-bit quantized code by a few
+    buckets, so the XOR stream is mostly zero high bytes and low-entropy low
+    bytes — zlib collapses it well below the raw changed bytes a byte-diff
+    ships, and the trick is mode-agnostic (close floats zero their shared
+    exponent/mantissa prefix the same way).
+    """
+    prev_end = np.concatenate([[0], (starts + lengths)[:-1]])
+    gaps = (starts - prev_end).astype(np.uint64)
+    meta = zlib.compress(
+        patcher.varint_encode(gaps).tobytes()
+        + patcher.varint_encode(lengths.astype(np.uint64)).tobytes(),
+        compress_level)
+    a = np.frombuffer(old, np.uint8)
+    b = np.frombuffer(new, np.uint8)
+    payload = (np.concatenate([a[s:s + n] ^ b[s:s + n]
+                               for s, n in zip(starts, lengths)])
+               if starts.size else np.zeros(0, np.uint8))
+    return (struct.pack(_DELTA_HDR, starts.size, len(meta)) + meta
+            + zlib.compress(payload.tobytes(), compress_level))
+
+
+def _decode_delta(body: bytes) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Delta body -> (starts, lengths, XOR payload bytes)."""
+    hdr = struct.calcsize(_DELTA_HDR)
+    n, meta_len = struct.unpack_from(_DELTA_HDR, body, 0)
+    meta = np.frombuffer(zlib.decompress(body[hdr:hdr + meta_len]), np.uint8)
+    vals = patcher.varint_decode(meta)
+    gaps = vals[:n].astype(np.int64)
+    lengths = vals[n:2 * n].astype(np.int64)
+    starts = np.cumsum(gaps + np.concatenate([[0], lengths[:-1]]))
+    payload = np.frombuffer(zlib.decompress(body[hdr + meta_len:]), np.uint8)
+    return starts, lengths, payload
+
+
+def _merge_ranges(starts: np.ndarray, lengths: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Sort byte ranges and coalesce adjacent/contiguous ones."""
+    if starts.size == 0:
+        return starts.astype(np.int64), lengths.astype(np.int64)
+    order = np.argsort(starts, kind="stable")
+    starts, lengths = starts[order], lengths[order]
+    ends = starts + lengths
+    # a range opens a new merged run iff it does not touch the previous end
+    new_run = np.ones(starts.size, bool)
+    new_run[1:] = starts[1:] > np.maximum.accumulate(ends[:-1])
+    run_starts = starts[new_run]
+    run_ends = np.maximum.reduceat(ends, np.flatnonzero(new_run))
+    return run_starts.astype(np.int64), (run_ends - run_starts).astype(np.int64)
+
+
 @dataclass
 class Sender:
     """Training-job side: turns a params pytree into a (small) update blob."""
@@ -77,14 +157,26 @@ class Sender:
     alpha: int = 2
     beta: int = 2
     version: int = 0
+    delta_verify: bool = False  # debug: scan for changes outside a delta's rows
     _last: Optional[bytes] = None
     _last_meta: Optional[Q.QuantMeta] = None
     manifest: Any = None
+    _leaf_info: Optional[List[Tuple[str, int, int, int, int, tuple]]] = None
 
     def _serialize(self, params) -> Tuple[bytes, bytes]:
         """-> (fixed-length diffable buffer, variable-length sidecar)."""
         flat = layout.flatten_with_paths(params)
         self.manifest = layout.to_bytes(params)[1]
+        # per-leaf layout for row-delta framing: element offset into the
+        # concatenated weight space and byte offset into the raw buffer
+        info, elem_off = [], 0
+        for ent in self.manifest:
+            n = int(np.prod(ent["shape"]) or 1)
+            itemsize = int(np.dtype(layout._np_dtype(ent["dtype"])).itemsize)
+            info.append((ent["path"], elem_off, ent["offset"], itemsize, n,
+                         tuple(ent["shape"])))
+            elem_off += n
+        self._leaf_info = info
         if "quant" in self.mode:
             import jax.numpy as jnp
 
@@ -107,11 +199,78 @@ class Sender:
             return fixed, sidecar
         return b"".join(np.asarray(a).tobytes() for _, a in flat), b""
 
-    def make_update(self, params, version: Optional[int] = None) -> bytes:
-        """Emit one versioned update blob. ``version`` (the trainer's round
-        stamp) defaults to auto-increment; explicit stamps must be monotonic."""
+    def _touched_byte_ranges(self, touched: Dict[str, Any]
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Touched rows per leaf path -> merged (starts, lengths) byte ranges
+        of the serialized buffer. Leaves absent from ``touched`` are dense —
+        their whole span ships. Quantized buffers are 2 bytes/element after
+        the header; raw buffers use each leaf's manifest offset/itemsize."""
+        quant = "quant" in self.mode
+        known = {path for path, *_ in self._leaf_info}
+        unknown = set(touched) - known
+        if unknown:
+            raise ValueError(f"touched paths not in layout: {sorted(unknown)}")
+        starts, lengths = [], []
+        for path, elem_off, byte_off, itemsize, n_elems, shape in self._leaf_info:
+            rows = touched.get(path)
+            if quant:
+                base, bpe = Q.HEADER_SIZE + 2 * elem_off, 2
+            else:
+                base, bpe = byte_off, itemsize
+            if rows is None or len(shape) < 1:
+                starts.append(np.asarray([base], np.int64))
+                lengths.append(np.asarray([bpe * n_elems], np.int64))
+                continue
+            rows = np.unique(np.asarray(rows, np.int64))
+            if rows.size and (rows[0] < 0 or rows[-1] >= shape[0]):
+                raise ValueError(f"touched rows out of range for {path!r}")
+            row_elems = n_elems // max(shape[0], 1)
+            starts.append(base + rows * (bpe * row_elems))
+            lengths.append(np.full(rows.size, bpe * row_elems, np.int64))
+        return _merge_ranges(np.concatenate(starts), np.concatenate(lengths))
+
+    def make_update(self, params, version: Optional[int] = None,
+                    touched: Optional[Dict[str, Any]] = None) -> bytes:
+        """Emit one versioned update blob.
+
+        ``version`` (the trainer's round stamp) defaults to auto-increment;
+        explicit stamps must be strictly monotonic (enforced — a stale stamp
+        would corrupt the serving engine's generation bookkeeping).
+
+        ``touched`` maps leaf paths (``layout.path_str`` keys) to the row
+        indices the trainer updated this round; leaves not listed are treated
+        as dense and ship whole. When given — and the layout and quantization
+        grid are unchanged since the last update — a ``KIND_DELTA`` frame is
+        emitted whose bytes scale with rows touched; otherwise the usual
+        full/patch framing applies.
+        """
+        if version is not None and version <= self.version:
+            raise ValueError(
+                f"non-monotonic update version {version} (last shipped "
+                f"{self.version}); round stamps must strictly increase")
         cur, sidecar = self._serialize(params)
-        if "patch" in self.mode and self._last is not None and len(self._last) == len(cur):
+        comparable = self._last is not None and len(self._last) == len(cur)
+        # a quant-grid regrid changes codes of untouched rows too: the delta
+        # precondition is a byte-identical header (grid hysteresis makes this
+        # the steady state), else fall back to a full-space frame
+        grid_stable = (comparable and
+                       ("quant" not in self.mode
+                        or cur[:Q.HEADER_SIZE] == self._last[:Q.HEADER_SIZE]))
+        if touched is not None and grid_stable:
+            starts, lens = self._touched_byte_ranges(touched)
+            if self.delta_verify:
+                a = np.frombuffer(self._last, np.uint8)
+                b = np.frombuffer(cur, np.uint8)
+                inside = np.zeros(a.size, bool)
+                for s, n in zip(starts, lens):
+                    inside[s:s + n] = True
+                bad = np.flatnonzero((a != b) & ~inside)
+                if bad.size:
+                    raise ValueError(
+                        f"delta_verify: {bad.size} changed bytes outside the "
+                        f"touched rows (first at {int(bad[0])})")
+            body, kind = _encode_delta(starts, lens, self._last, cur), KIND_DELTA
+        elif "patch" in self.mode and comparable:
             body, kind = patcher.diff(self._last, cur), KIND_PATCH
         else:
             # first round (or layout change) ships the full file
@@ -132,6 +291,14 @@ class Receiver:
 
     version: int = 0  # stamp of the last applied update
     mode: Optional[str] = None
+    # union of byte ranges changed by delta frames *since the last
+    # materialize* (None = unknown/full), plus the last materialized flat f32
+    # space: together they enable *incremental* dequantization — decode cost
+    # scales with rows touched, like the frame. Several deltas may land
+    # between materialize calls; their ranges accumulate. Any full/patch
+    # frame resets to "unknown" (full decode).
+    _delta_ranges: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    _flat: Optional[np.ndarray] = None
 
     def apply_update(self, update: bytes) -> bytes:
         frame = unframe(update)
@@ -143,21 +310,91 @@ class Receiver:
             if self._current is None:
                 raise ValueError("patch received before any full weight file")
             self._current = patcher.apply_patch(self._current, body)
+            self._delta_ranges = None
+        elif frame.is_delta:
+            if self._current is None:
+                raise ValueError("row delta received before any full weight file")
+            starts, lengths, xor = _decode_delta(body)
+            cur = np.frombuffer(self._current, np.uint8).copy()
+            if starts.size and int(starts[-1] + lengths[-1]) > cur.size:
+                raise ValueError("row delta exceeds current weight buffer "
+                                 "(layout skew between trainer and server)")
+            pos = 0
+            for s, n in zip(starts, lengths):
+                cur[s:s + n] ^= xor[pos:pos + n]
+                pos += n
+            self._current = cur.tobytes()
+            if self._delta_ranges is not None:
+                # several deltas between materialize calls: union the ranges.
+                # (When None — no materialize since the last full/patch frame
+                # — _flat is stale and must NOT be re-armed by a delta; the
+                # next materialize decodes fully and resets the accumulator.)
+                self._delta_ranges = _merge_ranges(
+                    np.concatenate([self._delta_ranges[0], starts]),
+                    np.concatenate([self._delta_ranges[1], lengths]))
         else:
             self._current = body
+            self._delta_ranges = None
         self.version, self.mode = frame.version, frame.mode
         return self._current
 
-    def materialize(self, mode: Optional[str] = None, manifest=None, like=None):
+    def materialize(self, mode: Optional[str] = None, manifest=None, like=None,
+                    pace: Optional[Tuple[int, float]] = None):
         """Decode current bytes back into a params pytree (dequantizing if needed).
 
-        ``mode`` defaults to the mode of the last applied update frame."""
+        ``mode`` defaults to the mode of the last applied update frame.
+
+        ``pace`` — ``(chunk_elems, sleep_s)`` — dequantizes in chunks with a
+        sleep between them: cooperative throttling for a background ingest
+        thread, bounding how long one decode burst can monopolize memory
+        bandwidth/CPU against concurrent request threads. Freshness degrades
+        by the summed sleeps; request latency doesn't.
+        """
         if self._current is None:
             raise ValueError("no update applied yet — apply_update first")
         mode = self.mode if mode is None else mode
         buf = self._current
         if "quant" in mode:
-            w = Q.dequantize_from_bytes(buf)
+            import time as _time
+
+            chunk, sleep_s = pace if pace is not None else (0, 0.0)
+            q, meta, outliers = Q.from_bytes(buf)
+            w_min = np.float32(meta.w_min)
+            bucket = np.float32(meta.bucket_size)
+            if (self._delta_ranges is not None and self._flat is not None
+                    and self._flat.size == meta.n):
+                # incremental: the last frame was a row delta, so only its
+                # byte ranges changed codes — copy the previous flat space
+                # (fast memcpy into the standby buffer) and re-dequantize the
+                # touched elements; decode cost scales with rows touched,
+                # matching the frame bytes. (``_flat`` holds pure grid
+                # values; the frame's outlier sidecar — complete per round —
+                # is reapplied below like on the full path.)
+                w = self._flat.copy()
+                done = 0
+                for s, n in zip(*self._delta_ranges):
+                    e0, en = (s - Q.HEADER_SIZE) // 2, n // 2
+                    sl = slice(e0, e0 + en)
+                    w[sl] = w_min + q[sl].astype(np.float32) * bucket
+                    done += en
+                    if chunk and sleep_s and done >= chunk:
+                        _time.sleep(sleep_s)
+                        done = 0
+            elif pace is None:
+                w = Q.dequantize_from_bytes(buf)
+            else:
+                w = np.empty(meta.n, np.float32)
+                for off in range(0, meta.n, chunk):
+                    sl = slice(off, min(off + chunk, meta.n))
+                    w[sl] = w_min + q[sl].astype(np.float32) * bucket
+                    if sleep_s:
+                        _time.sleep(sleep_s)
+                if meta.n_outliers:
+                    w[outliers[0].astype(np.int64)] = outliers[1]
+            self._flat = w
+            # fresh accumulation point: deltas landing after this materialize
+            # union into an empty range set against the new _flat
+            self._delta_ranges = (np.zeros(0, np.int64), np.zeros(0, np.int64))
             if self._sidecar:
                 (n_out,) = struct.unpack_from("<Q", self._sidecar, 0)
                 idx = np.frombuffer(self._sidecar, "<u8", count=n_out, offset=8)
@@ -176,7 +413,15 @@ class Receiver:
             import jax
 
             leaves = jax.tree_util.tree_flatten_with_path(like)
-            vals = [out[layout._path_str(path)].astype(np.asarray(leaf).dtype)
-                    for path, leaf in leaves[0]]
+            # dtype cast only when needed: materialize runs on the serving
+            # engine's update-pipe thread, and a gratuitous full-space copy
+            # is CPU stolen from concurrent scorers
+            vals = [
+                arr if arr.dtype == np.asarray(leaf).dtype
+                else arr.astype(np.asarray(leaf).dtype)
+                for arr, leaf in
+                ((out[layout.path_str(path)], leaf)
+                 for path, leaf in leaves[0])
+            ]
             return jax.tree_util.tree_unflatten(leaves[1], vals)
         return layout.from_bytes(buf, manifest, like=like)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.common import pspec
 from repro.common.config import FFMConfig
 from repro.common.pspec import ParamSpec
-from repro.core import ffm
+from repro.core import ffm, sparse_updates
 
 
 def _mlp_specs(cfg: FFMConfig, d_in: int) -> Dict[str, Any]:
@@ -37,18 +37,37 @@ def _mlp_specs(cfg: FFMConfig, d_in: int) -> Dict[str, Any]:
     return sp
 
 
-def mlp_apply(cfg: FFMConfig, p, x, *, return_preacts: bool = False):
-    """ReLU MLP head. ``return_preacts`` feeds §4.3 sparse-update analysis."""
+def mlp_apply(cfg: FFMConfig, p, x, *, return_preacts: bool = False,
+              return_masks: bool = False, sparse_backward: bool = True):
+    """ReLU MLP head.
+
+    Hidden layers route through :func:`sparse_updates.relu_linear` by default,
+    so the §4.3 zero-global-gradient backward (the activation mask applied
+    *before* the weight-gradient matmuls) is on for every DeepFFM training
+    step — algebraically identical to autodiff, equivalence-tested.
+    ``sparse_backward=False`` keeps the plain autodiff path (the oracle).
+
+    ``return_masks`` additionally returns the per-hidden-layer (B, H)
+    activation masks that feed ``sparse_updates.skip_stats``;
+    ``return_preacts`` returns raw pre-activations (legacy §4.3 analysis).
+    """
     n = len(cfg.mlp_hidden) + 1
-    preacts = []
-    for i in range(n):
-        x = jnp.einsum("bi,ij->bj", x, p[f"w{i}"]) + p[f"b{i}"]
-        if i < n - 1:
-            preacts.append(x)
-            x = jnp.maximum(x, 0)  # ReLU — the zero-gradient source for §4.3
+    preacts, masks = [], []
+    for i in range(n - 1):
+        if sparse_backward and not return_preacts:
+            x = sparse_updates.relu_linear(x, p[f"w{i}"], p[f"b{i}"], False)
+            masks.append(x > 0)
+        else:
+            z = jnp.einsum("bi,ij->bj", x, p[f"w{i}"]) + p[f"b{i}"]
+            preacts.append(z)
+            masks.append(z > 0)
+            x = jnp.maximum(z, 0)  # ReLU — the zero-gradient source for §4.3
+    x = jnp.einsum("bi,ij->bj", x, p[f"w{n - 1}"]) + p[f"b{n - 1}"]
     out = x[:, 0]
     if return_preacts:
         return out, preacts
+    if return_masks:
+        return out, masks
     return out
 
 
@@ -91,7 +110,9 @@ def merge_norm(cfg: FFMConfig, p, lr_out, ffm_vec):
     return (zn * p["merge_scale"] + p["merge_bias"]).astype(z.dtype)
 
 
-def head_from_parts(cfg: FFMConfig, params, lr_out, ffm_vec, model: str = "deepffm"):
+def head_from_parts(cfg: FFMConfig, params, lr_out, ffm_vec,
+                    model: str = "deepffm", *, with_masks: bool = False,
+                    sparse_backward: bool = True):
     """Shared ffm/deepffm tail: LR logits (B,) + pair vector (B, n_pairs) -> logits.
 
     The single place that composes the wide and deep parts, whether the pair
@@ -103,12 +124,23 @@ def head_from_parts(cfg: FFMConfig, params, lr_out, ffm_vec, model: str = "deepf
     learns a residual on top of the classic wide terms. This is what gives
     DeepFFM linear-level early learning with later gains (paper: "DeepFFMs
     dominate after enough data is seen").
+
+    ``with_masks`` returns ``(logits, masks)`` where ``masks`` are the MLP's
+    per-hidden-layer activation masks (empty for models without an MLP) —
+    the §4.3 zero-global-gradient structure the trainer reports per round.
     """
     if model == "ffm":
-        return lr_out + jnp.sum(ffm_vec, axis=-1)
+        return (lr_out + jnp.sum(ffm_vec, axis=-1), []) if with_masks \
+            else lr_out + jnp.sum(ffm_vec, axis=-1)
     if model == "deepffm":
         z = merge_norm(cfg, params, lr_out, ffm_vec)
-        return lr_out + jnp.sum(ffm_vec, axis=-1) + mlp_apply(cfg, params["mlp"], z)
+        base = lr_out + jnp.sum(ffm_vec, axis=-1)
+        if with_masks:
+            mlp_out, masks = mlp_apply(cfg, params["mlp"], z, return_masks=True,
+                                       sparse_backward=sparse_backward)
+            return base + mlp_out, masks
+        return base + mlp_apply(cfg, params["mlp"], z,
+                                sparse_backward=sparse_backward)
     raise ValueError(model)
 
 
@@ -127,24 +159,49 @@ def split_request(cfg: FFMConfig, idx, val):
 
 
 def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
-            interactions_fn=None):
+            interactions_fn=None, *, with_masks: bool = False,
+            sparse_backward: bool = True):
     """Returns logits (B,). ``interactions_fn`` lets the serving layer inject
-    the Pallas kernel or the context-cached partial computation."""
+    the Pallas kernel or the context-cached partial computation.
+    ``with_masks`` returns ``(logits, masks)`` (see :func:`head_from_parts`).
+    """
     lr_out = ffm.lr_forward(cfg, params["lr"], idx, val)
     if model == "linear":
-        return lr_out
+        return (lr_out, []) if with_masks else lr_out
     if model == "mlp":
         e = jnp.take(params["emb"], idx, axis=0)  # (B,F,F,k)
         pooled = (jnp.mean(e, axis=2) * val[..., None]).reshape(idx.shape[0], -1)
-        return lr_out + mlp_apply(cfg, params["mlp"], pooled)
+        if with_masks:
+            mlp_out, masks = mlp_apply(cfg, params["mlp"], pooled,
+                                       return_masks=True,
+                                       sparse_backward=sparse_backward)
+            return lr_out + mlp_out, masks
+        return lr_out + mlp_apply(cfg, params["mlp"], pooled,
+                                  sparse_backward=sparse_backward)
     inter = interactions_fn or ffm.interactions
     ffm_vec = inter(cfg, params["ffm"]["emb"], idx, val)
-    return head_from_parts(cfg, params, lr_out, ffm_vec, model)
+    return head_from_parts(cfg, params, lr_out, ffm_vec, model,
+                           with_masks=with_masks,
+                           sparse_backward=sparse_backward)
 
 
-def loss_fn(cfg: FFMConfig, params, batch, model: str = "deepffm"):
-    logits = forward(cfg, params, batch["idx"], batch["val"], model)
+def loss_fn(cfg: FFMConfig, params, batch, model: str = "deepffm",
+            sparse_backward: bool = True):
+    logits = forward(cfg, params, batch["idx"], batch["val"], model,
+                     sparse_backward=sparse_backward)
     return ffm.bce_loss(logits, batch["label"])
+
+
+def loss_and_aux(cfg: FFMConfig, params, batch, model: str = "deepffm",
+                 sparse_backward: bool = True):
+    """Loss plus the training-pipeline aux: pre-update logits (progressive
+    validation scores come from the same forward the gradient uses) and the
+    §4.3 activation masks. Use with ``jax.value_and_grad(..., has_aux=True)``.
+    """
+    logits, masks = forward(cfg, params, batch["idx"], batch["val"], model,
+                            with_masks=True, sparse_backward=sparse_backward)
+    return ffm.bce_loss(logits, batch["label"]), {"logits": logits,
+                                                  "masks": masks}
 
 
 def predict_proba(cfg: FFMConfig, params, idx, val, model: str = "deepffm"):

@@ -197,5 +197,19 @@ def quantize_to_bytes(w: jnp.ndarray, alpha: int = 2, beta: int = 2,
 
 
 def dequantize_from_bytes(buf: bytes) -> np.ndarray:
+    """Pure-numpy reconstruction (serving side).
+
+    Deliberately avoids the jitted ``_dequantize_core``: this runs on the
+    serving engine's background update-pipe thread, and an XLA dispatch there
+    would contend with the scoring threads' XLA computations for the shared
+    CPU executor — exactly the request-path stall async ingestion removes.
+    numpy's f32 ``min + q * bucket`` matches the XLA kernel bit-for-bit
+    (same IEEE ops, no fusion).
+    """
     q, meta, outliers = from_bytes(buf)
-    return np.asarray(dequantize(jnp.asarray(q.copy()), meta, outliers))
+    w = (np.float32(meta.w_min)
+         + q.astype(np.float32) * np.float32(meta.bucket_size))
+    if meta.n_outliers:
+        idx, vals = outliers
+        w[idx.astype(np.int64)] = vals
+    return w

@@ -10,7 +10,12 @@ composition point; each component maps to a paper section:
   generation counter (no server reconstruction), so the context cache and the
   jit caches survive every quantized-patch round. The (params, generation)
   pair is published atomically, so scoring threads always see one coherent
-  weights version even while updates land concurrently.
+  weights version even while updates land concurrently. Frame decode /
+  dequantize / patch / row-delta work lives in the engine's
+  :class:`~repro.serving.update_pipe.UpdatePipe`: ``apply_update`` is a thin
+  synchronous wrapper over it, and :meth:`InferenceEngine.submit_update`
+  hands the frame to the pipe's background thread so the request path only
+  ever pays the final pointer swap.
 * **§5 (context cache)** — the cache is a *prefix tree* over ``(idx, val)``
   field tokens (:mod:`repro.serving.prefix_cache`), mirroring the paper's
   radix tree over raw request strings: a lookup reuses the deepest cached
@@ -53,10 +58,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import transfer
 from repro.common.config import FFMConfig
 from repro.core import deepffm, ffm
-from repro.serving.prefix_cache import PrefixCache, context_tokens
+from repro.serving.prefix_cache import (PrefixCache, context_from_tokens,
+                                        context_tokens)
+from repro.serving.update_pipe import UpdatePipe
 
 
 # ---------------------------------------------------------------------------
@@ -299,11 +305,12 @@ class InferenceEngine:
         self._weights: Tuple[Optional[Dict], int] = (params, 0)
         self._cache = PrefixCache(cfg.context_fields, cache_entries,
                                   stride=prefix_stride)
-        self._lock = threading.Lock()  # cache structure + counters + receiver
+        self._lock = threading.Lock()  # cache structure + counters + weights
         self.hits = 0
         self.misses = 0
         self.stats = ServeStats()
-        self._receiver = transfer.Receiver()
+        self._pipe: Optional[UpdatePipe] = None
+        self._pipe_lock = threading.Lock()
         if warmup_buckets is not None and params is not None:
             self.warmup(max_requests=warmup_buckets[0],
                         max_candidates=warmup_buckets[1])
@@ -345,29 +352,98 @@ class InferenceEngine:
         """Directly swap the weight pytree in place (tests / local serving).
         The (params, generation) pair is published atomically, so concurrent
         scorers see either the old or the new version, never a mix."""
-        with self._lock:  # serialize the generation bump against apply_update
+        with self._lock:  # serialize the generation bump against _publish
             self._weights = (params, self._weights[1] + 1)
 
+    def _publish(self, params, version: int, nbytes: int) -> int:
+        """Atomically install a fully materialized params pytree (the update
+        pipe's publish step — the only weight work under the request lock)."""
+        with self._lock:
+            self._weights = (params, self._weights[1] + 1)
+            self.weights_version = version
+            self.stats.updates_applied += 1
+            self.stats.update_bytes += nbytes
+            return self._weights[1]
+
+    def update_pipe(self, manifest=None, like_params=None) -> UpdatePipe:
+        """The engine's (lazily created) trainer-update ingestion pipe."""
+        with self._pipe_lock:
+            if self._pipe is None:
+                self._pipe = UpdatePipe(self, manifest=manifest,
+                                        like_params=like_params)
+            elif manifest is not None or like_params is not None:
+                self._pipe.configure(manifest, like_params)
+            return self._pipe
+
     def apply_update(self, update: bytes, manifest=None, like_params=None) -> None:
-        """Ingest one trainer update (full file or patch) and hot-swap weights.
+        """Ingest one trainer update (full file, patch, or row delta) and
+        hot-swap weights — a thin synchronous wrapper over the update pipe.
 
         Cache-preserving: the prefix tree keeps its entries; lookups compare
         each entry's generation stamp and lazily recompute stale partials, so
         the trie structure, stats, and jit caches all survive the swap.
+        Decode/dequant/patch work happens *outside* the request lock; only
+        the final (params, generation) pointer swap takes it.
         """
+        self.update_pipe().ingest(update, manifest=manifest,
+                                  like_params=like_params)
+
+    def submit_update(self, update: bytes, manifest=None,
+                      like_params=None) -> bool:
+        """Asynchronous :meth:`apply_update`: enqueue the frame for the update
+        pipe's background thread and return once it is queued — *not* once it
+        is applied. A full pipe queue applies backpressure (blocks the caller
+        until a slot frees) rather than dropping, because dropped frames
+        would desync the Sender's patch/delta chain. The new generation
+        becomes visible to scorers at the pipe's publish; ``update_pipe().
+        flush()`` waits for it."""
+        pipe = self.update_pipe(manifest, like_params)
+        return pipe.submit(update, block=True)
+
+    def prewarm_contexts(self, params=None, generation: Optional[int] = None,
+                         chunk: int = 8, pause_s: float = 0.0) -> int:
+        """Recompute every cached context partial against ``(params,
+        generation)`` — by default the *next* generation — and install the
+        results, ``chunk`` contexts per vmap group.
+
+        The update pipe calls this from its deprioritized ingest thread with
+        the freshly decoded standby params *before* publishing them: the
+        atomic swap then flips both the weights and an already-warm cache, so
+        post-swap requests get full-depth hits instead of paying the stale
+        recompute on the request path. Cache nodes hold per-generation entry
+        slots (two newest), so current-generation scorers keep their hits
+        while the next generation warms. ``chunk`` must not exceed the warmed
+        request bucket so a prewarm can never trigger a new jit compilation
+        mid-traffic; ``pause_s`` sleeps between chunks (cooperative
+        throttling on the ingest thread). Returns the number of contexts
+        recomputed."""
+        if params is None:
+            params = self.params
+        if params is None:
+            return 0
+        if generation is None:
+            generation = self.generation + 1
+        if self._warmed_requests is not None:
+            # never exceed the warmed group bucket: a prewarm-triggered jit
+            # compile mid-traffic would be the stall this path exists to avoid
+            chunk = min(chunk, self._warmed_requests)
         with self._lock:
-            self._receiver.apply_update(update)
-            params = self._receiver.materialize(manifest=manifest,
-                                                like=like_params)
-            self._weights = (params, self._weights[1] + 1)
-            self.weights_version = self._receiver.version
-            self.stats.updates_applied += 1
-            self.stats.update_bytes += len(update)
+            keys = self._cache.keys()
+        ctxs = [(key, *context_from_tokens(key)) for key in keys]
+        for i in range(0, len(ctxs), max(1, chunk)):
+            # record_stats=False: prewarm churn must not pollute the
+            # request-path hit-depth histogram or partial/tail counters
+            self._resolve_contexts(ctxs[i:i + max(1, chunk)], params,
+                                   generation, record_stats=False)
+            if pause_s:
+                time.sleep(pause_s)
+        return len(ctxs)
 
     # -- context cache (§5, prefix tree) ------------------------------------
     def _resolve_contexts(self, ctxs: List[Tuple[Tuple[bytes, ...],
                                                  np.ndarray, np.ndarray]],
-                          params, generation: int
+                          params, generation: int,
+                          record_stats: bool = True
                           ) -> Tuple[List[Dict], List[bool]]:
         """Full-depth prefix states for each unique (tokens, idx, val) context,
         plus a full-depth-hit flag per context.
@@ -406,8 +482,9 @@ class InferenceEngine:
                     # within a burst, so later rounds never find a full match
                     states[i] = state
                     full_hit[i] = first_round
-                    with self._lock:
-                        self._cache.hit_depths[fc] += 1
+                    if record_stats:
+                        with self._lock:
+                            self._cache.hit_depths[fc] += 1
                     continue
                 above = [(d, ctxs[i][0][:d]) for d in checkpoints if d > depth]
                 if any(c in claimed for c in above):
@@ -457,11 +534,13 @@ class InferenceEngine:
                 full = compute_context_tails(self.cfg, params, prefix, ti, tv)
                 full = jax.tree_util.tree_map(np.asarray, full)
                 with self._lock:
-                    self.stats.ctx_partials_full += sum(
-                        1 for i in members if looked[i][0] == 0)
-                    self.stats.ctx_tail_fields += t * len(members)
+                    if record_stats:
+                        self.stats.ctx_partials_full += sum(
+                            1 for i in members if looked[i][0] == 0)
+                        self.stats.ctx_tail_fields += t * len(members)
                     for m, i in enumerate(members):
-                        self._cache.hit_depths[depth] += 1
+                        if record_stats:
+                            self._cache.hit_depths[depth] += 1
                         # copy out of the stacked group buffer: a view would
                         # keep the whole (mb, ...) batch alive for as long as
                         # any one member stays cached
@@ -606,6 +685,8 @@ class InferenceEngine:
                               requests=len(reqs))
         return results
 
+    _warmed_requests: Optional[int] = None  # set by warmup(); clamps prewarm
+
     def warmup(self, *, max_requests: int = 8, max_candidates: int = 64) -> int:
         """Pre-compile every jitted shape the engine can emit for microbatches
         of up to ``max_requests`` requests with up to ``max_candidates``
@@ -616,6 +697,7 @@ class InferenceEngine:
         run after weights are available (the constructor's ``warmup_buckets``
         runs it when params are passed in)."""
         self._require_params()
+        self._warmed_requests = max_requests
         params, _ = self._weights
         cfg = self.cfg
         fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields

@@ -36,26 +36,57 @@ from repro.core import ffm
 
 
 class _Node:
-    """One trie node; ``entry`` is ``(generation, depth, state)`` where
-    ``state`` is a full-depth prefix state usable up to ``depth`` fields."""
+    """One trie node; ``entries`` maps a weight generation to ``(depth,
+    state)`` where ``state`` is a full-depth prefix state usable up to
+    ``depth`` fields.
 
-    __slots__ = ("children", "entry", "refs")
+    At most the **two newest** generations are retained per node — the cache
+    analogue of the engine's double-buffered params slot: the update pipe
+    pre-warms partials for generation g+1 while scorers still hit g, and the
+    atomic publish flips traffic onto already-warm entries. One generation
+    back stays valid for scorers that snapshotted weights just before a
+    swap."""
+
+    __slots__ = ("children", "entries", "refs")
 
     def __init__(self):
         self.children: Dict[bytes, _Node] = {}
-        self.entry: Optional[Tuple[int, int, Dict]] = None
+        self.entries: Dict[int, Tuple[int, Dict]] = {}
         self.refs = 0
+
+    @property
+    def entry(self) -> Optional[Tuple[int, int, Dict]]:
+        """Newest generation's ``(generation, depth, state)`` (introspection/
+        test compatibility view of ``entries``)."""
+        if not self.entries:
+            return None
+        gen = max(self.entries)
+        depth, state = self.entries[gen]
+        return (gen, depth, state)
 
 
 def context_tokens(ctx_idx: np.ndarray, ctx_val: np.ndarray) -> Tuple[bytes, ...]:
     """Per-field ``(idx, val)`` byte tokens — the trie's edge alphabet.
-    One ``tobytes`` per array, sliced per field (hot-path cheap)."""
+    One ``tobytes`` per array, sliced per field (hot-path cheap).
+    ``context_from_tokens`` is the inverse; keep the two in sync."""
     ctx_idx = np.ascontiguousarray(ctx_idx)
     ctx_val = np.ascontiguousarray(ctx_val)
     bi, bv = ctx_idx.tobytes(), ctx_val.tobytes()
     si, sv = ctx_idx.itemsize, ctx_val.itemsize
     return tuple(bi[i * si:(i + 1) * si] + bv[i * sv:(i + 1) * sv]
                  for i in range(ctx_idx.shape[0]))
+
+
+_IDX_BYTES = np.dtype(np.int32).itemsize  # engine keys tokens as (i32, f32)
+
+
+def context_from_tokens(tokens: Sequence[bytes]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`context_tokens` for int32/float32 contexts (the
+    engine's canonical request dtypes): tokens -> ``(ctx_idx, ctx_val)``."""
+    idx = np.frombuffer(b"".join(t[:_IDX_BYTES] for t in tokens), np.int32)
+    val = np.frombuffer(b"".join(t[_IDX_BYTES:] for t in tokens), np.float32)
+    return idx, val
 
 
 class PrefixCache:
@@ -101,6 +132,11 @@ class PrefixCache:
     def __len__(self) -> int:
         return len(self._lru)
 
+    def keys(self) -> List[Tuple[bytes, ...]]:
+        """Token tuples of every cached full context (LRU order, oldest
+        first). Snapshot copy — safe to iterate while lookups proceed."""
+        return list(self._lru.keys())
+
     # -- lookup / insert -----------------------------------------------------
     def lookup(self, tokens: Sequence[bytes], generation: int
                ) -> Tuple[int, Optional[Dict]]:
@@ -113,9 +149,9 @@ class PrefixCache:
             node = node.children.get(tok)
             if node is None:
                 break
-            e = node.entry
-            if e is not None and e[0] == generation and e[1] >= d:
-                best_depth, best_state = d, e[2]
+            e = node.entries.get(generation)
+            if e is not None and e[0] >= d:
+                best_depth, best_state = d, e[1]
         if best_depth == len(tokens):
             self._lru.move_to_end(tuple(tokens))
         return best_depth, best_state
@@ -139,14 +175,16 @@ class PrefixCache:
             if is_new:
                 child.refs += 1
             if d in depths:
-                # replace only strictly older entries: a scorer still holding
-                # a pre-swap weights snapshot must not clobber a fresher
-                # generation's partial (generations are monotonic); within a
-                # generation, deeper-usable entries win
-                e = child.entry
-                if e is None or e[0] < generation or (e[0] == generation
-                                                      and e[1] < self.fc):
-                    child.entry = (generation, self.fc, state)
+                # per-generation slots: an insert never clobbers another
+                # generation's partial (a scorer on a pre-swap snapshot and
+                # the pipe pre-warming the next generation coexist); within a
+                # generation, deeper-usable entries win. Only the two newest
+                # generations are retained (double-buffer bound).
+                e = child.entries.get(generation)
+                if e is None or e[0] < self.fc:
+                    child.entries[generation] = (self.fc, state)
+                    while len(child.entries) > 2:
+                        del child.entries[min(child.entries)]
             node = child
         self._lru[key] = None
         self._lru.move_to_end(key)
@@ -165,12 +203,13 @@ class PrefixCache:
             # a surviving shared node may hold the *evicted* context's
             # full-depth state; truncate it to the node's own depth (copied
             # slices) so eviction really releases the full state and memory
-            # stays one full state per *live* context
-            if node.refs > 0 and node.entry is not None and node.entry[1] > d:
-                gen, _, s = node.entry
-                node.entry = (gen, d, {
-                    k: v.copy()
-                    for k, v in ffm.slice_context_prefix(s, d).items()})
+            # stays bounded per *live* context
+            if node.refs > 0:
+                for gen, (depth_g, s) in list(node.entries.items()):
+                    if depth_g > d:
+                        node.entries[gen] = (d, {
+                            k: v.copy()
+                            for k, v in ffm.slice_context_prefix(s, d).items()})
         # prune the unshared suffix of the path (radix-tree leaf drop)
         for parent, tok in reversed(path):
             child = parent.children[tok]

@@ -67,11 +67,22 @@ class FFMServer:
         return self.engine.cache_hit_rate
 
     def apply_update(self, update: bytes, manifest, like_params) -> None:
-        """Ingest one trainer update (full file or patch) and hot-swap weights.
+        """Ingest one trainer update (full file, patch, or row delta) and
+        hot-swap weights.
 
         Delegates to the engine: weights swap in place under a generation
         counter and the context cache survives (stale entries refresh lazily)."""
         self.engine.apply_update(update, manifest, like_params)
+
+    def submit_update(self, update: bytes, manifest=None,
+                      like_params=None) -> bool:
+        """Async :meth:`apply_update`: frame decode runs on the engine's
+        update-pipe thread, off the request path."""
+        return self.engine.submit_update(update, manifest, like_params)
+
+    def flush_updates(self, timeout: float = 30.0) -> int:
+        """Wait for all submitted updates to publish; returns the generation."""
+        return self.engine.update_pipe().flush(timeout)
 
     def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
         """Score one request; returns sigmoid probabilities (N,)."""

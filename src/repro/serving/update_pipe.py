@@ -1,0 +1,234 @@
+"""Async trainer->engine update ingestion (§3/§6; ROADMAP follow-on).
+
+The serving engine used to decode, dequantize, and patch every update frame
+on whatever thread called ``apply_update`` — with the engine lock held, so a
+request thread could stall behind a multi-megabyte materialization. This
+module takes that work off the request path:
+
+* :class:`UpdatePipe` owns the transfer :class:`~repro.checkpoint.transfer.
+  Receiver` and decodes every frame into a **standby params pytree** while
+  scorers keep reading the active one (double buffering by immutability: the
+  retiring generation lives exactly as long as the last scorer snapshot
+  holding it); only the final publish — the engine's existing atomic
+  ``(params, generation)`` swap — touches the engine lock, and that is a
+  pointer exchange, not weight work.
+* :meth:`submit` enqueues a frame for the background ingest thread and
+  returns immediately; :meth:`ingest` is the synchronous path the engine's
+  ``apply_update`` wraps. Both funnel through one ingest lock, so frames
+  apply in order no matter how they arrive.
+
+Invariants (the async-ingest contract):
+
+1. Receiver state is only ever touched under ``_ingest_lock`` — frames are
+   strictly ordered, mixing submit/ingest cannot interleave byte-patching.
+2. A published generation is always a fully materialized pytree; scorers
+   snapshot ``(params, generation)`` once per batch and never observe a
+   half-decoded update.
+3. The request path never blocks on ingest: scoring takes only the engine
+   lock, which ingest holds just for the pointer swap.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import transfer
+
+
+@dataclass
+class UpdatePipeStats:
+    submitted: int = 0
+    published: int = 0
+    rejected: int = 0          # queue-full drops (backpressure)
+    decode_seconds: float = 0.0  # off-request-path work: decode+materialize
+    bytes_ingested: int = 0
+    idle_priority: bool = False  # ingest thread demoted below scorers
+    contexts_refreshed: int = 0  # cache partials re-warmed post-publish
+
+
+class UpdatePipe:
+    """Background ingestion of trainer update frames into a serving engine.
+
+    ``engine`` must expose ``_publish(params, version, nbytes) -> generation``
+    (the atomic swap). ``manifest``/``like_params`` are the decode defaults;
+    per-call overrides win. The pipe starts its daemon thread lazily on the
+    first :meth:`submit`; purely synchronous use (the engine's
+    ``apply_update``) never spawns a thread.
+    """
+
+    def __init__(self, engine, *, manifest=None, like_params=None,
+                 max_pending: int = 8,
+                 pace: Optional[tuple] = (256 * 1024, 0.002)):
+        self._engine = engine
+        self._receiver = transfer.Receiver()
+        self._manifest = None
+        self._like = None
+        self.configure(manifest, like_params)
+        # (chunk_elems, sleep_s) cooperative throttling for *background*
+        # decodes: bounds the longest contiguous burst a decode can steal
+        # from concurrent request threads. Synchronous ingest never paces.
+        self._pace = pace
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._ingest_lock = threading.Lock()
+        self._pending = 0                      # submitted, not yet published
+        self._pending_cv = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._thread_lock = threading.Lock()
+        self._closed = False
+        self.stats = UpdatePipeStats()
+
+    # -- configuration ------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Trainer round stamp of the last applied frame."""
+        return self._receiver.version
+
+    def configure(self, manifest=None, like_params=None) -> None:
+        """Set/refresh the decode defaults (layout manifest + pytree shape).
+
+        Only the tree structure and leaf dtypes of ``like_params`` are kept
+        (shapes come from the manifest): retaining the live arrays would pin
+        trainer params that the jitted round step donates — a later decode
+        against the stored default would hit deleted jax buffers.
+        """
+        if manifest is not None:
+            self._manifest = manifest
+        if like_params is not None:
+            import jax
+
+            self._like = jax.tree_util.tree_map(
+                lambda x: np.empty((), getattr(x, "dtype", None)
+                                   or np.asarray(x).dtype), like_params)
+
+    # -- synchronous path (engine.apply_update) -----------------------------
+    def ingest(self, update: bytes, manifest=None, like_params=None):
+        """Decode one frame into a standby params pytree and publish it.
+        Blocks the *caller*; scorers only ever wait for the final pointer
+        swap."""
+        if (self._thread is not None
+                and threading.current_thread() is not self._thread):
+            # frames must apply in submission order: a synchronous ingest
+            # overtaking frames still queued for the background thread would
+            # patch/XOR against the wrong base bytes — drain them first
+            self.flush()
+        with self._ingest_lock:
+            t0 = time.perf_counter()
+            if manifest is not None or like_params is not None:
+                self.configure(manifest, like_params)
+            on_ingest_thread = (self._thread is not None
+                                and threading.current_thread() is self._thread)
+            self._receiver.apply_update(update)
+            params = self._receiver.materialize(
+                manifest=self._manifest, like=self._like,
+                pace=self._pace if on_ingest_thread else None)
+            self.stats.decode_seconds += time.perf_counter() - t0
+            self.stats.bytes_ingested += len(update)
+            if on_ingest_thread and self._q.empty():
+                # pre-warm cached context partials against the standby params
+                # so the swap flips weights AND a warm cache in one step;
+                # skipped when more frames are queued (only the last matters)
+                prewarm = getattr(self._engine, "prewarm_contexts", None)
+                if prewarm is not None:
+                    self.stats.contexts_refreshed += prewarm(
+                        params, pause_s=self._pace[1] if self._pace else 0.0)
+            gen = self._engine._publish(params, self._receiver.version,
+                                        len(update))
+            self.stats.published += 1
+            return gen
+
+    # -- asynchronous path --------------------------------------------------
+    def submit(self, update: bytes, *, block: bool = False) -> bool:
+        """Enqueue one frame for background ingestion; returns immediately.
+
+        With ``block=False`` (default) a full queue drops the frame and
+        counts it in ``stats.rejected`` — the next frame supersedes it anyway
+        for full/patchless modes, and the trainer's Sender state assumes
+        at-most-once shipping, so callers using patch/delta framing should
+        pass ``block=True`` to apply backpressure instead of dropping.
+        """
+        if self._closed:
+            raise RuntimeError("update pipe is closed")
+        self._ensure_thread()
+        with self._pending_cv:
+            self._pending += 1
+        self.stats.submitted += 1
+        try:
+            self._q.put(update, block=block)
+            return True
+        except queue.Full:
+            with self._pending_cv:
+                self._pending -= 1
+                self._pending_cv.notify_all()
+            self.stats.rejected += 1
+            return False
+
+    def flush(self, timeout: Optional[float] = 30.0) -> int:
+        """Wait until every submitted frame has been published (or dropped);
+        returns the engine generation."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._pending_cv:
+            while self._pending > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"{self._pending} update frame(s) still pending")
+                self._pending_cv.wait(remaining)
+        return self._engine.generation
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain the queue and stop the ingest thread."""
+        if self._thread is not None:
+            self.flush(timeout)
+            self._closed = True
+            self._q.put(None)
+            self._thread.join(timeout)
+        else:
+            self._closed = True
+
+    # -- internals ----------------------------------------------------------
+    def _ensure_thread(self) -> None:
+        with self._thread_lock:
+            if self._thread is None:
+                self._thread = threading.Thread(target=self._run, daemon=True,
+                                                name="update-pipe-ingest")
+                self._thread.start()
+
+    def _run(self) -> None:
+        # Demote this thread below every scoring thread: on a busy box the
+        # decode burst otherwise steals cores from concurrent scorers and
+        # shows up as request-path p99 spikes — the exact stall async
+        # ingestion exists to remove. SCHED_IDLE means ingest only consumes
+        # cycles the request path leaves idle; freshness degrades gracefully
+        # under saturation instead of latency. (Linux-only; elsewhere the
+        # thread just runs at normal priority.)
+        try:
+            os.sched_setscheduler(0, os.SCHED_IDLE, os.sched_param(0))
+            self.stats.idle_priority = True
+        except (AttributeError, OSError, PermissionError):
+            try:  # containers often reject SCHED_IDLE; nice 19 ~= 1/20 weight
+                os.setpriority(os.PRIO_PROCESS, threading.get_native_id(), 19)
+                self.stats.idle_priority = True
+            except (AttributeError, OSError, PermissionError):
+                pass
+        while True:
+            update = self._q.get()
+            if update is None:
+                return
+            try:
+                self.ingest(update)
+            except Exception:  # a bad frame must not kill the ingest thread
+                import logging
+
+                logging.getLogger(__name__).exception(
+                    "update frame rejected during background ingest")
+            finally:
+                with self._pending_cv:
+                    self._pending -= 1
+                    self._pending_cv.notify_all()

@@ -12,6 +12,12 @@
    from the same starting point on different data, then merge by averaging.
    One Hogwild "round" == one merge. This is what ships in the distributed
    launcher (workers = the data axis).
+
+Both renditions draw their update rule from ``optim.adagrad`` — the same
+(init, update) pair the jitted pipeline backend scans with — instead of
+duplicating the accumulator math, and both report the pipeline aux
+(pre-update scores for progressive validation, §4.3 activation masks) so
+they plug into ``train.pipeline`` as interchangeable backends.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import numpy as np
 
 from repro.common.config import FFMConfig
 from repro.core import deepffm
+from repro.optim import make_optimizer
 
 
 # ---------------------------------------------------------------------------
@@ -38,6 +45,10 @@ class HogwildStats:
     examples: int = 0
     seconds: float = 0.0
     losses: List[float] = field(default_factory=list)
+    labels: List[np.ndarray] = field(default_factory=list)
+    scores: List[np.ndarray] = field(default_factory=list)   # pre-update
+    # per hidden layer: list of (H,) column-alive booleans, one per update
+    col_alive: List[List[np.ndarray]] = field(default_factory=list)
 
     @property
     def examples_per_s(self) -> float:
@@ -46,9 +57,11 @@ class HogwildStats:
 
 class HogwildTrainer:
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", lr: float = 0.05,
-                 power_t: float = 0.5, seed: int = 0):
+                 power_t: float = 0.5, seed: int = 0, params=None,
+                 sparse_backward: bool = True):
         self.cfg, self.model, self.lr, self.power_t = cfg, model, lr, power_t
-        params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), model)
+        if params is None:
+            params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), model)
         # shared, mutable, lock-free buffers
         self.buffers: Dict[str, np.ndarray] = {
             k: np.array(v, np.float32) for k, v in _flatten(params).items()
@@ -57,22 +70,47 @@ class HogwildTrainer:
             k: np.zeros(v.shape, np.float32) for k, v in self.buffers.items()
         }
         self._tree = params
+        self._opt = make_optimizer("adagrad", lr=lr, power_t=power_t)
 
         def lossf(p, batch):
-            return deepffm.loss_fn(cfg, p, batch, model)
+            return deepffm.loss_and_aux(cfg, p, batch, model,
+                                        sparse_backward=sparse_backward)
 
-        self._vg = jax.jit(jax.value_and_grad(lossf))
+        self._vg = jax.jit(jax.value_and_grad(lossf, has_aux=True))
+
+        # the shared AdaGrad rule, jitted once over the flat buffer dicts —
+        # expressed as *deltas* so the lock-free application composes across
+        # threads (see _apply)
+        def upd_delta(g, a, p):
+            new_p, new_state = self._opt.update(g, {"acc": a}, p,
+                                                jnp.zeros((), jnp.int32))
+            dp = jax.tree_util.tree_map(jnp.subtract, new_p, p)
+            da = jax.tree_util.tree_map(jnp.subtract, new_state["acc"], a)
+            return dp, da
+
+        self._upd = jax.jit(upd_delta)
 
     def _snapshot(self):
         flat = {k: jnp.asarray(v) for k, v in self.buffers.items()}
         return _unflatten(flat, self._tree)
 
     def _apply(self, grads) -> None:
-        """AdaGrad update, in place, no locks — the Hogwild step."""
-        for k, g in _flatten(grads).items():
-            g = np.asarray(g, np.float32)
-            self.acc[k] += g * g  # racy read-modify-write, by design
-            self.buffers[k] -= self.lr * g / np.power(self.acc[k] + 1e-10, self.power_t)
+        """AdaGrad update, in place, no locks — the Hogwild step.
+
+        The math is ``optim.adagrad``'s functional update evaluated against a
+        lock-free read of the shared buffers, applied as in-place ``+=`` of
+        the resulting *deltas*: a zero delta for rows this batch never
+        touched means concurrent threads' updates to other rows compose
+        instead of being overwritten (writing absolute values back would
+        revert everything other threads applied during this thread's compute
+        window). Same-element collisions remain the racy read-modify-write
+        the mechanism allows by design.
+        """
+        gflat = _flatten(grads)
+        dp, da = self._upd(gflat, self.acc, self.buffers)
+        for k in self.buffers:
+            self.acc[k] += np.asarray(da[k])
+            self.buffers[k] += np.asarray(dp[k])
 
     def train(self, batches: Iterable[Dict[str, Any]], n_threads: int = 4) -> HogwildStats:
         stats = HogwildStats()
@@ -84,11 +122,20 @@ class HogwildTrainer:
                 b = q.get()
                 if b is None:
                     return
-                loss, grads = self._vg(self._snapshot(), b)
+                (loss, aux), grads = self._vg(self._snapshot(), b)
                 self._apply(grads)
+                scores = np.asarray(jax.nn.sigmoid(aux["logits"]))
+                alive = [np.asarray(jnp.any(m, axis=0)) for m in aux["masks"]]
                 with lock:
                     stats.examples += int(b["label"].shape[0])
                     stats.losses.append(float(loss))
+                    stats.labels.append(np.asarray(b["label"]))
+                    stats.scores.append(scores)
+                    if alive:
+                        if not stats.col_alive:
+                            stats.col_alive = [[] for _ in alive]
+                        for layer, a in zip(stats.col_alive, alive):
+                            layer.append(a)
 
         threads = [threading.Thread(target=worker) for _ in range(n_threads)]
         t0 = time.perf_counter()
@@ -105,6 +152,11 @@ class HogwildTrainer:
 
     def params(self):
         return self._snapshot()
+
+    def opt_state(self):
+        """AdaGrad state in ``optim.adagrad``'s pytree shape."""
+        acc = {k: jnp.asarray(v) for k, v in self.acc.items()}
+        return {"acc": _unflatten(acc, self._tree)}
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:
@@ -129,42 +181,50 @@ def _unflatten(flat: Dict[str, Any], like):
 # ---------------------------------------------------------------------------
 
 def make_local_sgd_round(cfg: FFMConfig, model: str, lr: float = 0.05,
-                         power_t: float = 0.5):
+                         power_t: float = 0.5, with_aux: bool = False,
+                         sparse_backward: bool = True):
     """Returns round_fn(params, acc, batches) -> (params, acc, mean_loss).
 
     batches: pytree with leading (W workers, k local steps, batch...) dims.
     Workers run k AdaGrad steps independently (vmap = devices), then merge.
+    The per-step update is ``optim.adagrad``'s — the same rule the jitted
+    pipeline and the Hogwild threads apply.
+
+    ``with_aux=True`` appends a fourth return value carrying the pipeline
+    aux: pre-update scores (W, k, B) and per-hidden-layer column-alive masks
+    (W, k, H).
     """
+    opt = make_optimizer("adagrad", lr=lr, power_t=power_t)
 
     def lossf(p, batch):
-        return deepffm.loss_fn(cfg, p, batch, model)
+        return deepffm.loss_and_aux(cfg, p, batch, model,
+                                    sparse_backward=sparse_backward)
 
-    vg = jax.value_and_grad(lossf)
+    vg = jax.value_and_grad(lossf, has_aux=True)
 
     def local_steps(params, acc, worker_batches):
         def step(carry, batch):
             p, a = carry
-            loss, g = vg(p, batch)
+            (loss, aux), g = vg(p, batch)
+            p, state = opt.update(g, {"acc": a}, p, jnp.zeros((), jnp.int32))
+            outs = {"loss": loss}
+            if with_aux:
+                outs["scores"] = jax.nn.sigmoid(aux["logits"])
+                outs["col_alive"] = [jnp.any(m, axis=0) for m in aux["masks"]]
+            return (p, state["acc"]), outs
 
-            def upd(pl, al, gl):
-                al = al + gl * gl
-                return pl - lr * gl / jnp.power(al + 1e-10, power_t), al
-
-            out = jax.tree_util.tree_map(upd, p, a, g)
-            p = jax.tree_util.tree_map(lambda t: t[0], out,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-            a = jax.tree_util.tree_map(lambda t: t[1], out,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-            return (p, a), loss
-
-        (p, a), losses = jax.lax.scan(step, (params, acc), worker_batches)
-        return p, a, jnp.mean(losses)
+        (p, a), outs = jax.lax.scan(step, (params, acc), worker_batches)
+        return p, a, outs
 
     @jax.jit
     def round_fn(params, acc, batches):
-        ps, accs, losses = jax.vmap(lambda b: local_steps(params, acc, b))(batches)
+        ps, accs, outs = jax.vmap(lambda b: local_steps(params, acc, b))(batches)
         merged_p = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0), ps)
         merged_a = jax.tree_util.tree_map(lambda t: jnp.mean(t, axis=0), accs)
-        return merged_p, merged_a, jnp.mean(losses)
+        mean_loss = jnp.mean(outs["loss"])
+        if with_aux:
+            aux = {"scores": outs["scores"], "col_alive": outs["col_alive"]}
+            return merged_p, merged_a, mean_loss, aux
+        return merged_p, merged_a, mean_loss
 
     return round_fn

@@ -6,81 +6,29 @@ weights to the serving layer." One :class:`OnlineTrainer` round =
 prefetched data ingest -> AdaGrad updates -> quantized-patch update emitted
 for serving. Progressive-validation AUC is tracked per round (the paper's
 rolling-window methodology).
+
+Since PR 3 this is a thin view over :class:`repro.train.pipeline.
+TrainingPipeline` with the sequential jitted backend: the per-batch Python
+``tree_map`` update loop became one jitted ``lax.scan`` round step (buffer
+donation, §4.3 sparse backward on by default), and ``RoundReport.round`` and
+the update frame's version stamp are now the same (1-based) number.
+
+Row-delta update frames (§6) are off here by default to preserve the classic
+full/patch wire behaviour; ``TrainingPipeline`` enables them.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import store, transfer
 from repro.common.config import FFMConfig
-from repro.common.metrics import roc_auc
-from repro.core import deepffm
-from repro.data.prefetch import Prefetcher
+from repro.train.pipeline import RoundReport, TrainingPipeline  # noqa: F401
+
+__all__ = ["OnlineTrainer", "RoundReport"]
 
 
-@dataclass
-class RoundReport:
-    round: int
-    examples: int
-    seconds: float
-    mean_loss: float
-    progressive_auc: float
-    update_bytes: int
-
-
-class OnlineTrainer:
+class OnlineTrainer(TrainingPipeline):
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", lr: float = 0.1,
                  transfer_mode: str = "patch+quant", seed: int = 0,
-                 prefetch_depth: int = 8):
-        self.cfg, self.model, self.lr = cfg, model, lr
-        self.prefetch_depth = prefetch_depth
-        self.params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), model)
-        self.acc = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape), self.params)
-        self.sender = transfer.Sender(mode=transfer_mode)
-        self.reports: List[RoundReport] = []
-
-        def lossf(p, b):
-            return deepffm.loss_fn(cfg, p, b, model)
-
-        self._vg = jax.jit(jax.value_and_grad(lossf))
-        self._predict = jax.jit(
-            lambda p, i, v: deepffm.predict_proba(cfg, p, i, v, model))
-
-    def run_round(self, batches: Iterable[Dict[str, Any]]) -> bytes:
-        """One online round; returns the versioned update blob for serving."""
-        t0 = time.perf_counter()
-        losses, labels, scores, n = [], [], [], 0
-        for b in Prefetcher(batches, depth=self.prefetch_depth):
-            # progressive validation: score before learning (VW-style)
-            scores.append(np.asarray(self._predict(self.params, b["idx"], b["val"])))
-            labels.append(np.asarray(b["label"]))
-            loss, g = self._vg(self.params, b)
-            self.acc = jax.tree_util.tree_map(
-                lambda a, gg: a + gg * gg, self.acc, g)
-            self.params = jax.tree_util.tree_map(
-                lambda p, gg, a: p - self.lr * gg / jnp.sqrt(a + 1e-10),
-                self.params, g, self.acc)
-            losses.append(float(loss))
-            n += int(b["label"].shape[0])
-        # stamp the round number into the update frame: the serving engine
-        # tracks it as weights_version for its cache-generation bookkeeping
-        update = self.sender.make_update(self.params, version=len(self.reports) + 1)
-        self.reports.append(RoundReport(
-            round=len(self.reports), examples=n,
-            seconds=time.perf_counter() - t0,
-            mean_loss=float(np.mean(losses)) if losses else float("nan"),
-            progressive_auc=roc_auc(np.concatenate(labels), np.concatenate(scores))
-            if labels else 0.5,
-            update_bytes=len(update),
-        ))
-        return update
-
-    def checkpoint(self, path: str) -> None:
-        store.save(path, self.params, {"acc": self.acc})
+                 prefetch_depth: int = 8, **kw):
+        kw.setdefault("delta_updates", False)
+        super().__init__(cfg, model, backend="jit", lr=lr,
+                         transfer_mode=transfer_mode, seed=seed,
+                         prefetch_depth=prefetch_depth, **kw)

@@ -83,6 +83,53 @@ def test_transfer_roundtrip(mode):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_make_update_enforces_monotonic_versions():
+    """An explicit stale stamp would corrupt the serving engine's generation
+    bookkeeping; it must be rejected, not silently accepted."""
+    snd = transfer.Sender()
+    snd.make_update(_params(), version=5)
+    for stale in (5, 4, 0, -1):
+        with pytest.raises(ValueError, match="non-monotonic"):
+            snd.make_update(_params(1), version=stale)
+    assert transfer.unframe(snd.make_update(_params(1))).version == 6  # auto
+
+
+def test_layout_path_str_is_public_and_manifest_consistent():
+    """Both transfer sides key leaves by ``layout.path_str`` — it is wire
+    contract, not a private helper."""
+    p = _params()
+    _, manifest = layout.to_bytes(p)
+    leaves = jax.tree_util.tree_flatten_with_path(p)[0]
+    assert sorted(layout.path_str(path) for path, _ in leaves) \
+        == [ent["path"] for ent in manifest]
+
+
+def test_delta_framing_falls_back_without_history_or_on_regrid():
+    """First round (no previous buffer) and quant-grid changes must fall back
+    to full/patch frames: a delta against unknown or regridded bytes would
+    silently corrupt the receiver."""
+    p0 = _params()
+    rows = np.arange(4)
+    touched = {"ffm/emb": rows, "lr/w": rows}
+    snd = transfer.Sender(mode="patch+quant")
+    first = snd.make_update(p0, touched=touched)
+    assert transfer.unframe(first).kind == transfer.KIND_FULL
+    # grid regrid: push enough weights outside the previous grid that the
+    # outlier sidecar gives way to a dynamic re-derivation (paper behaviour)
+    p1 = jax.tree_util.tree_map(lambda x: np.array(x, np.float32), p0)
+    p1["ffm"]["emb"][:100] = 50.0
+    blob = snd.make_update(jax.tree_util.tree_map(jnp.asarray, p1),
+                           touched=touched)
+    frame = transfer.unframe(blob)
+    assert not frame.is_delta and frame.is_patch
+    # steady grid: the same touched set now yields a delta frame
+    p2 = jax.tree_util.tree_map(lambda x: x.copy(), p1)
+    p2["ffm"]["emb"][rows] += 1e-3
+    blob = snd.make_update(jax.tree_util.tree_map(jnp.asarray, p2),
+                           touched=touched)
+    assert transfer.unframe(blob).is_delta
+
+
 def test_transfer_size_ordering_matches_table4():
     """raw (100%) > quant (~50%) > patch > patch+quant (paper Table 4)."""
     p0 = _params()
