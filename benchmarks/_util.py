@@ -1,8 +1,46 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
+import sys
 import time
 from typing import Callable, List
+
+
+def bench_env() -> dict:
+    """Provenance stamp for every ``BENCH_*.json``: without the sha/version/
+    platform a stored number can't be compared against a rerun."""
+    try:
+        # resolve against THIS repo, not the caller's cwd (which may be a
+        # different checkout whose sha would claim a false provenance)
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=repo,
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    try:
+        import jax
+
+        jax_version, backend = jax.__version__, jax.default_backend()
+    except Exception:
+        jax_version, backend = "unknown", "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "jax_backend": backend,
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Write one ``BENCH_*.json`` with the provenance stamp injected."""
+    with open(path, "w") as f:
+        json.dump({"env": bench_env(), **payload}, f, indent=2)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -1,7 +1,8 @@
 """Unified serving engine: cached+Pallas vs cached-reference vs uncached,
-plus the overlapping-traffic scenario for the prefix cache + candidate dedup.
+plus the overlapping-traffic scenario for the prefix cache + candidate dedup,
+plus the quantized-vs-f32 serving path (§6).
 
-Two traffic shapes through one :class:`InferenceEngine` per configuration:
+Three traffic shapes through one :class:`InferenceEngine` per configuration:
 
 * ``repeat`` — a request stream with exact context repetition (the PR 1
   scenario): per-engine predictions/s and p50/p95/p99 request latency.
@@ -10,20 +11,28 @@ Two traffic shapes through one :class:`InferenceEngine` per configuration:
   cache, no dedup) vs the prefix+dedup engine on identical requests, with
   the prefix-hit depth histogram, unique-vs-total candidate counts, context
   partials computed, and the max |score - uncached oracle| deviation.
+* ``quantized`` — hot contexts x large *fresh* candidate slates (the
+  gather-bandwidth-dominated regime): an int8-resident engine
+  (``quantized=True``, fused dequant-in-kernel Pallas path) vs the identical
+  f32 engine on identical traffic, with interleaved measurement passes
+  (shared-machine noise), resident-weight bytes, oracle deviation against
+  the quantization tolerance, and a steady-state delta-ingest check that
+  only touched rows requantize.
 
-Writes ``BENCH_serving.json``.
+Writes ``BENCH_serving.json`` (provenance-stamped via ``write_bench_json``).
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks._util import row
+from benchmarks._util import row, write_bench_json
+from repro.checkpoint import transfer
 from repro.common.config import FFMConfig
 from repro.core import deepffm
+from repro.core import quantization as Q
 from repro.data.synthetic import CTRStream
 from repro.serving.engine import InferenceEngine, ServeStats
 
@@ -225,16 +234,175 @@ def run(quick: bool = False):
         rows.append(row(f"serving_engine/overlap_{name}",
                         r["seconds"] / (n_batches * batch_size) * 1e6, derived))
 
-    with open("BENCH_serving.json", "w") as f:
-        json.dump({"config": {"n_fields": CFG.n_fields,
-                              "context_fields": CFG.context_fields,
-                              "k": CFG.k, "hash_space": CFG.hash_space},
-                   "n_requests": n_requests, "n_candidates": n_candidates,
-                   "results": results,
-                   "overlap_traffic": {"n_batches": n_batches,
-                                       "batch_size": batch_size,
-                                       **overlap}}, f, indent=2)
+    # -- quantized serving path: int8-resident weights vs f32 (§6) -----------
+    quant = _quantized_scenario(params, quick)
+    for name in ("f32_pallas", "int8_pallas"):
+        r = quant[name]
+        rows.append(row(
+            f"serving_engine/quantized_{name}", r["us_per_batch"],
+            f"preds/s={r['predictions_per_s']:.0f} "
+            f"weight_mb={r['resident_weight_bytes'] / 1e6:.1f} "
+            f"dev={r['max_abs_dev_vs_f32_oracle']:.1e}"))
+
+    write_bench_json(
+        "BENCH_serving.json",
+        {"config": {"n_fields": CFG.n_fields,
+                    "context_fields": CFG.context_fields,
+                    "k": CFG.k, "hash_space": CFG.hash_space},
+         "n_requests": n_requests, "n_candidates": n_candidates,
+         "results": results,
+         "overlap_traffic": {"n_batches": n_batches,
+                             "batch_size": batch_size,
+                             **overlap},
+         "quantized_serving": quant})
     return rows
+
+
+def _quantized_scenario(params, quick: bool) -> dict:
+    """Int8-resident vs f32 serving on identical gather-heavy traffic.
+
+    Hot contexts (cache-warm) scored against large *fresh* candidate slates:
+    context resolution and dedup contribute little, so the measurement
+    isolates the candidate gather + interaction hot loop — the path the
+    quantized tables shrink 4x. Both engines run the Pallas backend
+    (quantized rows dequantize in-register inside the fused kernel) and
+    measurement passes are interleaved so shared-machine noise hits both.
+    Also drives a full->delta update sequence through the quantized engine's
+    pipe and asserts steady-state ingest requantizes only touched rows.
+    """
+    rng = np.random.default_rng(5)
+    fc, fcand = CFG.context_fields, CFG.n_fields - CFG.context_fields
+    n_ctx, n_cand, batch_size = 8, 64, 16
+    n_batches = 4 if quick else 12
+    passes = 4 if quick else 8
+    ctxs = [(rng.integers(0, CFG.hash_space, fc).astype(np.int32),
+             rng.normal(1, 0.25, fc).astype(np.float32))
+            for _ in range(n_ctx)]
+
+    def make_batches(n):
+        out = []
+        for _ in range(n):
+            reqs = []
+            for _ in range(batch_size):
+                ci, cv = ctxs[rng.integers(0, n_ctx)]
+                ki = rng.integers(0, CFG.hash_space,
+                                  (n_cand, fcand)).astype(np.int32)
+                kv = rng.normal(1, 0.25, (n_cand, fcand)).astype(np.float32)
+                reqs.append((ci, cv, ki, kv))
+            out.append(reqs)
+        return out
+
+    warm, meas = make_batches(n_batches), make_batches(n_batches)
+    candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
+    engines = {
+        "f32_pallas": InferenceEngine(
+            CFG, params=params, backend="pallas", prefix_stride=4,
+            warmup_buckets=(batch_size, n_cand)),
+        "int8_pallas": InferenceEngine(
+            CFG, params=params, backend="pallas", prefix_stride=4,
+            quantized=True, warmup_buckets=(batch_size, n_cand)),
+    }
+    outs = {}
+    for name, eng in engines.items():
+        for reqs in warm:
+            eng.score_batch(reqs)
+        outs[name] = [eng.score_batch(reqs) for reqs in meas]
+    times = {name: [] for name in engines}
+    for _ in range(passes):  # interleaved: noise hits both engines equally
+        for name, eng in engines.items():
+            t0 = time.perf_counter()
+            for reqs in meas:
+                eng.score_batch(reqs)
+            times[name].append(time.perf_counter() - t0)
+
+    # oracle deviation, two layers (the engine module's tolerance contract):
+    # * roundtrip parity — the cached int8 path must match the quantized
+    #   engine's own uncached full forward (same tables) to float precision;
+    #   this is the head-agnostic exactness check;
+    # * f32 deviation — reported against pair_logit_tolerance over *all*
+    #   field values; rigorous for the additive head, an engineering
+    #   envelope for the deepffm MLP on top (the parity flag carries the
+    #   exactness guarantee there).
+    qtable = engines["int8_pallas"].params["ffm"]["emb"]
+    eps = Q.row_max_error(qtable)
+    emb_absmax = float(np.abs(np.asarray(params["ffm"]["emb"])).max())
+    vmax = float(max(max(np.abs(r[1]).max(), np.abs(r[3]).max())
+                     for reqs in meas for r in reqs))
+    tolerance = Q.pair_logit_tolerance(CFG, emb_absmax, eps, vmax)
+    max_dev = {name: 0.0 for name in engines}
+    roundtrip_dev = 0.0
+    sample = [(b, r) for b in range(0, n_batches, 2) for r in (0, batch_size // 2)]
+    for b, r in sample:
+        want = np.asarray(engines["f32_pallas"].score_uncached(*meas[b][r]))
+        q_want = np.asarray(engines["int8_pallas"].score_uncached(*meas[b][r]))
+        roundtrip_dev = max(roundtrip_dev, float(np.max(np.abs(
+            np.asarray(outs["int8_pallas"][b][r]) - q_want))))
+        for name in engines:
+            got = np.asarray(outs[name][b][r])
+            max_dev[name] = max(max_dev[name],
+                                float(np.max(np.abs(got - want))))
+
+    # steady-state delta ingest: after the first full frame, each delta
+    # requantizes only its touched rows (per-row grids are independent)
+    qe = engines["int8_pallas"]
+    sender = transfer.Sender(mode="patch+quant")
+    manifest_params = jax.tree_util.tree_map(np.asarray, params)
+    touched = rng.choice(CFG.hash_space, 500, replace=False)
+    drift = dict(manifest_params)
+    drift["ffm"] = dict(manifest_params["ffm"])
+    emb2 = np.array(manifest_params["ffm"]["emb"])
+    emb2[touched] += rng.normal(0, 1e-3, emb2[touched].shape).astype(emb2.dtype)
+    drift["ffm"]["emb"] = emb2
+    u_full = sender.make_update(manifest_params)
+    u_delta = sender.make_update(drift, touched={"ffm/emb": touched,
+                                                 "lr/w": np.zeros(0, np.int64)})
+    qe.apply_update(u_full, sender.manifest, manifest_params)
+    full_rows = qe.update_pipe().stats.rows_requantized
+    qe.apply_update(u_delta, sender.manifest, drift)
+    delta_rows = qe.update_pipe().stats.rows_requantized - full_rows
+    # byte-exactness oracle: from-scratch int8 quantize of the wire-decoded
+    # f32 space (a parallel receiver, so the engine pipe's state stays clean)
+    rcv = transfer.Receiver()
+    for u in (u_full, u_delta):
+        rcv.apply_update(u)
+    wire_f32 = rcv.materialize(manifest=sender.manifest, like=manifest_params)
+    roundtrip = Q.quantize_rows(np.asarray(wire_f32["ffm"]["emb"]))
+    delta_exact = all(
+        np.array_equal(qe.params["ffm"]["emb"][k], roundtrip[k])
+        for k in ("codes", "scale", "zero"))
+
+    results = {}
+    for name, eng in engines.items():
+        med = float(np.median(times[name]))
+        results[name] = {
+            "seconds_median_pass": med,
+            "us_per_batch": med / n_batches * 1e6,
+            "predictions_per_s": candidates / med,
+            "resident_weight_bytes": eng.resident_weight_bytes,
+            "max_abs_dev_vs_f32_oracle": max_dev[name],
+        }
+    f32_b = results["f32_pallas"]["resident_weight_bytes"]
+    q_b = results["int8_pallas"]["resident_weight_bytes"]
+    results["tolerance"] = tolerance
+    results["int8_roundtrip_oracle_dev"] = roundtrip_dev
+    results["delta_ingest"] = {
+        "full_frame_rows_requantized": int(full_rows),
+        "delta_frame_rows_requantized": int(delta_rows),
+        "touched_rows_shipped": int(touched.size),
+        "requantize_matches_full_quantize": bool(delta_exact),
+    }
+    results["acceptance"] = {
+        "predictions_per_s_improved":
+            results["int8_pallas"]["predictions_per_s"]
+            > results["f32_pallas"]["predictions_per_s"],
+        "resident_bytes_about_4x_down": 3.0 <= f32_b / q_b <= 4.0,
+        "oracle_dev_within_tolerance":
+            results["int8_pallas"]["max_abs_dev_vs_f32_oracle"] <= tolerance,
+        "roundtrip_oracle_parity": roundtrip_dev <= 1e-4,
+        "delta_ingest_requantizes_only_touched_rows":
+            delta_rows <= touched.size < full_rows and delta_exact,
+    }
+    return results
 
 
 if __name__ == "__main__":

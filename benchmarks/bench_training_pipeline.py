@@ -18,14 +18,13 @@ Writes ``BENCH_training.json`` with explicit acceptance flags.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import row
+from benchmarks._util import row, write_bench_json
 from repro.checkpoint import transfer
 from repro.common.config import FFMConfig
 from repro.core import deepffm
@@ -298,17 +297,16 @@ def run(quick: bool = False):
     rows.append(row("training_pipeline/acceptance", 0.0,
                     " ".join(f"{k}={v}" for k, v in acceptance.items())))
 
-    with open("BENCH_training.json", "w") as f:
-        json.dump({
-            "config": {"n_fields": CFG.n_fields,
-                       "context_fields": CFG.context_fields, "k": CFG.k,
-                       "hash_space": CFG.hash_space,
-                       "mlp_hidden": list(CFG.mlp_hidden)},
-            "throughput": throughput,
-            "transfer": xfer,
-            "serving": serving,
-            "acceptance": acceptance,
-        }, f, indent=2)
+    write_bench_json("BENCH_training.json", {
+        "config": {"n_fields": CFG.n_fields,
+                   "context_fields": CFG.context_fields, "k": CFG.k,
+                   "hash_space": CFG.hash_space,
+                   "mlp_hidden": list(CFG.mlp_hidden)},
+        "throughput": throughput,
+        "transfer": xfer,
+        "serving": serving,
+        "acceptance": acceptance,
+    })
     if not all(acceptance.values()):
         raise AssertionError(f"training-pipeline acceptance failed: "
                              f"{acceptance}")

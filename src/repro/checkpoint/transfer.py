@@ -299,6 +299,12 @@ class Receiver:
     # frame resets to "unknown" (full decode).
     _delta_ranges: Optional[Tuple[np.ndarray, np.ndarray]] = None
     _flat: Optional[np.ndarray] = None
+    # element ranges of the concatenated weight space the last materialize
+    # actually re-decoded: a list of (start_elem, n_elems) when the decode
+    # was incremental (delta frames only since the previous materialize),
+    # None when it was a full decode. The serving layer's quantize-on-ingest
+    # uses this to requantize only touched embedding rows.
+    last_touched_elems: Optional[List[Tuple[int, int]]] = None
 
     def apply_update(self, update: bytes) -> bytes:
         frame = unframe(update)
@@ -372,17 +378,21 @@ class Receiver:
                 # is reapplied below like on the full path.)
                 w = self._flat.copy()
                 done = 0
+                self.last_touched_elems = []
                 for s, n in zip(*self._delta_ranges):
                     e0, en = (s - Q.HEADER_SIZE) // 2, n // 2
                     sl = slice(e0, e0 + en)
                     w[sl] = w_min + q[sl].astype(np.float32) * bucket
+                    self.last_touched_elems.append((int(e0), int(en)))
                     done += en
                     if chunk and sleep_s and done >= chunk:
                         _time.sleep(sleep_s)
                         done = 0
             elif pace is None:
+                self.last_touched_elems = None
                 w = Q.dequantize_from_bytes(buf)
             else:
+                self.last_touched_elems = None
                 w = np.empty(meta.n, np.float32)
                 for off in range(0, meta.n, chunk):
                     sl = slice(off, min(off + chunk, meta.n))
@@ -424,4 +434,5 @@ class Receiver:
                  for path, leaf in leaves[0])
             ]
             return jax.tree_util.tree_unflatten(leaves[1], vals)
+        self.last_touched_elems = None  # raw decode: no incremental tracking
         return layout.from_bytes(buf, manifest, like=like)

@@ -169,7 +169,7 @@ def forward(cfg: FFMConfig, params, idx, val, model: str = "deepffm",
     if model == "linear":
         return (lr_out, []) if with_masks else lr_out
     if model == "mlp":
-        e = jnp.take(params["emb"], idx, axis=0)  # (B,F,F,k)
+        e = ffm.gather_rows(params["emb"], idx)  # (B,F,F,k)
         pooled = (jnp.mean(e, axis=2) * val[..., None]).reshape(idx.shape[0], -1)
         if with_masks:
             mlp_out, masks = mlp_apply(cfg, params["mlp"], pooled,

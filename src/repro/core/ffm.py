@@ -37,6 +37,26 @@ def lr_specs(cfg: FFMConfig) -> Dict[str, ParamSpec]:
     }
 
 
+def gather_rows(emb, idx) -> jnp.ndarray:
+    """Embedding row gather, the one hot-path access every FFM code path
+    funnels through. ``emb`` is either the f32 table ``(V, F, k)`` or an int8
+    row-quantized table dict (``quantization.quantize_rows`` format): for the
+    latter only the int8 codes plus two f32 scalars per row cross memory, and
+    the rows dequantize in-register right after the gather — the f32 table
+    never exists on the request path (§6 serving)."""
+    if isinstance(emb, dict):
+        c = jnp.take(emb["codes"], idx, axis=0).astype(jnp.float32)
+        s = jnp.take(emb["scale"], idx)
+        z = jnp.take(emb["zero"], idx)
+        return c * s[..., None, None] + z[..., None, None]
+    return jnp.take(emb, idx, axis=0)
+
+
+def table_dtype(emb):
+    """Dtype of the *dequantized* rows ``gather_rows`` yields."""
+    return jnp.float32 if isinstance(emb, dict) else emb.dtype
+
+
 def pair_indices(n_fields: int) -> Tuple[np.ndarray, np.ndarray]:
     """Upper-triangle (i<j) field pairs — the DiagMask."""
     iu = np.triu_indices(n_fields, k=1)
@@ -146,7 +166,7 @@ def extend_context_prefix(cfg: FFMConfig, emb: jnp.ndarray, lr_w: jnp.ndarray,
     """
     p = prefix["emb"].shape[0]
     fc = p + tail_idx.shape[0]
-    te = jnp.take(emb, tail_idx, axis=0)                    # (t, F, k)
+    te = gather_rows(emb, tail_idx)                         # (t, F, k)
     e = jnp.concatenate([prefix["emb"], te], axis=0)        # (p+t, F, k)
     v = jnp.concatenate([prefix["val"], tail_val.astype(jnp.float32)])
     # pair (i, j): dot(e[i, field j], e[j, field i]) * v_i * v_j
@@ -157,6 +177,61 @@ def extend_context_prefix(cfg: FFMConfig, emb: jnp.ndarray, lr_w: jnp.ndarray,
     lr_tail = (jnp.take(lr_w, tail_idx) * tail_val).astype(jnp.float32)
     lr_terms = jnp.concatenate([prefix["lr_terms"], lr_tail])
     return {"emb": e, "val": v, "pairs": pairs, "lr_terms": lr_terms}
+
+
+def gather_rows_np(emb, idx: np.ndarray) -> np.ndarray:
+    """Host-numpy :func:`gather_rows` (f32 table or int8 row-quantized dict).
+    Used by the serving engine's context-tail path, which runs on host: the
+    gathered block is tiny (tail fields x F x k), so numpy beats a jit
+    dispatch + device round-trip by a wide margin."""
+    if isinstance(emb, dict):
+        c = emb["codes"][idx].astype(np.float32)
+        s = emb["scale"][idx][..., None, None]
+        z = emb["zero"][idx][..., None, None]
+        return c * s + z
+    return np.asarray(emb)[idx]
+
+
+def extend_context_prefix_np(cfg: FFMConfig, emb, lr_w: np.ndarray,
+                             prefix: Dict[str, np.ndarray],
+                             tail_idx: np.ndarray, tail_val: np.ndarray
+                             ) -> Dict[str, np.ndarray]:
+    """Host-numpy twin of :func:`extend_context_prefix` — identical math,
+    same state format, no XLA dispatch.
+
+    Context resolution is inherently small (a few contexts x a few tail
+    fields per burst), so the jitted vmapped-tails path pays more in
+    stacking, padded buckets, dispatch, and device->host transfers of the
+    results than the arithmetic costs; the serving engine computes tails
+    here instead and keeps the jitted path as the batch-scale reference.
+    ``emb`` may be the f32 table, an int8 row-quantized dict, or any
+    row-gatherable array (``gather_rows_np``).
+    """
+    p = prefix["emb"].shape[0]
+    fc = p + tail_idx.shape[0]
+    te = gather_rows_np(emb, tail_idx).astype(np.float32)    # (t, F, k)
+    e = np.concatenate([prefix["emb"], te], axis=0)          # (p+t, F, k)
+    v = np.concatenate([prefix["val"],
+                        np.asarray(tail_val, np.float32)])
+    dots = np.einsum("itk,tik->it", e[:, p:fc], te[:, :fc])  # (p+t, t)
+    pm = dots * (v[:, None] * v[None, p:])
+    ii, jt = tail_pair_gather(fc, p)
+    pairs = np.concatenate([prefix["pairs"], pm[ii, jt].astype(np.float32)])
+    lr_tail = (np.asarray(lr_w)[tail_idx]
+               * np.asarray(tail_val, np.float32)).astype(np.float32)
+    lr_terms = np.concatenate([prefix["lr_terms"], lr_tail])
+    return {"emb": e, "val": v, "pairs": pairs, "lr_terms": lr_terms}
+
+
+def empty_context_prefix_np(cfg: FFMConfig, dtype=np.float32
+                            ) -> Dict[str, np.ndarray]:
+    """Host-numpy :func:`empty_context_prefix`."""
+    return {
+        "emb": np.zeros((0, cfg.n_fields, cfg.k), dtype),
+        "val": np.zeros((0,), np.float32),
+        "pairs": np.zeros((0,), np.float32),
+        "lr_terms": np.zeros((0,), np.float32),
+    }
 
 
 def slice_context_prefix(state: Dict[str, jnp.ndarray], depth: int
@@ -172,8 +247,9 @@ def slice_context_prefix(state: Dict[str, jnp.ndarray], depth: int
 
 
 def lookup(cfg: FFMConfig, emb: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """idx: (B, F) -> E: (B, F, F, k) with E[b, i, j] = emb[idx[b,i], j]."""
-    return jnp.take(emb, idx, axis=0)
+    """idx: (B, F) -> E: (B, F, F, k) with E[b, i, j] = emb[idx[b,i], j].
+    Accepts an int8 row-quantized table dict (see :func:`gather_rows`)."""
+    return gather_rows(emb, idx)
 
 
 def interactions(cfg: FFMConfig, emb, idx, val) -> jnp.ndarray:

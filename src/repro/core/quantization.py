@@ -15,6 +15,13 @@ The paper's algorithm, verbatim:
 Two implementations: a vectorized jnp one (jit-able, used in the transfer
 channel for any architecture's pytree) and the Pallas kernel in
 ``repro.kernels.quantize`` for the TPU hot path.
+
+This module also hosts the **serving-resident int8 row quantization**
+(:func:`quantize_rows` and friends): per-row dynamic-range grids over the
+embedding tables that the serving engine keeps resident instead of f32, so
+the gather-bandwidth-dominated request path moves a quarter of the bytes and
+delta-frame ingest requantizes only touched rows. See the section comment
+below for the grid definition and error bounds.
 """
 from __future__ import annotations
 
@@ -161,6 +168,178 @@ def dequantize(q: jnp.ndarray, meta: QuantMeta, outliers=None) -> jnp.ndarray:
 def max_error(meta: QuantMeta) -> float:
     """Quantization error bound: half a bucket (plus bound-rounding slack)."""
     return 0.5 * meta.bucket_size
+
+
+# ---------------------------------------------------------------------------
+# Int8 row quantization for the *serving-resident* weights (§6, serving side)
+# ---------------------------------------------------------------------------
+#
+# The 16-bit machinery above is the paper's *wire* format: one global grid
+# over the full weight space, optimized for byte-stable diffs. The serving
+# engine's quantized inference path needs something different — per-row grids
+# over the embedding table, so (a) the CPU-bound gather hot path moves 1 byte
+# per element instead of 4, (b) a delta frame's touched rows requantize
+# independently (untouched rows keep byte-identical codes — no global grid to
+# churn), and (c) the per-row scale/zero pair is two f32 gathers the kernel
+# folds into its in-register dequantize.
+#
+# Grid: symmetric-around-midpoint affine. For row r with values in
+# [mn, mx]: scale_r = (mx - mn) / (ROW_LEVELS - 1), zero_r = (mn + mx) / 2,
+# code = round((w - zero_r) / scale_r) in [-127, 127] (int8; -128 unused so
+# the grid is symmetric). Dequantize: w ≈ code * scale_r + zero_r.
+# Reconstruction error is bounded by scale_r / 2 per element
+# (:func:`row_max_error`), which :func:`pair_logit_tolerance` lifts to a
+# rigorous bound on the FFM interaction logits.
+
+ROW_LEVELS = 255  # codes -127..127
+
+
+def quantize_rows(w: np.ndarray):
+    """Row-wise int8 quantization of a table ``w`` (rows on axis 0).
+
+    Pure numpy (runs on the serving engine's background ingest thread — an
+    XLA dispatch there would contend with scorers for the executor).
+    Returns ``{"codes": int8 w.shape, "scale": f32 (rows,), "zero": f32
+    (rows,)}`` — the quantized-table dict the serving layer stores in place
+    of the f32 leaf (``ffm.gather_rows`` consumes it).
+    """
+    w = np.asarray(w, np.float32)
+    flat = w.reshape(w.shape[0], -1)
+    mn = flat.min(axis=1)
+    mx = flat.max(axis=1)
+    # degenerate (constant) rows: scale 1 and codes 0 reconstruct mn exactly
+    scale = np.where(mx > mn, (mx - mn) / np.float32(ROW_LEVELS - 1),
+                     np.float32(1.0)).astype(np.float32)
+    zero = ((mn + mx) * np.float32(0.5)).astype(np.float32)
+    bshape = (w.shape[0],) + (1,) * (w.ndim - 1)
+    q = np.rint((w - zero.reshape(bshape)) / scale.reshape(bshape))
+    codes = np.clip(q, -127, 127).astype(np.int8)
+    return {"codes": codes, "scale": scale, "zero": zero}
+
+
+def requantize_rows(qtable, w: np.ndarray, row_ranges) -> dict:
+    """Requantize only ``row_ranges`` (iterable of ``(start, stop)``) of
+    ``w`` into a *copy* of ``qtable``; untouched rows keep byte-identical
+    codes/scale/zero (each row's grid depends only on that row's values).
+
+    The copies matter: the previous table stays published to concurrent
+    scorers until the engine's atomic swap, so it must never mutate. The
+    codes copy is the 1-byte-per-element one — a quarter of what re-copying
+    the f32 leaf would move.
+    """
+    out = {"codes": qtable["codes"].copy(), "scale": qtable["scale"].copy(),
+           "zero": qtable["zero"].copy()}
+    # scattered deltas produce many single-row ranges: gather them into one
+    # block and quantize once, instead of a numpy round-trip per range
+    rows = (np.concatenate([np.arange(r0, r1) for r0, r1 in row_ranges])
+            if row_ranges else np.zeros(0, np.int64))
+    if rows.size:
+        part = quantize_rows(np.asarray(w, np.float32)[rows])
+        out["codes"][rows] = part["codes"]
+        out["scale"][rows] = part["scale"]
+        out["zero"][rows] = part["zero"]
+    return out
+
+
+def dequantize_rows(qtable) -> np.ndarray:
+    """Full-table f32 reconstruction (oracle/debug — the serving hot path
+    never calls this; it dequantizes gathered rows in-register instead)."""
+    codes = np.asarray(qtable["codes"])
+    bshape = (codes.shape[0],) + (1,) * (codes.ndim - 1)
+    return (codes.astype(np.float32) * np.asarray(qtable["scale"]).reshape(bshape)
+            + np.asarray(qtable["zero"]).reshape(bshape))
+
+
+def is_row_quantized(leaf) -> bool:
+    """True for the quantized-table dict :func:`quantize_rows` produces."""
+    return isinstance(leaf, dict) and "codes" in leaf and "scale" in leaf
+
+
+def row_max_error(qtable) -> float:
+    """Max |w - dequantize(quantize(w))| over the table: half the coarsest
+    row's bucket (the per-row analogue of :func:`max_error`)."""
+    return float(np.max(np.asarray(qtable["scale"]))) * 0.5
+
+
+def pair_logit_tolerance(cfg, emb_absmax: float, eps: float,
+                         vmax: float = 1.0) -> float:
+    """Rigorous bound on the FFM-logit deviation caused by per-element
+    embedding error ``eps`` (= :func:`row_max_error` of the serving table).
+
+    Each DiagMask pair contributes ``e_i · e_j * v_i * v_j`` with both sides
+    quantized, so its deviation is at most ``k * (2 * |e|_inf * eps + eps^2)
+    * vmax^2``; the ``ffm`` head sums ``n_pairs`` of them and the LR part is
+    exact (the LR table stays f32). For ``deepffm`` the MergeNorm/MLP head
+    can amplify further — use the roundtrip-oracle parity check for exact
+    head-agnostic equivalence and this bound for the additive part.
+    """
+    per_pair = cfg.k * (2.0 * emb_absmax * eps + eps * eps) * vmax * vmax
+    return cfg.n_pairs * per_pair
+
+
+ROW_QUANT_PATHS = (("ffm", "emb"), ("emb",))
+
+
+def quantize_params_rows(params, prev=None, touched_rows=None,
+                         paths=ROW_QUANT_PATHS, stats=None):
+    """Serving-side quantize-on-ingest: replace the embedding-table leaves of
+    a params pytree with int8 row-quantized table dicts.
+
+    ``paths`` names the row-gathered tables (DeepFFM's ``ffm/emb`` and the
+    mlp baseline's top-level ``emb``); every other leaf (LR, MergeNorm, MLP —
+    tiny next to the tables) stays f32. ``prev`` is the previously published
+    quantized params: when given together with ``touched_rows`` (a dict
+    mapping "/".joined leaf paths to row ``(start, stop)`` range lists), only
+    those rows requantize — the steady-state delta-frame ingest cost.
+    Returns a new top-level pytree; untouched subtrees are shared.
+    ``stats`` (a mutable dict) gets ``"rows_requantized"`` incremented by the
+    number of rows actually (re)quantized.
+    """
+    out = {k: v for k, v in params.items()}
+    for path in paths:
+        node, parent = out, None
+        for key in path:
+            if not isinstance(node, dict) or key not in node:
+                node = None
+                break
+            parent, node = node, node[key]
+        if node is None or is_row_quantized(node):
+            continue
+        # copy the subdict chain so the caller's pytree is never mutated
+        sub = out
+        for key in path[:-1]:
+            sub[key] = dict(sub[key])
+            sub = sub[key]
+        pstr = "/".join(path)
+        pq = None
+        if prev is not None:
+            pnode = prev
+            for key in path:
+                pnode = pnode.get(key) if isinstance(pnode, dict) else None
+                if pnode is None:
+                    break
+            if pnode is not None and is_row_quantized(pnode) \
+                    and pnode["codes"].shape == np.asarray(node).shape:
+                pq = pnode
+        if pq is not None and touched_rows is not None:
+            ranges = touched_rows.get(pstr, ())
+            sub[path[-1]] = requantize_rows(pq, node, ranges)
+            n_rows = sum(r1 - r0 for r0, r1 in ranges)
+        else:
+            sub[path[-1]] = quantize_rows(np.asarray(node))
+            n_rows = sub[path[-1]]["codes"].shape[0]
+        if stats is not None:
+            stats["rows_requantized"] = stats.get("rows_requantized", 0) + n_rows
+    return out
+
+
+def quantized_nbytes(params) -> int:
+    """Total resident bytes of a params pytree, counting quantized-table
+    dicts at their int8+scales size (the bench's ~4x-down assertion)."""
+    import jax
+
+    return sum(np.asarray(leaf).nbytes
+               for leaf in jax.tree_util.tree_leaves(params))
 
 
 # ---------------------------------------------------------------------------

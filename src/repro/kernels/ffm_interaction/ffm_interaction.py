@@ -122,3 +122,83 @@ def ffm_candidate_matrices(ectx: jnp.ndarray, vctx: jnp.ndarray, ecx: jnp.ndarra
         interpret=interpret,
     )(ectx, vctx, ecx, ecc, vcand)
     return xc[:, :n], aa[:, :n]
+
+
+def _cand_kernel_q8(ectx_ref, vctx_ref, qcx_ref, qcc_ref, s_ref, z_ref,
+                    vcand_ref, xc_ref, aa_ref):
+    ectx = ectx_ref[0]   # (Fc, Fcand, K) f32 — cached ctx partial (activation)
+    vctx = vctx_ref[0]   # (Fc,)
+    vc = vcand_ref[0]    # (Nt, Fcand)
+    s = s_ref[0][:, :, None, None]  # (Nt, Fcand, 1, 1) per-hash-row grids
+    z = z_ref[0][:, :, None, None]
+    # in-register dequantize: the int8 codes are what crossed HBM; the f32
+    # rows exist only in this tile's VMEM for the duration of the dot pass
+    ecx = qcx_ref[0].astype(jnp.float32) * s + z  # (Nt, Fcand, Fc, K)
+    ecc = qcc_ref[0].astype(jnp.float32) * s + z  # (Nt, Fcand, Fcand, K)
+    ecx_t = jnp.swapaxes(ecx, 1, 2)               # (Nt, Fc, Fcand, K)
+    dots_xc = jnp.sum(ectx[None] * ecx_t, axis=-1)
+    xc_ref[0] = dots_xc * vctx[None, :, None] * vc[:, None, :]
+    dots_aa = jnp.sum(ecc * jnp.swapaxes(ecc, 1, 2), axis=-1)
+    aa_ref[0] = dots_aa * vc[:, :, None] * vc[:, None, :]
+
+
+def ffm_candidate_matrices_q8(ectx: jnp.ndarray, vctx: jnp.ndarray,
+                              qcx: jnp.ndarray, qcc: jnp.ndarray,
+                              scale: jnp.ndarray, zero: jnp.ndarray,
+                              vcand: jnp.ndarray, *, block_n: int = 64,
+                              interpret: bool = True):
+    """Fused dequantize + candidate-block interactions (§5 hot loop x §6).
+
+    The int8 twin of :func:`ffm_candidate_matrices`: candidate embeddings
+    arrive as int8 codes gathered straight from the row-quantized serving
+    table (``quantization.quantize_rows`` grids), with one ``(scale, zero)``
+    f32 pair per candidate feature row. Dequantization happens in-register
+    inside the kernel, so the request path's memory traffic for candidate
+    rows is 1 byte/element + two scalars per row — the f32 candidate block
+    never exists in memory. The cached context side stays f32: those are
+    activations (computed partials), not resident weights.
+
+    ectx:  (R, Fc, Fcand, K) f32   cached context embeddings (cand fields)
+    vctx:  (R, Fc)                 cached context values
+    qcx:   (R, N, Fcand, Fc, K)    int8 candidate codes for context fields
+    qcc:   (R, N, Fcand, Fcand, K) int8 candidate codes for candidate fields
+    scale: (R, N, Fcand) f32       per-candidate-row dequant scale
+    zero:  (R, N, Fcand) f32       per-candidate-row dequant zero point
+    vcand: (R, N, Fcand)           candidate values
+    ->     xc (R, N, Fc, Fcand), aa (R, N, Fcand, Fcand) f32 dot matrices
+    """
+    r, fc, fcand, k = ectx.shape
+    n = qcx.shape[1]
+    nt = min(block_n, n)
+    pad = (-n) % nt
+    if pad:
+        qcx = jnp.pad(qcx, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qcc = jnp.pad(qcc, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad), (0, 0)))
+        zero = jnp.pad(zero, ((0, 0), (0, pad), (0, 0)))
+        vcand = jnp.pad(vcand, ((0, 0), (0, pad), (0, 0)))
+    np_ = qcx.shape[1]
+    grid = (r, np_ // nt)
+    xc, aa = pl.pallas_call(
+        _cand_kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, fc, fcand, k), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, fc), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nt, fcand, fc, k), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, nt, fcand, fcand, k), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, nt, fcand), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, nt, fcand), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, nt, fcand), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nt, fc, fcand), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, nt, fcand, fcand), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, np_, fc, fcand), jnp.float32),
+            jax.ShapeDtypeStruct((r, np_, fcand, fcand), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ectx, vctx, qcx, qcc, scale, zero, vcand)
+    return xc[:, :n], aa[:, :n]

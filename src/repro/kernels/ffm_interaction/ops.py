@@ -17,14 +17,16 @@ import jax.numpy as jnp
 from repro.core import ffm as ffm_core
 from repro.kernels.ffm_interaction.ffm_interaction import (
     ffm_candidate_matrices,
+    ffm_candidate_matrices_q8,
     ffm_interaction_matrix,
 )
 
 
 @partial(jax.jit, static_argnums=(0,))
 def interactions(cfg, emb, idx, val):
-    """(B, n_pairs) DiagMask'd interactions, Pallas-computed dot matrix."""
-    e = jnp.take(emb, idx, axis=0)  # (B, F, F, K)
+    """(B, n_pairs) DiagMask'd interactions, Pallas-computed dot matrix.
+    ``emb`` may be an int8 row-quantized table dict (``ffm.gather_rows``)."""
+    e = ffm_core.gather_rows(emb, idx)  # (B, F, F, K)
     d = ffm_interaction_matrix(e, val)
     pi, pj = ffm_core.pair_indices(cfg.n_fields)
     return d[:, pi, pj]
@@ -42,6 +44,27 @@ def candidate_interactions(cfg, emb_ctx, val_ctx, ec, cand_val):
     fc = cfg.context_fields
     xc_mat, aa_mat = ffm_candidate_matrices(
         emb_ctx[:, :, fc:], val_ctx, ec[..., :fc, :], ec[..., fc:, :], cand_val)
+    (pi, pj), _, xc, aa = ffm_core.pair_split(cfg)
+    pairs_xc = xc_mat[:, :, pi[xc], pj[xc] - fc]
+    pairs_aa = aa_mat[:, :, pi[aa] - fc, pj[aa] - fc]
+    return pairs_xc, pairs_aa
+
+
+@partial(jax.jit, static_argnums=(0,))
+def candidate_interactions_q8(cfg, emb_ctx, val_ctx, qc, scale, zero, cand_val):
+    """Quantized-serving twin of :func:`candidate_interactions` (§6).
+
+    ``qc`` is the raw int8 code block gathered from the row-quantized table —
+    ``(R, N, Fcand, F, K)``, split here into its context-field and
+    candidate-field column halves — with ``scale``/``zero`` ``(R, N, Fcand)``
+    the per-candidate-row dequant grids. The fused kernel dequantizes
+    in-register; the cached context partials ``emb_ctx``/``val_ctx`` stay f32
+    (activations, not resident weights).
+    """
+    fc = cfg.context_fields
+    xc_mat, aa_mat = ffm_candidate_matrices_q8(
+        emb_ctx[:, :, fc:], val_ctx, qc[..., :fc, :], qc[..., fc:, :],
+        scale, zero, cand_val)
     (pi, pj), _, xc, aa = ffm_core.pair_split(cfg)
     pairs_xc = xc_mat[:, :, pi[xc], pj[xc] - fc]
     pairs_aa = aa_mat[:, :, pi[aa] - fc, pj[aa] - fc]

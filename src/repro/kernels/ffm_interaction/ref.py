@@ -22,3 +22,13 @@ def ffm_candidate_matrices_ref(ectx, vctx, ecx, ecc, vcand):
     dots_aa = jnp.einsum("rnijk,rnjik->rnij", ecc, ecc)
     aa = dots_aa * vcand[:, :, :, None] * vcand[:, :, None, :]
     return xc, aa
+
+
+def ffm_candidate_matrices_q8_ref(ectx, vctx, qcx, qcc, scale, zero, vcand):
+    """Oracle for the fused int8 candidate kernel: dequantize the codes with
+    the per-row ``(scale, zero)`` grids, then the f32 reference math."""
+    s = scale[..., None, None]
+    z = zero[..., None, None]
+    ecx = qcx.astype(jnp.float32) * s + z
+    ecc = qcc.astype(jnp.float32) * s + z
+    return ffm_candidate_matrices_ref(ectx, vctx, ecx, ecc, vcand)

@@ -19,10 +19,13 @@ composition point; each component maps to a paper section:
 * **§5 (context cache)** — the cache is a *prefix tree* over ``(idx, val)``
   field tokens (:mod:`repro.serving.prefix_cache`), mirroring the paper's
   radix tree over raw request strings: a lookup reuses the deepest cached
-  prefix partial and only the context *tail* is computed, batched across a
-  whole cache-miss burst (:func:`compute_context_tails` is vmap-batched over
-  each miss group). Entries are stamped with the weight generation and lazily
-  refreshed after a hot swap.
+  prefix partial and only the context *tail* is computed, grouped across a
+  whole cache-miss burst per cached depth. Tails run **on host**
+  (:func:`ffm.extend_context_prefix_np`): the arithmetic is tiny, so numpy
+  beats the old vmapped-jit path's stacking/dispatch/transfer overhead and
+  can never compile mid-traffic (:func:`compute_context_tails` remains as
+  the jitted batch-scale reference). Entries are stamped with the weight
+  generation and lazily refreshed after a hot swap.
 * **§5 (candidate dedup)** — real multi-request traffic repeats candidates:
   :meth:`InferenceEngine.score_batch` dedups identical ``(context,
   candidate)`` rows across the microbatch, scores each unique row once per
@@ -35,6 +38,27 @@ composition point; each component maps to a paper section:
 * **§6 (weight transfer)** — updates arrive as versioned quantized-patch
   frames (``checkpoint.transfer.unframe``); the engine tracks the trainer's
   version stamp alongside its own generation counter.
+* **§6 (quantized serving path)** — ``InferenceEngine(quantized=True)``
+  keeps the embedding tables resident as **int8 rows** with per-row
+  ``(scale, zero)`` grids (``quantization.quantize_rows``) instead of f32:
+  the update pipe quantizes on ingest (delta frames requantize only their
+  touched rows), every scoring gather moves a quarter of the bytes, and
+  dequantization happens in-register — inside the fused Pallas candidate
+  kernel (``ffm_candidate_matrices_q8``) on the ``pallas`` backend, or right
+  after the gather on the ``reference`` backend — so the f32 tables never
+  exist in memory on the request path. Cached context partials stay f32
+  (they are activations, not weights; the prefix cache needs only its
+  existing per-generation entry slots). **Tolerance contract**: scores
+  deviate from the f32 oracle by at most the per-row reconstruction error
+  ``quantization.row_max_error`` propagated through the pair sum
+  (``quantization.pair_logit_tolerance`` bounds the additive FFM part
+  rigorously; the DeepFFM MLP head can amplify further, so parity there is
+  asserted against the *roundtrip* oracle — an f32 engine running the
+  dequantized tables — which the quantized path matches to float precision).
+  Keep f32 (the default) when scores feed downstream consumers that need
+  sub-quantization-step calibration or when the model head is too sensitive
+  to embedding perturbation; quantize when serving is gather-bandwidth
+  bound — the paper's CPU deployment regime.
 
 Request batching: candidate counts are padded to power-of-two buckets and
 multiple requests are stacked into one jitted call
@@ -44,6 +68,9 @@ checkpoint depths close the set of tail shapes too, the *entire* compiled
 shape set is enumerable up front: :meth:`InferenceEngine.warmup` pre-compiles
 it at construction so no request ever pays compile latency. Latency is
 tracked per request with p50/p95/p99 percentiles in :class:`ServeStats`.
+Cross-request candidate dedup packs the microbatch's ``(group, idx, val)``
+rows into one contiguous int32 matrix and dedups with ``np.unique`` on a
+void view — no per-row Python hashing on the hot path.
 """
 from __future__ import annotations
 
@@ -60,6 +87,7 @@ import numpy as np
 
 from repro.common.config import FFMConfig
 from repro.core import deepffm, ffm
+from repro.core import quantization as Q
 from repro.serving.prefix_cache import (PrefixCache, context_from_tokens,
                                         context_tokens)
 from repro.serving.update_pipe import UpdatePipe
@@ -181,10 +209,12 @@ def compute_context(cfg: FFMConfig, params, ctx_idx, ctx_val):
     partial in *prefix state* format (see ``ffm.extend_context_prefix``):
     ``emb`` (Fc, F, k), ``val`` (Fc,), ``pairs`` (j-major ctx-ctx
     interactions), ``lr_terms`` (Fc,). Any prefix depth of the state is a
-    pure slice of it."""
-    prefix = ffm.empty_context_prefix(cfg, params["ffm"]["emb"].dtype)
-    return ffm.extend_context_prefix(cfg, params["ffm"]["emb"],
-                                     params["lr"]["w"], prefix,
+    pure slice of it. The emb table may be int8 row-quantized
+    (``ffm.gather_rows`` dequantizes the gathered rows); the partial itself
+    is always an f32 activation."""
+    emb = params["ffm"]["emb"]
+    prefix = ffm.empty_context_prefix(cfg, ffm.table_dtype(emb))
+    return ffm.extend_context_prefix(cfg, emb, params["lr"]["w"], prefix,
                                      ctx_idx, ctx_val)
 
 
@@ -220,7 +250,6 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     f0 = cfg.context_fields
     emb = params["ffm"]["emb"]
     r, n = cand_idx.shape[:2]
-    ec = jnp.take(emb, cand_idx, axis=0)  # (R, N, Fcand, F, k)
 
     (pi, pj), cc, xc, aa = ffm.pair_split(cfg)
     emb_ctx, val_ctx = cached["emb"], cached["val"]
@@ -230,9 +259,19 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     if backend == "pallas":
         from repro.kernels.ffm_interaction import ops as ffm_ops
 
-        pairs_xc, pairs_aa = ffm_ops.candidate_interactions(
-            cfg, emb_ctx, val_ctx, ec, cand_val)
+        if isinstance(emb, dict):  # int8 rows: gather codes, dequant in-kernel
+            qc = jnp.take(emb["codes"], cand_idx, axis=0)
+            s = jnp.take(emb["scale"], cand_idx)
+            z = jnp.take(emb["zero"], cand_idx)
+            pairs_xc, pairs_aa = ffm_ops.candidate_interactions_q8(
+                cfg, emb_ctx, val_ctx, qc, s, z, cand_val)
+        else:
+            ec = jnp.take(emb, cand_idx, axis=0)  # (R, N, Fcand, F, k)
+            pairs_xc, pairs_aa = ffm_ops.candidate_interactions(
+                cfg, emb_ctx, val_ctx, ec, cand_val)
     else:
+        # gather_rows dequantizes right after the gather when emb is int8
+        ec = ffm.gather_rows(emb, cand_idx)               # (R, N, Fcand, F, k)
         # ctx-cand: pair (i ctx, j cand): dot(emb_ctx[i, j], ec[j-f0, i]) * v_i * v_j
         exi = emb_ctx[:, pi[xc], pj[xc]]                  # (R, n_xc, k) ctx side
         exj = ec[:, :, pj[xc] - f0, pi[xc]]               # (R, N, n_xc, k) cand side
@@ -291,20 +330,34 @@ class InferenceEngine:
     * ``warmup_buckets`` — ``(max_requests, max_candidates)``; when given
       (and params are installed) every padding-bucket/tail shape combination
       is pre-compiled at construction via :meth:`warmup`.
+    * ``quantized`` — serve from int8 row-quantized embedding tables (§6):
+      installed/ingested f32 params are row-quantized
+      (``quantization.quantize_params_rows``; the update pipe requantizes
+      only a delta frame's touched rows) and scoring dequantizes gathered
+      rows in-register. One-flag switch; the f32 default is the oracle. See
+      the module docstring for the tolerance contract.
+    * ``prefix_depths`` — explicit checkpoint-depth set for the prefix
+      cache, overriding ``prefix_stride``; feed it from
+      :meth:`suggest_checkpoint_depths` of a running engine to adapt the
+      depth set to observed traffic.
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
                  backend: str = "reference", params=None,
                  cache_entries: int = 4096, min_bucket: int = 8,
                  prefix_stride: Optional[int] = 4, dedup: bool = True,
-                 warmup_buckets: Optional[Tuple[int, int]] = None):
+                 warmup_buckets: Optional[Tuple[int, int]] = None,
+                 quantized: bool = False,
+                 prefix_depths: Optional[Sequence[int]] = None):
         self.plan = ScoringPlan(cfg, model, backend=backend, min_bucket=min_bucket)
         self.cache_entries = cache_entries
         self.dedup = dedup
+        self.quantized = quantized
         self.weights_version = 0     # trainer's stamp from the update frame
-        self._weights: Tuple[Optional[Dict], int] = (params, 0)
+        self._weights: Tuple[Optional[Dict], int] = (
+            self._maybe_quantize(params), 0)
         self._cache = PrefixCache(cfg.context_fields, cache_entries,
-                                  stride=prefix_stride)
+                                  stride=prefix_stride, depths=prefix_depths)
         self._lock = threading.Lock()  # cache structure + counters + weights
         self.hits = 0
         self.misses = 0
@@ -347,17 +400,65 @@ class InferenceEngine:
         (depth == context_fields is a full hit, 0 a cold miss)."""
         return self._cache.hit_depths
 
+    @property
+    def resident_weight_bytes(self) -> int:
+        """Bytes of the currently published weight pytree — ~4x smaller with
+        ``quantized=True`` (int8 codes + two f32 scalars per row)."""
+        params = self.params
+        return 0 if params is None else Q.quantized_nbytes(params)
+
+    def suggest_checkpoint_depths(self, max_depths: int = 4,
+                                  min_share: float = 0.05) -> List[int]:
+        """Checkpoint depths adapted to observed traffic (ROADMAP follow-on).
+
+        Ranks the intermediate depths of the prefix-hit histogram (collected
+        per lookup into :attr:`prefix_hit_depths` alongside ``ServeStats``)
+        by how many lookups actually reused a partial there, keeps those
+        carrying at least ``min_share`` of the intermediate hits (at most
+        ``max_depths`` of them), and always includes the full depth. Pass the
+        result as ``prefix_depths=`` to the next engine (the depth set closes
+        the compiled tail-shape set, so it is fixed per engine — adapting it
+        live would trigger mid-traffic compiles): checkpoints traffic never
+        reuses stop costing cache inserts and warmup compiles, while the
+        depths real prefix overlap concentrates on survive.
+        """
+        fc = self.cfg.context_fields
+        with self._lock:  # scorer threads insert histogram keys under it
+            hist = dict(self._cache.hit_depths)
+        inter = {d: c for d, c in hist.items() if 0 < d < fc and c > 0}
+        total = sum(inter.values())
+        if not total:  # no observed intermediate reuse: keep the current set
+            return self._cache.checkpoint_depths()
+        ranked = sorted(inter.items(), key=lambda dc: (-dc[1], dc[0]))
+        keep = [d for d, c in ranked if c / total >= min_share][:max_depths]
+        return sorted(set(keep) | {fc})
+
     # -- weight management (§3 / §6) ---------------------------------------
+    def _maybe_quantize(self, params, prev=None, touched_rows=None):
+        """Row-quantize the embedding tables of an f32 pytree when this
+        engine serves quantized; no-op otherwise (or when ``params`` already
+        carries quantized tables)."""
+        if not self.quantized or params is None:
+            return params
+        return Q.quantize_params_rows(params, prev=prev,
+                                      touched_rows=touched_rows)
+
     def install_params(self, params) -> None:
         """Directly swap the weight pytree in place (tests / local serving).
         The (params, generation) pair is published atomically, so concurrent
-        scorers see either the old or the new version, never a mix."""
+        scorers see either the old or the new version, never a mix. On a
+        quantized engine f32 params are row-quantized here (full-table —
+        only the update pipe knows touched rows)."""
+        params = self._maybe_quantize(params)
         with self._lock:  # serialize the generation bump against _publish
             self._weights = (params, self._weights[1] + 1)
 
     def _publish(self, params, version: int, nbytes: int) -> int:
         """Atomically install a fully materialized params pytree (the update
-        pipe's publish step — the only weight work under the request lock)."""
+        pipe's publish step — the only weight work under the request lock).
+        The quantize fallback runs *before* the lock and is a no-op for the
+        update pipe, which ships already-quantized tables."""
+        params = self._maybe_quantize(params)
         with self._lock:
             self._weights = (params, self._weights[1] + 1)
             self.weights_version = version
@@ -440,6 +541,24 @@ class InferenceEngine:
         return len(ctxs)
 
     # -- context cache (§5, prefix tree) ------------------------------------
+    _host_tables: Tuple = ()  # up to 2 of (params, emb_view, lr_view)
+
+    def _host_weights(self, params):
+        """Host-numpy views of the gather tables for the context-tail path
+        (zero-copy on the CPU backend), cached per params object. Two slots —
+        the published generation and the standby one the pipe prewarms — so
+        concurrent prewarm and scoring never thrash the cache. A benign race:
+        concurrent fills compute the same views."""
+        for entry in self._host_tables:
+            if entry[0] is params:
+                return entry[1], entry[2]
+        f = params["ffm"]["emb"]
+        emb = ({k: np.asarray(v) for k, v in f.items()}
+               if isinstance(f, dict) else np.asarray(f))
+        lr = np.asarray(params["lr"]["w"])
+        self._host_tables = ((params, emb, lr),) + self._host_tables[:1]
+        return emb, lr
+
     def _resolve_contexts(self, ctxs: List[Tuple[Tuple[bytes, ...],
                                                  np.ndarray, np.ndarray]],
                           params, generation: int,
@@ -449,9 +568,8 @@ class InferenceEngine:
         plus a full-depth-hit flag per context.
 
         Prefix-tree lookups find the deepest cached partial per context; the
-        remaining tails are computed in vmap-batched groups, one jitted call
-        per distinct cached depth (a closed set — see ``PrefixCache``), with
-        the group axis padded to a power of two.
+        remaining tails are computed on host per miss group, one group per
+        distinct cached depth (a closed set — see ``PrefixCache``).
 
         Resolution runs in rounds so prefix sharing works *within* a miss
         burst too: when several uncached contexts share a checkpoint prefix,
@@ -464,7 +582,7 @@ class InferenceEngine:
         checkpoints = [d for d in self._cache.checkpoint_depths() if d < fc]
         states: List[Optional[Dict]] = [None] * len(ctxs)
         full_hit: List[bool] = [False] * len(ctxs)
-        emb_dt = params["ffm"]["emb"].dtype
+        emb_dt = ffm.table_dtype(params["ffm"]["emb"])
 
         pending = list(range(len(ctxs)))
         first_round = True
@@ -494,58 +612,33 @@ class InferenceEngine:
                     miss_groups.setdefault(depth, []).append(i)
             first_round = False
 
+            # tails are computed on host (ffm.extend_context_prefix_np): the
+            # arithmetic is tiny (members x tail fields x F x k), so the old
+            # vmapped-jit path paid more in group stacking, padded buckets,
+            # dispatch, and device->host result transfers than the math —
+            # the PR 2 overlap-traffic regression. Host tails also never
+            # compile, so prewarm/resolution cannot stall mid-traffic.
+            emb_h, lr_h = self._host_weights(params)
+            empty = ffm.empty_context_prefix_np(self.cfg, emb_dt)
             for depth, members in sorted(miss_groups.items()):
                 t = fc - depth
-                mb = self.plan.bucket(len(members), minimum=1)
-                pad = mb - len(members)
-
-                # cached states live as host numpy arrays: slicing, stacking
-                # and padding here are cheap views/copies, with one device
-                # transfer per leaf at the jit boundary below
-                def stack(leaf, pad_shape, dtype):
-                    rows = leaf + [np.zeros(pad_shape, dtype)] * pad
-                    return np.stack(rows)
-
-                empty = {"emb": np.zeros((0, self.cfg.n_fields, self.cfg.k),
-                                         emb_dt),
-                         "val": np.zeros((0,), np.float32),
-                         "pairs": np.zeros((0,), np.float32),
-                         "lr_terms": np.zeros((0,), np.float32)}
-                sliced = [ffm.slice_context_prefix(looked[i][1], depth)
-                          if looked[i][1] is not None else empty
-                          for i in members]
-                prefix = {
-                    "emb": stack([s["emb"] for s in sliced],
-                                 (depth, self.cfg.n_fields, self.cfg.k),
-                                 emb_dt),
-                    "val": stack([s["val"] for s in sliced], (depth,),
-                                 np.float32),
-                    "pairs": stack([s["pairs"] for s in sliced],
-                                   (ffm.prefix_pair_count(depth),),
-                                   np.float32),
-                    "lr_terms": stack([s["lr_terms"] for s in sliced],
-                                      (depth,), np.float32),
-                }
-                ti = np.zeros((mb, t), np.int32)
-                tv = np.zeros((mb, t), np.float32)
-                for m, i in enumerate(members):
-                    ti[m] = ctxs[i][1][depth:]
-                    tv[m] = ctxs[i][2][depth:]
-                full = compute_context_tails(self.cfg, params, prefix, ti, tv)
-                full = jax.tree_util.tree_map(np.asarray, full)
+                fresh = []
+                for i in members:
+                    base = (ffm.slice_context_prefix(looked[i][1], depth)
+                            if looked[i][1] is not None else empty)
+                    fresh.append(ffm.extend_context_prefix_np(
+                        self.cfg, emb_h, lr_h, base,
+                        ctxs[i][1][depth:], ctxs[i][2][depth:]))
                 with self._lock:
                     if record_stats:
                         self.stats.ctx_partials_full += sum(
                             1 for i in members if looked[i][0] == 0)
                         self.stats.ctx_tail_fields += t * len(members)
-                    for m, i in enumerate(members):
+                    for i, state in zip(members, fresh):
                         if record_stats:
                             self._cache.hit_depths[depth] += 1
-                        # copy out of the stacked group buffer: a view would
-                        # keep the whole (mb, ...) batch alive for as long as
-                        # any one member stays cached
-                        states[i] = {k: v[m].copy() for k, v in full.items()}
-                        self._cache.insert(ctxs[i][0], generation, states[i])
+                        states[i] = state
+                        self._cache.insert(ctxs[i][0], generation, state)
             pending = deferred
         return states, full_hit
 
@@ -575,8 +668,23 @@ class InferenceEngine:
         t0 = time.perf_counter()
         params, generation = self._weights
 
+        fcand = self.cfg.n_fields - self.cfg.context_fields
+
+        def slate(a, dtype):
+            # normalize empty slates (any shape) to (0, Fcand) so empty and
+            # non-empty requests concatenate in one microbatch; anything
+            # non-empty must already be (N, Fcand) — a silent reshape would
+            # misread e.g. full feature rows as extra candidates
+            a = np.asarray(a, dtype)
+            if a.size == 0:
+                return a.reshape(0, fcand)
+            if a.ndim != 2 or a.shape[1] != fcand:
+                raise ValueError(
+                    f"candidate slate must be (N, {fcand}), got {a.shape}")
+            return a
+
         reqs = [(np.asarray(ci, np.int32), np.asarray(cv, np.float32),
-                 np.asarray(ki, np.int32), np.asarray(kv, np.float32))
+                 slate(ki, np.int32), slate(kv, np.float32))
                 for ci, cv, ki, kv in requests]
 
         # unique contexts across the microbatch
@@ -615,73 +723,73 @@ class InferenceEngine:
             group_of_req = list(range(len(reqs)))
             n_groups = len(reqs)
             group_state = [states[u] for u in u_of]
-        rows: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(n_groups)]
-        row_index: List[Dict[bytes, int]] = [{} for _ in range(n_groups)]
-        placements: List[List[Tuple[int, int]]] = []  # per request: (group, pos)
-        for r, (ci, cv, ki, kv) in enumerate(reqs):
-            g = group_of_req[r]
-            place = []
-            if self.dedup:  # one tobytes per array, sliced per candidate row
-                bi, bv = ki.tobytes(), kv.tobytes()
-                ri, rv = ki.shape[1] * ki.itemsize, kv.shape[1] * kv.itemsize
-            for c in range(ki.shape[0]):
-                if self.dedup:
-                    key = (bi[c * ri:(c + 1) * ri]
-                           + bv[c * rv:(c + 1) * rv])
-                    pos = row_index[g].get(key)
-                else:
-                    pos = None
-                if pos is None:
-                    pos = len(rows[g])
-                    rows[g].append((ki[c], kv[c]))
-                    if self.dedup:
-                        row_index[g][key] = pos
-                place.append((g, pos))
-            placements.append(place)
+        counts = np.asarray([r[2].shape[0] for r in reqs], np.int64)
+        total = int(counts.sum())
+        if total == 0:  # every request carried an empty slate
+            with self._lock:
+                self.stats.record(time.perf_counter() - t0, 0,
+                                  requests=len(reqs))
+            return [np.zeros((0,), np.float32) for _ in reqs]
+        group_of_row = np.repeat(np.asarray(group_of_req, np.int64), counts)
+        ki_all = np.concatenate([r[2] for r in reqs])      # (total, Fcand)
+        kv_all = np.concatenate([r[3] for r in reqs])
+        if self.dedup:
+            # packed-array dedup: one contiguous (group | idx | val-bits)
+            # int32 matrix viewed as void rows for np.unique — identical
+            # semantics to per-row byte keys, no Python-level row loop
+            mat = np.empty((total, 1 + 2 * fcand), np.int32)
+            mat[:, 0] = group_of_row
+            mat[:, 1:1 + fcand] = ki_all
+            mat[:, 1 + fcand:] = kv_all.view(np.int32)
+            packed = np.ascontiguousarray(mat).view(
+                np.dtype((np.void, mat.itemsize * mat.shape[1])))[:, 0]
+            _, first, inverse = np.unique(packed, return_index=True,
+                                          return_inverse=True)
+        else:
+            first = inverse = np.arange(total)
+        u_group = group_of_row[first]
+        n_rows = int(first.size)
 
         # a dedup group unions candidates from several requests and can exceed
         # the per-request bucket; chunk groups to the request-level bucket so
         # padded work never exceeds the no-dedup layout and the compiled shape
         # set stays the closed per-request one (see warmup)
-        n_rows = sum(len(g) for g in rows)
-        nb = self.plan.bucket(max(r[2].shape[0] for r in reqs))
-        chunks: List[Tuple[int, int]] = []           # (group, start offset)
-        chunk_of: Dict[Tuple[int, int], int] = {}    # (group, chunk no) -> row
-        for g, grows in enumerate(rows):
-            for s in range(0, len(grows), nb):
-                chunk_of[(g, s // nb)] = len(chunks)
-                chunks.append((g, s))
-        if not chunks:  # every request carried an empty slate
-            with self._lock:
-                self.stats.record(time.perf_counter() - t0, 0,
-                                  requests=len(reqs))
-            return [np.zeros((0,), np.float32) for _ in reqs]
-        rb = self.plan.bucket(len(chunks), minimum=1)
-        fcand = self.cfg.n_fields - fc
+        nb = self.plan.bucket(int(counts.max()))
+        order = np.argsort(u_group, kind="stable")
+        gcounts = np.bincount(u_group, minlength=n_groups)
+        gstarts = np.concatenate([[0], np.cumsum(gcounts)[:-1]])
+        pos = np.empty(n_rows, np.int64)  # rank of each unique row in its group
+        pos[order] = np.arange(n_rows) - np.repeat(gstarts, gcounts)
+        chunks_per_g = -(-gcounts // nb)
+        chunk_base = np.concatenate([[0], np.cumsum(chunks_per_g)[:-1]])
+        n_chunks = int(chunks_per_g.sum())
+        row_of_u = chunk_base[u_group] + pos // nb
+        slot_of_u = pos % nb
+
+        rb = self.plan.bucket(n_chunks, minimum=1)
         ki_b = np.zeros((rb, nb, fcand), np.int32)
         kv_b = np.zeros((rb, nb, fcand), np.float32)
-        for row_i, (g, s) in enumerate(chunks):
-            for pos, (ki, kv) in enumerate(rows[g][s:s + nb]):
-                ki_b[row_i, pos], kv_b[row_i, pos] = ki, kv
+        ki_b[row_of_u, slot_of_u] = ki_all[first]
+        kv_b[row_of_u, slot_of_u] = kv_all[first]
 
-        chunk_state = [group_state[g] for g, _ in chunks]
+        chunk_group = np.repeat(np.arange(n_groups), chunks_per_g)
+        chunk_state = [group_state[g] for g in chunk_group]
         stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *chunk_state)
-        if rb > len(chunks):
+        if rb > n_chunks:
             stacked = jax.tree_util.tree_map(
                 lambda x: np.concatenate(
-                    [x, np.zeros((rb - len(chunks),) + x.shape[1:], x.dtype)]),
+                    [x, np.zeros((rb - n_chunks,) + x.shape[1:], x.dtype)]),
                 stacked)
         out = batched_candidates_forward(
             self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
         out = np.asarray(jax.block_until_ready(out))  # one transfer, then
         # plain numpy scatter-back (no per-request device gathers)
-        results = [out[[chunk_of[(g, p // nb)] for g, p in place],
-                       [p % nb for _, p in place]]
-                   for place in placements]
+        flat = out[row_of_u[inverse], slot_of_u[inverse]]
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        results = [flat[offs[i]:offs[i + 1]] for i in range(len(reqs))]
         with self._lock:
             self.stats.rows_scored += n_rows
-            self.stats.record(time.perf_counter() - t0,
-                              sum(r[2].shape[0] for r in reqs),
+            self.stats.record(time.perf_counter() - t0, total,
                               requests=len(reqs))
         return results
 
@@ -691,17 +799,17 @@ class InferenceEngine:
         """Pre-compile every jitted shape the engine can emit for microbatches
         of up to ``max_requests`` requests with up to ``max_candidates``
         candidates each: all (row-bucket, candidate-bucket) combinations of
-        :func:`batched_candidates_forward` plus all (miss-group-bucket, tail
-        length) combinations of :func:`compute_context_tails`. Returns the
-        number of warmup calls issued. Uses the installed params, so it must
-        run after weights are available (the constructor's ``warmup_buckets``
-        runs it when params are passed in)."""
+        :func:`batched_candidates_forward`. (Context tails run on host —
+        :func:`ffm.extend_context_prefix_np` — and never compile.) Returns
+        the number of warmup calls issued. Uses the installed params, so it
+        must run after weights are available (the constructor's
+        ``warmup_buckets`` runs it when params are passed in)."""
         self._require_params()
         self._warmed_requests = max_requests
         params, _ = self._weights
         cfg = self.cfg
         fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
-        emb_dt = params["ffm"]["emb"].dtype
+        emb_dt = ffm.table_dtype(params["ffm"]["emb"])
         rbs = self.plan.buckets_upto(max_requests, minimum=1)
         calls = 0
         # numpy dummies, matching the hot path: jax's jit cache keys on the
@@ -720,19 +828,6 @@ class InferenceEngine:
                     np.zeros((rb, nb, fcand), np.int32),
                     np.zeros((rb, nb, fcand), np.float32))
                 calls += 1
-            for t in self._cache.tail_lengths():
-                d = fc - t
-                prefix = {
-                    "emb": np.zeros((rb, d, cfg.n_fields, cfg.k), emb_dt),
-                    "val": np.zeros((rb, d), np.float32),
-                    "pairs": np.zeros((rb, ffm.prefix_pair_count(d)),
-                                      np.float32),
-                    "lr_terms": np.zeros((rb, d), np.float32),
-                }
-                compute_context_tails(cfg, params, prefix,
-                                      np.zeros((rb, t), np.int32),
-                                      np.zeros((rb, t), np.float32))
-                calls += 1
         return calls
 
     def score_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val,
@@ -741,7 +836,10 @@ class InferenceEngine:
 
         ``use_backend=True`` routes the full forward's interaction hot loop
         through this engine's Pallas kernel; the default stays on the
-        reference path so it can serve as the equivalence oracle.
+        reference path so it can serve as the equivalence oracle. On a
+        quantized engine this scores against the *quantized* tables
+        (``ffm.gather_rows`` dequantizes per gather) — the roundtrip oracle
+        for the quantized cached path, not the f32 one.
         """
         self._require_params()
         n = cand_idx.shape[0]

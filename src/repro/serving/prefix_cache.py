@@ -97,18 +97,27 @@ class PrefixCache:
     checkpoint partials ride along with their context and are pruned with it.
     ``stride=None`` disables intermediate checkpoints — only full-depth
     entries are stored, which reproduces the flat exact-match cache (the PR 1
-    engine) inside the same structure.
+    engine) inside the same structure. ``depths`` overrides ``stride`` with
+    an explicit checkpoint-depth set (adaptive depths picked from an observed
+    hit histogram — ``InferenceEngine.suggest_checkpoint_depths``); the full
+    depth is always included.
     """
 
     def __init__(self, fc: int, max_entries: int = 4096,
-                 stride: Optional[int] = 4):
+                 stride: Optional[int] = 4,
+                 depths: Optional[Sequence[int]] = None):
         if fc < 1:
             raise ValueError("need at least one context field")
         if stride is not None and stride < 1:
             raise ValueError("stride must be >= 1 (or None to disable)")
+        if depths is not None:
+            depths = sorted(set(int(d) for d in depths) | {fc})
+            if depths[0] < 1 or depths[-1] > fc:
+                raise ValueError(f"checkpoint depths must lie in [1, {fc}]")
         self.fc = fc
         self.max_entries = max_entries
         self.stride = stride
+        self.depths = depths
         self.root = _Node()
         self._lru: "OrderedDict[Tuple[bytes, ...], None]" = OrderedDict()
         # depth of cached prefix actually reused per resolved context; filled
@@ -118,6 +127,8 @@ class PrefixCache:
 
     def checkpoint_depths(self) -> List[int]:
         """The closed set of depths at which partials are stored."""
+        if self.depths is not None:
+            return list(self.depths)
         if self.stride is None:
             return [self.fc]
         ds = list(range(self.stride, self.fc, self.stride))

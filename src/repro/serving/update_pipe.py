@@ -39,6 +39,7 @@ from typing import Optional
 import numpy as np
 
 from repro.checkpoint import transfer
+from repro.core import quantization as Q
 
 
 @dataclass
@@ -50,6 +51,12 @@ class UpdatePipeStats:
     bytes_ingested: int = 0
     idle_priority: bool = False  # ingest thread demoted below scorers
     contexts_refreshed: int = 0  # cache partials re-warmed post-publish
+    # quantize-on-ingest (engines with quantized=True): embedding rows
+    # (re)quantized to int8 across all frames, and the CPU spent doing it.
+    # Steady-state delta frames requantize only their touched rows, so
+    # rows_requantized grows with frame size, not model size.
+    rows_requantized: int = 0
+    quantize_seconds: float = 0.0
 
 
 class UpdatePipe:
@@ -81,6 +88,10 @@ class UpdatePipe:
         self._thread: Optional[threading.Thread] = None
         self._thread_lock = threading.Lock()
         self._closed = False
+        # quantize-on-ingest: the last qparams THIS pipe published (the
+        # engine's current params in the normal flow — no extra copy); the
+        # incremental-requantize base tied to the receiver's wire state
+        self._last_qparams = None
         self.stats = UpdatePipeStats()
 
     # -- configuration ------------------------------------------------------
@@ -127,6 +138,25 @@ class UpdatePipe:
             params = self._receiver.materialize(
                 manifest=self._manifest, like=self._like,
                 pace=self._pace if on_ingest_thread else None)
+            if getattr(self._engine, "quantized", False):
+                # quantize-on-ingest (§6 serving): the standby slot holds
+                # int8 rows + per-row grids, not f32 — still pure numpy on
+                # this thread. A delta frame's touched element ranges map to
+                # embedding rows, and only those requantize (per-row grids
+                # are independent, so untouched rows stay byte-identical);
+                # full/patch frames requantize everything. ``prev`` is the
+                # pipe's OWN last publish, not ``engine.params``: untouched
+                # rows must copy codes quantized from the receiver's
+                # previous wire state — an ``install_params`` that diverged
+                # from the wire stream must not leak rows into this frame.
+                tq = time.perf_counter()
+                qstats: dict = {}
+                params = Q.quantize_params_rows(
+                    params, prev=self._last_qparams,
+                    touched_rows=self._touched_leaf_rows(), stats=qstats)
+                self._last_qparams = params
+                self.stats.rows_requantized += qstats.get("rows_requantized", 0)
+                self.stats.quantize_seconds += time.perf_counter() - tq
             self.stats.decode_seconds += time.perf_counter() - t0
             self.stats.bytes_ingested += len(update)
             if on_ingest_thread and self._q.empty():
@@ -141,6 +171,30 @@ class UpdatePipe:
                                         len(update))
             self.stats.published += 1
             return gen
+
+    def _touched_leaf_rows(self):
+        """Map the receiver's last incremental-decode element ranges onto
+        per-leaf row ranges: ``{"a/b": [(row_start, row_stop), ...]}`` over
+        the manifest's concatenated-element layout. ``None`` means the decode
+        was full (first frame, patch, regrid) — requantize everything."""
+        ranges = self._receiver.last_touched_elems
+        if ranges is None or self._manifest is None:
+            return None
+        out, pos = {}, 0
+        for ent in self._manifest:
+            n = int(np.prod(ent["shape"]) or 1)
+            rows_total = int(ent["shape"][0]) if ent["shape"] else 1
+            row_elems = max(n // max(rows_total, 1), 1)
+            rr = []
+            for s, m in ranges:
+                lo, hi = max(s, pos), min(s + m, pos + n)
+                if lo < hi:  # intersect, then widen to whole rows
+                    rr.append(((lo - pos) // row_elems,
+                               -(-(hi - pos) // row_elems)))
+            if rr:
+                out[ent["path"]] = rr
+            pos += n
+        return out
 
     # -- asynchronous path --------------------------------------------------
     def submit(self, update: bytes, *, block: bool = False) -> bool:

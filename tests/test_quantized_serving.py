@@ -1,0 +1,342 @@
+"""Quantized serving path (§6): int8 row-quantized tables end-to-end.
+
+Covers the tolerance contract at each layer:
+
+* per-row grids reconstruct within ``row_max_error`` (exact for constant
+  rows);
+* the fused dequant-in-kernel Pallas candidate kernel matches its jnp
+  reference bit-for-bit (same dequant math);
+* the quantized engine matches the *roundtrip oracle* — an f32 engine
+  running the dequantized tables — to float precision across all warmup
+  buckets and both backends (plumbing/kernel parity, head-agnostic);
+* on the ``ffm`` head the deviation from the true f32 oracle stays inside
+  the rigorous ``pair_logit_tolerance`` bound;
+* delta-frame ingest requantizes only touched rows and lands byte-exact
+  against a from-scratch quantization of the same wire-decoded weights;
+* concurrent scoring during quantized ingest never sees a torn generation.
+
+Also here: the adaptive checkpoint-depth suggestion (ROADMAP follow-on).
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig
+from repro.core import deepffm, ffm
+from repro.core import quantization as Q
+from repro.data.synthetic import CTRStream
+from repro.kernels.ffm_interaction.ffm_interaction import ffm_candidate_matrices_q8
+from repro.kernels.ffm_interaction.ref import ffm_candidate_matrices_q8_ref
+from repro.serving.engine import InferenceEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.train.pipeline import TrainingPipeline
+
+CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**13, k=4,
+                mlp_hidden=(16,))
+
+
+def _params(model="deepffm", seed=0):
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(seed), model)
+    params["lr"]["w"] = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), params["lr"]["w"].shape) * 0.1
+    return params
+
+
+def _roundtrip_params(params, qparams):
+    """f32 params whose emb table is the dequantized int8 table — the exact
+    oracle for the quantized scoring path."""
+    out = dict(params)
+    out["ffm"] = dict(params["ffm"])
+    out["ffm"]["emb"] = jnp.asarray(Q.dequantize_rows(qparams["ffm"]["emb"]))
+    return out
+
+
+# -- row quantization primitives ---------------------------------------------
+
+def test_row_quant_roundtrip_within_bound():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.1, (64, 6, 4)).astype(np.float32)
+    w[3] = 0.25          # constant row reconstructs exactly
+    w[7] *= 100.0        # per-row grids: a wild row cannot hurt the others
+    qt = Q.quantize_rows(w)
+    assert qt["codes"].dtype == np.int8
+    back = Q.dequantize_rows(qt)
+    err = np.abs(back - w)
+    # global bound, and the per-row bound row by row
+    assert err.max() <= Q.row_max_error(qt) + 1e-7
+    per_row = qt["scale"] * 0.5 + 1e-7
+    assert (err.reshape(64, -1).max(1) <= per_row).all()
+    np.testing.assert_array_equal(back[3], w[3])
+    # quiet rows keep fine grids despite the wild one
+    assert qt["scale"][0] < qt["scale"][7] / 50
+
+
+def test_requantize_rows_touches_only_ranges():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.1, (32, 8)).astype(np.float32)
+    qt = Q.quantize_rows(w)
+    w2 = w.copy()
+    w2[4:7] += 1.0
+    w2[20] -= 2.0
+    out = Q.requantize_rows(qt, w2, [(4, 7), (20, 21)])
+    full = Q.quantize_rows(w2)
+    for k in ("codes", "scale", "zero"):
+        np.testing.assert_array_equal(out[k], full[k])
+        assert out[k] is not qt[k]  # copies: the published table never mutates
+    # untouched rows byte-identical to the original quantization
+    np.testing.assert_array_equal(out["codes"][:4], qt["codes"][:4])
+    np.testing.assert_array_equal(out["codes"][7:20], qt["codes"][7:20])
+
+
+def test_quantize_params_rows_structure_and_stats():
+    params = jax.tree_util.tree_map(np.asarray, _params())
+    stats = {}
+    qp = Q.quantize_params_rows(params, stats=stats)
+    assert Q.is_row_quantized(qp["ffm"]["emb"])
+    assert stats["rows_requantized"] == CFG.hash_space
+    # non-table leaves shared, f32
+    assert qp["mlp"] is params["mlp"]
+    assert qp["lr"] is params["lr"]
+    # ~4x fewer resident bytes for the table-dominated tree
+    ratio = Q.quantized_nbytes(params) / Q.quantized_nbytes(qp)
+    assert 3.0 <= ratio <= 4.0
+    # idempotent: re-quantizing a quantized tree is a no-op
+    qp2 = Q.quantize_params_rows(qp)
+    assert qp2["ffm"]["emb"] is qp["ffm"]["emb"]
+
+
+# -- fused kernel vs reference ------------------------------------------------
+
+@pytest.mark.parametrize("R,N,Fc,Fcand,K", [(1, 5, 3, 2, 4), (3, 9, 8, 4, 8),
+                                            (2, 64, 4, 7, 2)])
+def test_q8_candidate_kernel_matches_ref(R, N, Fc, Fcand, K):
+    rng = np.random.default_rng(R * N + K)
+    ectx = rng.normal(size=(R, Fc, Fcand, K)).astype(np.float32)
+    vctx = rng.normal(size=(R, Fc)).astype(np.float32)
+    qcx = rng.integers(-127, 128, (R, N, Fcand, Fc, K)).astype(np.int8)
+    qcc = rng.integers(-127, 128, (R, N, Fcand, Fcand, K)).astype(np.int8)
+    scale = rng.uniform(1e-4, 1e-2, (R, N, Fcand)).astype(np.float32)
+    zero = rng.normal(0, 0.05, (R, N, Fcand)).astype(np.float32)
+    vcand = rng.normal(size=(R, N, Fcand)).astype(np.float32)
+    got_xc, got_aa = ffm_candidate_matrices_q8(ectx, vctx, qcx, qcc, scale,
+                                               zero, vcand, block_n=16)
+    want_xc, want_aa = ffm_candidate_matrices_q8_ref(
+        jnp.asarray(ectx), jnp.asarray(vctx), jnp.asarray(qcx),
+        jnp.asarray(qcc), jnp.asarray(scale), jnp.asarray(zero),
+        jnp.asarray(vcand))
+    np.testing.assert_allclose(np.asarray(got_xc), np.asarray(want_xc),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_aa), np.asarray(want_aa),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- engine parity ------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["ffm", "deepffm"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_quantized_engine_matches_roundtrip_oracle(model, backend):
+    """Across every warmup candidate bucket, the quantized engine equals an
+    f32 engine running the dequantized tables — the plumbing and the fused
+    kernel add no error beyond float arithmetic."""
+    params = _params(model)
+    qe = InferenceEngine(CFG, model, backend=backend, params=params,
+                         quantized=True, warmup_buckets=(4, 32))
+    rt = InferenceEngine(CFG, model, backend=backend,
+                         params=_roundtrip_params(params, qe.params))
+    stream = CTRStream(CFG, seed=3)
+    for n in (1, 7, 8, 9, 16, 31, 32):  # spans every warmed bucket
+        req = stream.request(n)
+        got = np.asarray(qe.score(*req))
+        want = np.asarray(rt.score(*req))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_quantized_ffm_within_derived_tolerance_of_f32_oracle():
+    """On the additive ffm head the quantized/f32 deviation obeys the
+    rigorous ``pair_logit_tolerance`` bound (and the bound is not vacuous)."""
+    params = _params("ffm")
+    qe = InferenceEngine(CFG, "ffm", params=params, quantized=True)
+    f32 = InferenceEngine(CFG, "ffm", params=params)
+    eps = Q.row_max_error(qe.params["ffm"]["emb"])
+    emb_absmax = float(jnp.abs(params["ffm"]["emb"]).max())
+    stream = CTRStream(CFG, seed=4)
+    worst, tol_max = 0.0, 0.0
+    for n in (3, 8, 17):
+        ci, cv, ki, kv = stream.request(n)
+        vmax = float(max(np.abs(cv).max(), np.abs(kv).max()))
+        tol = Q.pair_logit_tolerance(CFG, emb_absmax, eps, vmax)
+        dev = float(np.abs(np.asarray(qe.score(ci, cv, ki, kv))
+                           - np.asarray(f32.score(ci, cv, ki, kv))).max())
+        assert dev <= tol
+        worst, tol_max = max(worst, dev), max(tol_max, tol)
+    assert 0 < worst  # quantization really perturbs, bound really binds
+    assert tol_max < 1.0  # and the derived tolerance is meaningfully tight
+
+
+def test_mixed_1d_empty_slate_in_batch():
+    """A request whose candidate slate arrives as a 1-D empty array must mix
+    with non-empty requests in one microbatch (regression: the packed-dedup
+    concatenate needs shape normalization)."""
+    params = _params()
+    eng = InferenceEngine(CFG, params=params)
+    stream = CTRStream(CFG, seed=9)
+    ci, cv, ki, kv = stream.request(4)
+    empty = (ci, cv, np.zeros(0, np.int32), np.zeros(0, np.float32))
+    outs = eng.score_batch([empty, (ci, cv, ki, kv)])
+    assert outs[0].shape == (0,)
+    np.testing.assert_allclose(np.asarray(outs[1]),
+                               np.asarray(eng.score(ci, cv, ki, kv)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_quantized_batch_and_dedup_match_roundtrip_oracle():
+    params = _params()
+    qe = InferenceEngine(CFG, params=params, quantized=True, prefix_stride=2,
+                         dedup=True)
+    rt = InferenceEngine(CFG, params=_roundtrip_params(params, qe.params),
+                         prefix_stride=2, dedup=True)
+    stream = CTRStream(CFG, seed=5)
+    reqs = [stream.request(n) for n in (3, 7, 5, 8, 2)]
+    reqs.append(reqs[0])  # duplicate request exercises dedup scatter
+    for got, want in zip(qe.score_batch(reqs), rt.score_batch(reqs)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+    assert qe.resident_weight_bytes < rt.resident_weight_bytes / 3
+
+
+# -- update-pipe ingest --------------------------------------------------------
+
+def test_delta_ingest_requantizes_only_touched_rows_byte_exact():
+    """Full -> delta -> delta through the quantized engine's pipe: after the
+    first full-frame quantize, each delta requantizes only its touched rows,
+    and the table equals a from-scratch quantization of the same wire-decoded
+    f32 space (per-row grids are independent)."""
+    stream = CTRStream(CFG, seed=7)
+    eng = InferenceEngine(CFG, quantized=True)
+    tp = TrainingPipeline(CFG, lr=0.1)
+    rcv = transfer.Receiver()  # parallel wire decode for the oracle
+    seen = []
+    for rnd in range(3):
+        upd = tp.run_round(stream.batches(128, 4))
+        eng.apply_update(upd, tp.sender.manifest, tp.params)
+        rcv.apply_update(upd)
+        f32p = rcv.materialize(manifest=tp.sender.manifest, like=tp.params)
+        want = Q.quantize_rows(np.asarray(f32p["ffm"]["emb"]))
+        got = eng.params["ffm"]["emb"]
+        for k in ("codes", "scale", "zero"):
+            np.testing.assert_array_equal(got[k], want[k])
+        seen.append(eng.update_pipe().stats.rows_requantized)
+        assert transfer.unframe(upd).is_delta == (rnd > 0)
+    # first frame quantized the whole table; deltas only their touched rows
+    assert seen[0] == CFG.hash_space
+    for prev, cur, rep in zip(seen, seen[1:], tp.reports[1:]):
+        assert 0 < cur - prev <= rep.touched_rows < CFG.hash_space
+    assert eng.generation == 3 and eng.weights_version == 3
+
+
+def test_concurrent_scoring_during_quantized_ingest():
+    """Scorer threads race async quantized ingest: every batch's scores come
+    from exactly one published generation (weights encode their version in
+    the f32 LR table; emb rows are zero, which int8 rows reproduce exactly,
+    so any valid score is exactly v * n_fields)."""
+    versions = [float(3 ** i) for i in range(5)]
+
+    def params_v(v):
+        p = deepffm.init_params(CFG, jax.random.PRNGKey(0), "ffm")
+        p = jax.tree_util.tree_map(lambda x: np.zeros_like(x), p)
+        p["lr"]["w"] = np.full_like(p["lr"]["w"], v)
+        return p
+
+    eng = InferenceEngine(CFG, "ffm", quantized=True,
+                          params=params_v(versions[0]),
+                          warmup_buckets=(4, 8))
+    snd = transfer.Sender(mode="raw")  # exact wire: scores stay on-grid
+    updates = [snd.make_update(params_v(v)) for v in versions]
+    eng.update_pipe(snd.manifest, params_v(0.0))
+    valid = {round(v * CFG.n_fields, 3) for v in versions}
+    errors, stop = [], threading.Event()
+    fc, fcand = CFG.context_fields, CFG.n_fields - CFG.context_fields
+
+    def scorer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            reqs = []
+            for _ in range(rng.integers(1, 4)):
+                ci = rng.integers(0, CFG.hash_space, fc).astype(np.int32)
+                ki = rng.integers(0, CFG.hash_space,
+                                  (rng.integers(1, 5), fcand)).astype(np.int32)
+                reqs.append((ci, np.ones(fc, np.float32), ki,
+                             np.ones(ki.shape, np.float32)))
+            outs = eng.score_batch(reqs)
+            got = {round(float(x), 3) for o in outs for x in np.asarray(o)}
+            if not got <= valid:
+                errors.append(got - valid)
+            if len(got) > 1:  # one snapshot per batch -> one version per batch
+                errors.append(got)
+
+    threads = [threading.Thread(target=scorer, args=(s,)) for s in (1, 2, 3)]
+    for t in threads:
+        t.start()
+    for u in updates[1:]:
+        time.sleep(0.05)
+        eng.submit_update(u)
+    eng.update_pipe().flush()
+    time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    assert Q.is_row_quantized(eng.params["ffm"]["emb"])
+    assert eng.generation == len(versions) - 1
+
+
+# -- adaptive checkpoint depths -----------------------------------------------
+
+def test_prefix_cache_explicit_depths():
+    pc = PrefixCache(8, stride=4, depths=[2, 5])
+    assert pc.checkpoint_depths() == [2, 5, 8]  # depths override stride
+    assert pc.tail_lengths() == [8, 6, 3]
+    with pytest.raises(ValueError):
+        PrefixCache(8, depths=[0])
+    with pytest.raises(ValueError):
+        PrefixCache(8, depths=[9])
+
+
+def test_suggest_checkpoint_depths_follows_observed_hits():
+    """Traffic that only ever shares a depth-4 prefix: the suggestion keeps
+    the depth-4 checkpoint (plus full depth) and drops the unused ones, and
+    an engine built on the suggested depths still matches the oracle."""
+    params = _params()
+    eng = InferenceEngine(CFG, params=params, prefix_stride=2)
+    fc = CFG.context_fields
+    rng = np.random.default_rng(11)
+    base_i = rng.integers(0, CFG.hash_space, fc).astype(np.int32)
+    base_v = rng.normal(1, 0.25, fc).astype(np.float32)
+    reqs = []
+    for _ in range(12):
+        ci, cv = base_i.copy(), base_v.copy()
+        ci[4:] = rng.integers(0, CFG.hash_space, fc - 4)  # share exactly 4
+        ki = rng.integers(0, CFG.hash_space, (3, CFG.n_fields - fc)).astype(np.int32)
+        kv = rng.normal(1, 0.25, (3, CFG.n_fields - fc)).astype(np.float32)
+        reqs.append((ci, cv, ki, kv))
+        eng.score(ci, cv, ki, kv)
+    suggested = eng.suggest_checkpoint_depths()
+    assert suggested[-1] == fc
+    assert 4 in suggested and 2 not in suggested and 6 not in suggested
+    # fresh engine on the suggested depths serves identically
+    eng2 = InferenceEngine(CFG, params=params, prefix_depths=suggested)
+    assert eng2._cache.checkpoint_depths() == suggested
+    for req in reqs[:4]:
+        got = np.asarray(eng2.score(*req))
+        want = np.asarray(eng.score_uncached(*req))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_suggest_checkpoint_depths_cold_engine_keeps_current():
+    eng = InferenceEngine(CFG, params=_params(), prefix_stride=3)
+    assert eng.suggest_checkpoint_depths() == eng._cache.checkpoint_depths()
