@@ -2,7 +2,7 @@
 plus the overlapping-traffic scenario for the prefix cache + candidate dedup,
 plus the quantized-vs-f32 serving path (§6).
 
-Three traffic shapes through one :class:`InferenceEngine` per configuration:
+Four traffic shapes through one :class:`InferenceEngine` per configuration:
 
 * ``repeat`` — a request stream with exact context repetition (the PR 1
   scenario): per-engine predictions/s and p50/p95/p99 request latency.
@@ -18,8 +18,17 @@ Three traffic shapes through one :class:`InferenceEngine` per configuration:
   (shared-machine noise), resident-weight bytes, oracle deviation against
   the quantization tolerance, and a steady-state delta-ingest check that
   only touched rows requantize.
+* ``gather_cliff`` — the quantized-vs-f32 comparison swept over
+  ``hash_space`` 2^14..2^19: above ~2^17 rows XLA-CPU's generic gather
+  leaves its fast path (the ROADMAP'd int8 gather cliff), so the quantized
+  engine switches to the host packed pre-gather
+  (``kernels/row_gather``; ``host_gather`` auto). The acceptance flag
+  asserts quantized >= f32 predictions/s at *every* size — the cliff is
+  gone — and the raw per-strategy gather timings are recorded alongside.
 
 Writes ``BENCH_serving.json`` (provenance-stamped via ``write_bench_json``).
+``benchmarks/run.py --smoke`` checks every name in :data:`SCENARIOS` exists
+in the written JSON.
 """
 from __future__ import annotations
 
@@ -38,6 +47,11 @@ from repro.serving.engine import InferenceEngine, ServeStats
 
 CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
                 mlp_hidden=(64, 32))
+
+# top-level keys BENCH_serving.json must carry — `run.py --smoke` fails if a
+# scenario silently stopped being written (the stale-artifact trap)
+BENCH_FILE = "BENCH_serving.json"
+SCENARIOS = ("results", "overlap_traffic", "quantized_serving", "gather_cliff")
 
 
 def _drive(engine: InferenceEngine, reqs, *, uncached: bool = False) -> dict:
@@ -244,8 +258,19 @@ def run(quick: bool = False):
             f"weight_mb={r['resident_weight_bytes'] / 1e6:.1f} "
             f"dev={r['max_abs_dev_vs_f32_oracle']:.1e}"))
 
+    # -- gather cliff: quantized vs f32 across hash-space sizes --------------
+    cliff = _gather_cliff_scenario(quick)
+    for size, r in sorted(cliff["sizes"].items(), key=lambda kv: int(kv[0])):
+        rows.append(row(
+            f"serving_engine/gather_cliff_2^{int(np.log2(int(size)))}",
+            r["int8"]["us_per_batch"],
+            f"int8_preds/s={r['int8']['predictions_per_s']:.0f} "
+            f"f32_preds/s={r['f32']['predictions_per_s']:.0f} "
+            f"ratio={r['int8_over_f32']:.2f}x "
+            f"host_gather={r['host_gather']}"))
+
     write_bench_json(
-        "BENCH_serving.json",
+        BENCH_FILE,
         {"config": {"n_fields": CFG.n_fields,
                     "context_fields": CFG.context_fields,
                     "k": CFG.k, "hash_space": CFG.hash_space},
@@ -254,7 +279,8 @@ def run(quick: bool = False):
          "overlap_traffic": {"n_batches": n_batches,
                              "batch_size": batch_size,
                              **overlap},
-         "quantized_serving": quant})
+         "quantized_serving": quant,
+         "gather_cliff": cliff})
     return rows
 
 
@@ -325,10 +351,11 @@ def _quantized_scenario(params, quick: bool) -> dict:
     #   exactness guarantee there).
     qtable = engines["int8_pallas"].params["ffm"]["emb"]
     eps = Q.row_max_error(qtable)
+    lr_eps = Q.block_max_error(engines["int8_pallas"].params["lr"]["w"])
     emb_absmax = float(np.abs(np.asarray(params["ffm"]["emb"])).max())
     vmax = float(max(max(np.abs(r[1]).max(), np.abs(r[3]).max())
                      for reqs in meas for r in reqs))
-    tolerance = Q.pair_logit_tolerance(CFG, emb_absmax, eps, vmax)
+    tolerance = Q.pair_logit_tolerance(CFG, emb_absmax, eps, vmax, lr_eps)
     max_dev = {name: 0.0 for name in engines}
     roundtrip_dev = 0.0
     sample = [(b, r) for b in range(0, n_batches, 2) for r in (0, batch_size // 2)]
@@ -403,6 +430,151 @@ def _quantized_scenario(params, quick: bool) -> dict:
             delta_rows <= touched.size < full_rows and delta_exact,
     }
     return results
+
+
+def _raw_gather_times(V: int, rng) -> dict:
+    """Direct per-strategy timing of the candidate-row gather at table size
+    ``V`` — the measured cliff numbers the ROADMAP records. In-jit f32/int8
+    ``jnp.take`` vs the host packed gather, identical (R, N, Fcand) indices."""
+    import jax.numpy as jnp
+
+    from repro.kernels.row_gather import ops as rg_ops
+
+    f, k = CFG.n_fields, CFG.k
+    # dtype-aware draws: a default int64/float64 intermediate would be ~1.6GB
+    # of transient allocation at V=2^19 on the box under measurement
+    tf = jnp.asarray(rng.standard_normal((V, f, k), dtype=np.float32))
+    ti = jnp.asarray(rng.integers(-127, 128, (V, f, k), dtype=np.int8))
+    idx = rng.integers(0, V, (8, 64, 8)).astype(np.int32)
+    take = jax.jit(lambda t, i: jnp.take(t, i, axis=0))
+
+    def timed(fn, *args, iters=10):
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e3
+
+    ti_np = np.asarray(ti)
+    return {
+        "f32_take_ms": timed(take, tf, jnp.asarray(idx)),
+        "int8_take_ms": timed(take, ti, jnp.asarray(idx)),
+        "host_packed_ms": timed(rg_ops.gather_codes_np, ti_np, idx),
+    }
+
+
+def _gather_cliff_scenario(quick: bool) -> dict:
+    """Quantized vs f32 engine throughput swept over ``hash_space`` sizes.
+
+    Same gather-heavy traffic shape as the quantized scenario (hot contexts,
+    fresh candidate slates) at each table size. Below ``CLIFF_ROWS`` both
+    engines gather in-jit (int8 wins on bandwidth); above it the quantized
+    engine auto-selects the host packed pre-gather
+    (``InferenceEngine.host_gather``) while f32 pays XLA-CPU's generic
+    gather off its fast path — the acceptance flag asserts the quantized
+    engine never falls behind f32 at any size (the int8 cliff is gone).
+    """
+    from repro.kernels.row_gather import ops as rg_ops
+
+    sizes = (2**14, 2**17) if quick else tuple(2**p for p in range(14, 20))
+    n_ctx, n_cand, batch_size = 4, 64, 8
+    n_batches = 2 if quick else 4
+    passes = 2 if quick else 4
+    fc, fcand = CFG.context_fields, CFG.n_fields - CFG.context_fields
+    out_sizes = {}
+    for v in sizes:
+        cfg = FFMConfig(n_fields=CFG.n_fields, context_fields=fc,
+                        hash_space=v, k=CFG.k)
+        rng = np.random.default_rng(v)
+        key = jax.random.PRNGKey(17)
+        params = deepffm.init_params(cfg, key, "ffm")
+        params = jax.tree_util.tree_map(np.asarray, params)
+        params["lr"]["w"] = rng.normal(0, 0.1, v).astype(np.float32)
+        ctxs = [(rng.integers(0, v, fc).astype(np.int32),
+                 rng.normal(1, 0.25, fc).astype(np.float32))
+                for _ in range(n_ctx)]
+
+        def make_batches(n):
+            out = []
+            for _ in range(n):
+                reqs = []
+                for slot in range(batch_size):
+                    ci, cv = ctxs[slot % n_ctx]  # fixed composition: stable shapes
+                    ki = rng.integers(0, v, (n_cand, fcand)).astype(np.int32)
+                    kv = rng.normal(1, 0.25, (n_cand, fcand)).astype(np.float32)
+                    reqs.append((ci, cv, ki, kv))
+                out.append(reqs)
+            return out
+
+        warm, meas = make_batches(2), make_batches(n_batches)
+        candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
+        engines = {
+            "f32": InferenceEngine(cfg, "ffm", backend="pallas",
+                                   params=params, prefix_stride=4),
+            "int8": InferenceEngine(cfg, "ffm", backend="pallas",
+                                    params=params, prefix_stride=4,
+                                    quantized=True),
+        }
+        outs = {}
+        for name, eng in engines.items():
+            for reqs in warm:  # compiles + cache fill; shapes match meas
+                eng.score_batch(reqs)
+            outs[name] = eng.score_batch(meas[0])
+        times = {name: [] for name in engines}
+        for _ in range(passes):  # interleaved: noise hits both equally
+            for name, eng in engines.items():
+                t0 = time.perf_counter()
+                for reqs in meas:
+                    eng.score_batch(reqs)
+                times[name].append(time.perf_counter() - t0)
+
+        # spot parity: the additive ffm head obeys the derived tolerance
+        qt = engines["int8"].params
+        eps = Q.row_max_error(qt["ffm"]["emb"])
+        lr_eps = Q.block_max_error(qt["lr"]["w"])
+        absmax = float(np.abs(params["ffm"]["emb"]).max())
+        vmax = float(max(np.abs(meas[0][0][1]).max(),
+                         np.abs(meas[0][0][3]).max()))
+        tol = Q.pair_logit_tolerance(cfg, absmax, eps, vmax, lr_eps)
+        dev = float(np.max(np.abs(np.asarray(outs["int8"][0])
+                                  - np.asarray(outs["f32"][0]))))
+
+        entry = {}
+        for name in engines:
+            med = float(np.median(times[name]))
+            entry[name] = {
+                "seconds_median_pass": med,
+                "us_per_batch": med / n_batches * 1e6,
+                "predictions_per_s": candidates / med,
+                "resident_weight_bytes": engines[name].resident_weight_bytes,
+            }
+        entry["int8_over_f32"] = (entry["int8"]["predictions_per_s"]
+                                  / max(entry["f32"]["predictions_per_s"], 1e-12))
+        entry["host_gather"] = engines["int8"].host_gather
+        entry["max_abs_dev_vs_f32"] = dev
+        entry["ffm_head_tolerance"] = tol
+        entry["raw_gather"] = _raw_gather_times(v, rng)
+        out_sizes[str(v)] = entry
+        del engines, outs
+    return {
+        "cliff_rows": rg_ops.CLIFF_ROWS,
+        "traffic": {"n_ctx": n_ctx, "n_cand": n_cand,
+                    "batch_size": batch_size, "n_batches": n_batches,
+                    "passes": passes},
+        "sizes": out_sizes,
+        "acceptance": {
+            "quantized_ge_f32_all_sizes": all(
+                r["int8_over_f32"] >= 1.0 for r in out_sizes.values()),
+            "resident_bytes_down_all_sizes": all(
+                r["int8"]["resident_weight_bytes"]
+                < r["f32"]["resident_weight_bytes"] / 3
+                for r in out_sizes.values()),
+            "ffm_head_dev_within_tolerance": all(
+                r["max_abs_dev_vs_f32"] <= r["ffm_head_tolerance"]
+                for r in out_sizes.values()),
+        },
+    }
 
 
 if __name__ == "__main__":

@@ -35,6 +35,11 @@ from repro.train.pipeline import TrainingPipeline, touched_paths
 CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**15, k=4,
                 mlp_hidden=(32, 16))
 
+# declared scenario keys — `run.py --smoke` fails if any is missing from the
+# written JSON (see benchmarks/run.py::check_scenarios)
+BENCH_FILE = "BENCH_training.json"
+SCENARIOS = ("throughput", "transfer", "serving", "acceptance")
+
 
 # ---------------------------------------------------------------------------
 # Seed baseline: the pre-pipeline OnlineTrainer round (per-batch Python loop)

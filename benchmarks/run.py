@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -23,6 +24,23 @@ BENCHES = (
 
 
 SMOKE = ("serving_engine", "training_pipeline")  # fast CI smoke (implies --quick)
+
+
+def check_scenarios(mod) -> list:
+    """A bench module may declare ``BENCH_FILE`` + ``SCENARIOS`` (top-level
+    JSON keys it promises to write). Return the names missing from the file
+    it just wrote — a scenario that silently stopped being written would
+    otherwise leave a stale artifact claiming coverage it no longer has."""
+    bench_file = getattr(mod, "BENCH_FILE", None)
+    scenarios = getattr(mod, "SCENARIOS", ())
+    if not bench_file or not scenarios:
+        return []
+    try:
+        with open(bench_file) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return list(scenarios)
+    return [s for s in scenarios if s not in data]
 
 
 def main() -> None:
@@ -48,6 +66,11 @@ def main() -> None:
             mod = importlib.import_module(module)
             rows = mod.run(quick=args.quick)
             print_rows(rows)
+            missing = check_scenarios(mod)
+            if missing:
+                failures += 1
+                print(f"{name},0,FAILED: scenarios missing from "
+                      f"{mod.BENCH_FILE}: {missing}")
         except Exception:
             failures += 1
             print(f"{name},0,FAILED: {traceback.format_exc(limit=3)}".replace("\n", " "))

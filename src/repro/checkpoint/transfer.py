@@ -303,8 +303,16 @@ class Receiver:
     # actually re-decoded: a list of (start_elem, n_elems) when the decode
     # was incremental (delta frames only since the previous materialize),
     # None when it was a full decode. The serving layer's quantize-on-ingest
-    # uses this to requantize only touched embedding rows.
+    # uses this to requantize only touched embedding rows. Includes the
+    # outlier sidecar's element indices (this frame's and the previous
+    # one's): a sidecar value can change — or revert to its grid value —
+    # without any byte of the diffable buffer changing (codes clip at the
+    # grid edge), so those elements never appear in the delta ranges yet
+    # their reconstruction moved; they are exactly the weights that drifted
+    # furthest, and trusting the delta ranges alone would serve stale int8
+    # codes for them.
     last_touched_elems: Optional[List[Tuple[int, int]]] = None
+    _prev_sidecar_elems: Optional[np.ndarray] = None
 
     def apply_update(self, update: bytes) -> bytes:
         frame = unframe(update)
@@ -367,6 +375,11 @@ class Receiver:
             q, meta, outliers = Q.from_bytes(buf)
             w_min = np.float32(meta.w_min)
             bucket = np.float32(meta.bucket_size)
+            side_idx = np.zeros(0, np.int64)
+            if self._sidecar:
+                (n_out,) = struct.unpack_from("<Q", self._sidecar, 0)
+                side_idx = np.frombuffer(self._sidecar, "<u8", count=n_out,
+                                         offset=8).astype(np.int64)
             if (self._delta_ranges is not None and self._flat is not None
                     and self._flat.size == meta.n):
                 # incremental: the last frame was a row delta, so only its
@@ -388,6 +401,16 @@ class Receiver:
                     if chunk and sleep_s and done >= chunk:
                         _time.sleep(sleep_s)
                         done = 0
+                # union the outlier-sidecar element indices (current frame's
+                # and the previous materialize's — an exiting outlier reverts
+                # to its grid value) into the touched set: sidecar values move
+                # without touching the diffable bytes (see field comment)
+                prev_side = self._prev_sidecar_elems
+                both = (np.union1d(side_idx, prev_side)
+                        if prev_side is not None and prev_side.size
+                        else np.unique(side_idx))
+                self.last_touched_elems.extend(
+                    (int(i), 1) for i in both if i < meta.n)
             elif pace is None:
                 self.last_touched_elems = None
                 w = Q.dequantize_from_bytes(buf)
@@ -403,15 +426,17 @@ class Receiver:
                     w[outliers[0].astype(np.int64)] = outliers[1]
             self._flat = w
             # fresh accumulation point: deltas landing after this materialize
-            # union into an empty range set against the new _flat
+            # union into an empty range set against the new _flat; the
+            # sidecar snapshot pairs with it (next incremental decode unions
+            # entries that left the sidecar since this materialize)
             self._delta_ranges = (np.zeros(0, np.int64), np.zeros(0, np.int64))
-            if self._sidecar:
-                (n_out,) = struct.unpack_from("<Q", self._sidecar, 0)
-                idx = np.frombuffer(self._sidecar, "<u8", count=n_out, offset=8)
+            self._prev_sidecar_elems = side_idx
+            if side_idx.size:
+                n_out = side_idx.size
                 vals = np.frombuffer(self._sidecar, "<f4", count=n_out,
                                      offset=8 + 8 * n_out)
                 w = w.copy()
-                w[idx.astype(np.int64)] = vals
+                w[side_idx] = vals
             # re-split per manifest entry (manifest offsets refer to raw f32 layout)
             out, pos = {}, 0
             for ent in manifest:

@@ -43,13 +43,39 @@ def gather_rows(emb, idx) -> jnp.ndarray:
     row-quantized table dict (``quantization.quantize_rows`` format): for the
     latter only the int8 codes plus two f32 scalars per row cross memory, and
     the rows dequantize in-register right after the gather — the f32 table
-    never exists on the request path (§6 serving)."""
+    never exists on the request path (§6 serving). Quantized gathers route
+    through ``kernels.row_gather.ops.gather_dequant_rows``, which picks the
+    strategy (generic take / Pallas scalar-prefetch kernel / host packed
+    gather) by table size and backend — the raw int8 ``jnp.take`` hits an
+    XLA-CPU slow path above ~2^17 rows."""
     if isinstance(emb, dict):
-        c = jnp.take(emb["codes"], idx, axis=0).astype(jnp.float32)
-        s = jnp.take(emb["scale"], idx)
-        z = jnp.take(emb["zero"], idx)
-        return c * s[..., None, None] + z[..., None, None]
+        from repro.kernels.row_gather import ops as rg_ops
+
+        return rg_ops.gather_dequant_rows(emb, idx)
     return jnp.take(emb, idx, axis=0)
+
+
+def gather_lr(lr_w, idx) -> jnp.ndarray:
+    """LR weight lookup: f32 vector ``(V,)`` or a blocked-int8 dict
+    (``quantization.quantize_blocks`` format). Blocked lookups gather the
+    int8 code per element plus the block's ``(scale, zero)`` grid and
+    dequantize in-register — 1-d gathers stay on XLA's fast path at every
+    table size (the cliff is specific to multi-byte row slices)."""
+    if isinstance(lr_w, dict):
+        c = jnp.take(lr_w["codes"], idx).astype(jnp.float32)
+        b = idx // lr_w["block"]
+        return c * jnp.take(lr_w["scale"], b) + jnp.take(lr_w["zero"], b)
+    return jnp.take(lr_w, idx, axis=0)
+
+
+def gather_lr_np(lr_w, idx: np.ndarray) -> np.ndarray:
+    """Host-numpy :func:`gather_lr` (serving context-tail / pre-gather path)."""
+    if isinstance(lr_w, dict):
+        idx = np.asarray(idx)
+        c = np.asarray(lr_w["codes"])[idx].astype(np.float32)
+        b = idx // int(lr_w["block"])
+        return c * np.asarray(lr_w["scale"])[b] + np.asarray(lr_w["zero"])[b]
+    return np.asarray(lr_w)[idx]
 
 
 def table_dtype(emb):
@@ -174,7 +200,7 @@ def extend_context_prefix(cfg: FFMConfig, emb: jnp.ndarray, lr_w: jnp.ndarray,
     pm = dots * (v[:, None] * v[None, p:])
     ii, jt = tail_pair_gather(fc, p)
     pairs = jnp.concatenate([prefix["pairs"], pm[ii, jt].astype(jnp.float32)])
-    lr_tail = (jnp.take(lr_w, tail_idx) * tail_val).astype(jnp.float32)
+    lr_tail = (gather_lr(lr_w, tail_idx) * tail_val).astype(jnp.float32)
     lr_terms = jnp.concatenate([prefix["lr_terms"], lr_tail])
     return {"emb": e, "val": v, "pairs": pairs, "lr_terms": lr_terms}
 
@@ -183,12 +209,12 @@ def gather_rows_np(emb, idx: np.ndarray) -> np.ndarray:
     """Host-numpy :func:`gather_rows` (f32 table or int8 row-quantized dict).
     Used by the serving engine's context-tail path, which runs on host: the
     gathered block is tiny (tail fields x F x k), so numpy beats a jit
-    dispatch + device round-trip by a wide margin."""
+    dispatch + device round-trip by a wide margin. Quantized tables go
+    through the packed host gather (``row_gather.ops.gather_dequant_np``)."""
     if isinstance(emb, dict):
-        c = emb["codes"][idx].astype(np.float32)
-        s = emb["scale"][idx][..., None, None]
-        z = emb["zero"][idx][..., None, None]
-        return c * s + z
+        from repro.kernels.row_gather import ops as rg_ops
+
+        return rg_ops.gather_dequant_np(emb, idx)
     return np.asarray(emb)[idx]
 
 
@@ -217,7 +243,7 @@ def extend_context_prefix_np(cfg: FFMConfig, emb, lr_w: np.ndarray,
     pm = dots * (v[:, None] * v[None, p:])
     ii, jt = tail_pair_gather(fc, p)
     pairs = np.concatenate([prefix["pairs"], pm[ii, jt].astype(np.float32)])
-    lr_tail = (np.asarray(lr_w)[tail_idx]
+    lr_tail = (gather_lr_np(lr_w, tail_idx)
                * np.asarray(tail_val, np.float32)).astype(np.float32)
     lr_terms = np.concatenate([prefix["lr_terms"], lr_tail])
     return {"emb": e, "val": v, "pairs": pairs, "lr_terms": lr_terms}
@@ -266,8 +292,10 @@ def interactions(cfg: FFMConfig, emb, idx, val) -> jnp.ndarray:
 
 
 def lr_forward(cfg: FFMConfig, p, idx, val) -> jnp.ndarray:
-    """Logistic-regression part: (B,)."""
-    return jnp.sum(jnp.take(p["w"], idx, axis=0) * val, axis=-1) + p["b"]
+    """Logistic-regression part: (B,). ``p["w"]`` may be a blocked-int8 dict
+    (:func:`gather_lr`) — the serving engine keeps the LR table quantized on
+    the same per-feature hot path as the latent gathers (§6)."""
+    return jnp.sum(gather_lr(p["w"], idx) * val, axis=-1) + p["b"]
 
 
 def bce_loss(logits, labels):

@@ -251,8 +251,104 @@ def dequantize_rows(qtable) -> np.ndarray:
 
 
 def is_row_quantized(leaf) -> bool:
-    """True for the quantized-table dict :func:`quantize_rows` produces."""
-    return isinstance(leaf, dict) and "codes" in leaf and "scale" in leaf
+    """True for the quantized-table dict :func:`quantize_rows` produces
+    (excluding the blocked variant — see :func:`is_block_quantized`)."""
+    return (isinstance(leaf, dict) and "codes" in leaf and "scale" in leaf
+            and "block" not in leaf)
+
+
+# ---------------------------------------------------------------------------
+# Blocked int8 quantization for *scalar-per-row* leaves (the LR table)
+# ---------------------------------------------------------------------------
+#
+# The per-row grids above assume a row is a vector (F x k elements sharing one
+# scale/zero). The LR table is (V,) — one scalar per hashed feature — so a
+# per-row grid would store two f32 scalars per int8 code and *grow* the
+# resident set. Blocked quantization views (V,) as (V/B, B) and fits one
+# symmetric affine grid per block: resident bytes drop from 4V to
+# V + 8V/B (~3.3x at B=64), reconstruction error is bounded by the coarsest
+# block's scale/2 (:func:`block_max_error`), and a delta frame's touched
+# elements map to touched *blocks*, which requantize independently — the
+# exact analogue of the per-row independence the incremental ingest relies
+# on. B trades resolution (weights sharing a grid) against overhead; 64 keeps
+# the grid error comparable to the emb rows' (a block spans the same order of
+# dynamic range as one F x k row) at 1/8th the f32 sidecar cost.
+
+LR_BLOCK = 64
+
+
+def quantize_blocks(w: np.ndarray, block: int = LR_BLOCK) -> dict:
+    """Blocked int8 quantization of a flat ``(V,)`` float vector.
+
+    Pure numpy (same ingest-thread contract as :func:`quantize_rows`).
+    Returns ``{"codes": int8 (V,), "scale": f32 (ceil(V/B),), "zero": f32
+    (ceil(V/B),), "block": B}``. A trailing partial block is padded with its
+    own last element (does not perturb the block's min/max).
+    """
+    w = np.asarray(w, np.float32).reshape(-1)
+    v = w.size
+    nb = -(-v // block)
+    wp = w if nb * block == v else np.concatenate(
+        [w, np.full(nb * block - v, w[-1], np.float32)])
+    wb = wp.reshape(nb, block)
+    mn = wb.min(axis=1)
+    mx = wb.max(axis=1)
+    scale = np.where(mx > mn, (mx - mn) / np.float32(ROW_LEVELS - 1),
+                     np.float32(1.0)).astype(np.float32)
+    zero = ((mn + mx) * np.float32(0.5)).astype(np.float32)
+    q = np.rint((wb - zero[:, None]) / scale[:, None])
+    codes = np.clip(q, -127, 127).astype(np.int8).reshape(-1)[:v]
+    return {"codes": codes, "scale": scale, "zero": zero, "block": int(block)}
+
+
+def requantize_blocks(qtable: dict, w: np.ndarray, elem_ranges) -> dict:
+    """Requantize only the blocks covering ``elem_ranges`` (iterable of
+    element ``(start, stop)``) of ``w`` into a *copy* of ``qtable``; untouched
+    blocks keep byte-identical codes/scale/zero (per-block grids are
+    independent). The copy contract matches :func:`requantize_rows` — the
+    previous table stays published to concurrent scorers until the swap."""
+    block = int(qtable["block"])
+    out = {"codes": qtable["codes"].copy(), "scale": qtable["scale"].copy(),
+           "zero": qtable["zero"].copy(), "block": block}
+    v = out["codes"].size
+    blocks = (np.unique(np.concatenate(
+        [np.arange(e0 // block, -(-e1 // block)) for e0, e1 in elem_ranges]))
+        if elem_ranges else np.zeros(0, np.int64))
+    if blocks.size:
+        w = np.asarray(w, np.float32).reshape(-1)
+        # gather the touched blocks' elements (trailing partial block padded
+        # with its own last element — same padding quantize_blocks applies, so
+        # the grids come out byte-identical to a full requantize), quantize
+        # them as one exact-multiple vector, scatter codes back elementwise
+        elem = blocks[:, None] * block + np.arange(block)[None, :]
+        src = np.minimum(elem, v - 1).reshape(-1)
+        part = quantize_blocks(w[src], block)
+        keep = (elem < v).reshape(-1)
+        out["codes"][elem.reshape(-1)[keep]] = part["codes"][keep]
+        out["scale"][blocks] = part["scale"]
+        out["zero"][blocks] = part["zero"]
+    return out
+
+
+def dequantize_blocks(qtable: dict) -> np.ndarray:
+    """Full-vector f32 reconstruction (oracle/debug; the hot path gathers +
+    dequantizes per element via ``ffm.gather_lr``)."""
+    codes = np.asarray(qtable["codes"])
+    block = int(qtable["block"])
+    b = np.arange(codes.size) // block
+    return (codes.astype(np.float32) * np.asarray(qtable["scale"])[b]
+            + np.asarray(qtable["zero"])[b])
+
+
+def is_block_quantized(leaf) -> bool:
+    """True for the blocked-table dict :func:`quantize_blocks` produces."""
+    return isinstance(leaf, dict) and "codes" in leaf and "block" in leaf
+
+
+def block_max_error(qtable) -> float:
+    """Max |w - dequantize(quantize(w))| over the vector: half the coarsest
+    block's bucket (the blocked analogue of :func:`row_max_error`)."""
+    return float(np.max(np.asarray(qtable["scale"]))) * 0.5
 
 
 def row_max_error(qtable) -> float:
@@ -262,48 +358,63 @@ def row_max_error(qtable) -> float:
 
 
 def pair_logit_tolerance(cfg, emb_absmax: float, eps: float,
-                         vmax: float = 1.0) -> float:
+                         vmax: float = 1.0, lr_eps: float = 0.0) -> float:
     """Rigorous bound on the FFM-logit deviation caused by per-element
-    embedding error ``eps`` (= :func:`row_max_error` of the serving table).
+    embedding error ``eps`` (= :func:`row_max_error` of the serving table)
+    plus per-weight LR error ``lr_eps`` (= :func:`block_max_error` of the
+    blocked LR table; 0 when the LR table is served f32).
 
     Each DiagMask pair contributes ``e_i · e_j * v_i * v_j`` with both sides
     quantized, so its deviation is at most ``k * (2 * |e|_inf * eps + eps^2)
-    * vmax^2``; the ``ffm`` head sums ``n_pairs`` of them and the LR part is
-    exact (the LR table stays f32). For ``deepffm`` the MergeNorm/MLP head
-    can amplify further — use the roundtrip-oracle parity check for exact
-    head-agnostic equivalence and this bound for the additive part.
+    * vmax^2``; the ``ffm`` head sums ``n_pairs`` of them plus ``n_fields``
+    LR terms ``w_f * v_f``, each off by at most ``lr_eps * vmax``. For
+    ``deepffm`` the MergeNorm/MLP head can amplify further — use the
+    roundtrip-oracle parity check for exact head-agnostic equivalence and
+    this bound for the additive part.
     """
     per_pair = cfg.k * (2.0 * emb_absmax * eps + eps * eps) * vmax * vmax
-    return cfg.n_pairs * per_pair
+    return cfg.n_pairs * per_pair + cfg.n_fields * lr_eps * vmax
 
 
 ROW_QUANT_PATHS = (("ffm", "emb"), ("emb",))
+BLOCK_QUANT_PATHS = (("lr", "w"),)
+
+
+def _walk(tree, path):
+    node = tree
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
 
 
 def quantize_params_rows(params, prev=None, touched_rows=None,
-                         paths=ROW_QUANT_PATHS, stats=None):
-    """Serving-side quantize-on-ingest: replace the embedding-table leaves of
-    a params pytree with int8 row-quantized table dicts.
+                         paths=ROW_QUANT_PATHS, block_paths=BLOCK_QUANT_PATHS,
+                         lr_block: int = LR_BLOCK, stats=None):
+    """Serving-side quantize-on-ingest: replace the gather-table leaves of a
+    params pytree with int8 quantized table dicts.
 
     ``paths`` names the row-gathered tables (DeepFFM's ``ffm/emb`` and the
-    mlp baseline's top-level ``emb``); every other leaf (LR, MergeNorm, MLP —
-    tiny next to the tables) stays f32. ``prev`` is the previously published
-    quantized params: when given together with ``touched_rows`` (a dict
-    mapping "/".joined leaf paths to row ``(start, stop)`` range lists), only
-    those rows requantize — the steady-state delta-frame ingest cost.
-    Returns a new top-level pytree; untouched subtrees are shared.
-    ``stats`` (a mutable dict) gets ``"rows_requantized"`` incremented by the
-    number of rows actually (re)quantized.
+    mlp baseline's top-level ``emb``) — per-row grids (:func:`quantize_rows`).
+    ``block_paths`` names the scalar-per-row tables (the LR vector) — blocked
+    grids (:func:`quantize_blocks`, block ``lr_block``). Every other leaf
+    (MergeNorm, MLP, LR bias — tiny next to the tables) stays f32. ``prev``
+    is the previously published quantized params: when given together with
+    ``touched_rows`` (a dict mapping "/".joined leaf paths to ``(start,
+    stop)`` range lists — rows for row leaves, elements for blocked leaves),
+    only those rows/blocks requantize — the steady-state delta-frame ingest
+    cost. Returns a new top-level pytree; untouched subtrees are shared.
+    ``stats`` (a mutable dict) gets ``"rows_requantized"`` /
+    ``"blocks_requantized"`` incremented by the work actually done.
     """
     out = {k: v for k, v in params.items()}
-    for path in paths:
-        node, parent = out, None
-        for key in path:
-            if not isinstance(node, dict) or key not in node:
-                node = None
-                break
-            parent, node = node, node[key]
-        if node is None or is_row_quantized(node):
+    for path, blocked in ([(p, False) for p in paths]
+                          + [(p, True) for p in block_paths]):
+        node = _walk(out, path)
+        quantized_already = (is_block_quantized(node) if blocked
+                             else is_row_quantized(node))
+        if node is None or quantized_already:
             continue
         # copy the subdict chain so the caller's pytree is never mutated
         sub = out
@@ -313,23 +424,35 @@ def quantize_params_rows(params, prev=None, touched_rows=None,
         pstr = "/".join(path)
         pq = None
         if prev is not None:
-            pnode = prev
-            for key in path:
-                pnode = pnode.get(key) if isinstance(pnode, dict) else None
-                if pnode is None:
-                    break
-            if pnode is not None and is_row_quantized(pnode) \
+            pnode = _walk(prev, path)
+            if blocked:
+                if is_block_quantized(pnode) \
+                        and pnode["codes"].shape == np.asarray(node).shape \
+                        and int(pnode["block"]) == lr_block:
+                    pq = pnode
+            elif is_row_quantized(pnode) \
                     and pnode["codes"].shape == np.asarray(node).shape:
                 pq = pnode
         if pq is not None and touched_rows is not None:
             ranges = touched_rows.get(pstr, ())
-            sub[path[-1]] = requantize_rows(pq, node, ranges)
-            n_rows = sum(r1 - r0 for r0, r1 in ranges)
+            if blocked:
+                sub[path[-1]] = requantize_blocks(pq, node, ranges)
+                blk = set()
+                for e0, e1 in ranges:
+                    blk.update(range(e0 // lr_block, -(-e1 // lr_block)))
+                n_units = len(blk)
+            else:
+                sub[path[-1]] = requantize_rows(pq, node, ranges)
+                n_units = sum(r1 - r0 for r0, r1 in ranges)
+        elif blocked:
+            sub[path[-1]] = quantize_blocks(np.asarray(node), lr_block)
+            n_units = sub[path[-1]]["scale"].shape[0]
         else:
             sub[path[-1]] = quantize_rows(np.asarray(node))
-            n_rows = sub[path[-1]]["codes"].shape[0]
+            n_units = sub[path[-1]]["codes"].shape[0]
         if stats is not None:
-            stats["rows_requantized"] = stats.get("rows_requantized", 0) + n_rows
+            key = "blocks_requantized" if blocked else "rows_requantized"
+            stats[key] = stats.get(key, 0) + n_units
     return out
 
 

@@ -1,0 +1,2 @@
+from repro.kernels.row_gather import ops  # noqa: F401
+from repro.kernels.row_gather.row_gather import gather_dequant_rows_q8  # noqa: F401

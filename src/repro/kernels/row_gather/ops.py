@@ -1,0 +1,123 @@
+"""Row-gather strategy selection for the quantized serving tables (§6).
+
+One funnel decides *how* a table row gather executes, because no single
+strategy survives every regime:
+
+* ``jnp.take`` — XLA's generic gather. Fine below :data:`CLIFF_ROWS`; above
+  it the XLA-CPU implementation falls off its fast path (the ROADMAP'd
+  "int8 gather cliff": measured 4x slower than f32 at 2^18 on the original
+  box, and on the current 2-core box both dtypes jump ~10x at 2^19 while a
+  host gather stays flat). Still the in-trace reference everywhere a
+  better strategy cannot apply.
+* **Pallas gather-and-dequant** (:mod:`.row_gather`) — on TPU the indices
+  become a scalar-prefetch operand and each grid step DMAs its row
+  directly, so the generic-gather HLO never exists. Selected in-trace on
+  the TPU backend above the cliff (scalar-prefetch grid specs are
+  TPU-only; GPU keeps the generic take, whose gather does not share the
+  XLA-CPU cliff).
+* **Host packed gather** (:func:`gather_codes_np` / :func:`gather_dequant_np`)
+  — numpy ``take`` over the widest word view the row byte-length allows
+  (int8 rows of 8k bytes move as u64 lanes). Immune to the XLA cliff and
+  ~15x faster than the in-jit take at 2^19; only available when the table
+  and indices are concrete host arrays, i.e. *before* entering a jitted
+  call. The serving engine pre-gathers candidate codes this way above the
+  cliff (``InferenceEngine`` ``host_gather``) and feeds the already-gathered
+  block to the fused q8 kernel.
+
+``gather_dequant_rows`` is the in-trace selector ``ffm.gather_rows`` calls;
+``use_host_gather`` is the out-of-trace policy the engine consults.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.row_gather.row_gather import gather_dequant_rows_q8
+
+# Above this many table rows XLA-CPU's generic gather leaves its fast path
+# (ROADMAP "Quantized-path follow-ons"; see module docstring for numbers).
+CLIFF_ROWS = 1 << 17
+
+
+def use_host_gather(n_rows: int) -> bool:
+    """True when the serving engine should pre-gather candidate rows on host
+    (numpy) instead of gathering inside the jitted forward: CPU backend (the
+    Pallas kernel's scalar-prefetch DMA path needs real accelerator hardware;
+    in interpret mode it degenerates to a scan of dynamic slices) and a table
+    past the gather cliff."""
+    return n_rows >= CLIFF_ROWS and jax.default_backend() == "cpu"
+
+
+def _packed_view(flat: np.ndarray):
+    """Widest-word view of a (V, rowbytes) byte-contiguous table: int8 rows
+    move as u64/u32/u16 lanes when the row byte-length allows (numpy's take
+    copies per element of the *viewed* dtype, so wider is strictly fewer
+    moves)."""
+    rowbytes = flat.shape[1] * flat.dtype.itemsize
+    for width, dt in ((8, np.uint64), (4, np.uint32), (2, np.uint16)):
+        if rowbytes % width == 0:
+            return flat.view(dt)
+    return flat
+
+
+def gather_codes_np(table: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Host packed row gather: ``table[idx]`` via ``np.take`` on the widest
+    aligned word view. ``table``: (V, ...) any dtype; returns
+    ``idx.shape + table.shape[1:]`` in the table dtype."""
+    table = np.ascontiguousarray(table)
+    idx = np.asarray(idx)
+    flat = table.reshape(table.shape[0], -1)
+    packed = _packed_view(flat)
+    g = np.take(packed, idx.reshape(-1), axis=0)
+    return g.view(table.dtype).reshape(idx.shape + table.shape[1:])
+
+
+def gather_dequant_np(qtable, idx: np.ndarray) -> np.ndarray:
+    """Fused host gather + per-row dequantize of an int8 row-quantized table
+    dict (``quantization.quantize_rows`` format) -> f32 rows."""
+    idx = np.asarray(idx)
+    codes = np.asarray(qtable["codes"])
+    extra = (1,) * (codes.ndim - 1)
+    c = gather_codes_np(codes, idx).astype(np.float32)
+    s = np.asarray(qtable["scale"])[idx].reshape(idx.shape + extra)
+    z = np.asarray(qtable["zero"])[idx].reshape(idx.shape + extra)
+    return c * s + z
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def gather_dequant_rows(qtable, idx):
+    """Strategy-selected gather+dequant from an int8 row-quantized table.
+
+    In-trace: the Pallas kernel on accelerator backends above the cliff,
+    ``jnp.take`` otherwise. Out-of-trace (eager host arrays, e.g. the
+    ``score_uncached`` oracle path): the host packed gather above the cliff.
+    """
+    codes = qtable["codes"]
+    n_rows = codes.shape[0]
+    if n_rows >= CLIFF_ROWS:
+        if (_is_concrete(codes) and _is_concrete(idx)
+                and jax.default_backend() == "cpu"):
+            return jnp.asarray(gather_dequant_np(qtable, np.asarray(idx)))
+        if jax.default_backend() == "tpu":
+            # scalar-prefetch grid specs are TPU-only; GPU falls through to
+            # the generic take (its gather doesn't share the XLA-CPU cliff)
+            return gather_dequant_rows_q8(codes, qtable["scale"],
+                                          qtable["zero"], idx,
+                                          interpret=False)
+    extra = (1,) * (codes.ndim - 1)
+    c = jnp.take(codes, idx, axis=0).astype(jnp.float32)
+    s = jnp.take(qtable["scale"], idx).reshape(idx.shape + extra)
+    z = jnp.take(qtable["zero"], idx).reshape(idx.shape + extra)
+    return c * s + z
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_dequant_rows_q8_jit(codes, scale, zero, idx, interpret: bool = True):
+    """Jitted wrapper over the Pallas kernel (bench/test entry point)."""
+    return gather_dequant_rows_q8(codes, scale, zero, idx, interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the row-gather-and-dequantize kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_dequant_rows_q8_ref(codes, scale, zero, idx):
+    """codes: (V, ...) int8; scale/zero: (V,) f32; idx: any int shape
+    -> f32 ``idx.shape + codes.shape[1:]`` (the ``jnp.take`` formulation the
+    kernel replaces)."""
+    extra = (1,) * (codes.ndim - 1)
+    c = jnp.take(codes, idx, axis=0).astype(jnp.float32)
+    s = jnp.take(scale, idx).reshape(idx.shape + extra)
+    z = jnp.take(zero, idx).reshape(idx.shape + extra)
+    return c * s + z

@@ -1,0 +1,77 @@
+"""Pallas row-gather-and-dequantize kernel for the int8 serving tables (§6).
+
+The serving hot path is one access pattern: gather a few thousand embedding
+rows per microbatch out of a table of up to millions, by hashed feature
+index. XLA's *generic* gather handles it, but on CPU it falls off its
+fast path once the table outgrows the thread-partitioning heuristics
+(measured on a 2-core box: a (R=8, N=64, Fc=8) candidate gather from a
+``(V, 24, 8)`` table costs ~0.2-0.9 ms up to ``V=2^18`` and jumps to
+~3-4 ms at ``V=2^19`` — for f32 *and* int8 alike), and the int8 codes
+additionally miss the vectorized row-copy XLA uses for wide dtypes.
+
+This kernel is the accelerator-side answer: the gather indices ride in as a
+scalar-prefetch operand, so each grid step's *block index map* selects the
+table row to DMA — the gather never exists as an XLA HLO at all, and the
+dequantize (``code * scale + zero``, per-row grids from
+``quantization.quantize_rows``) is fused into the same VMEM-resident step, so
+the f32 row only ever materializes in-register. One gathered row per grid
+step keeps the DMA descriptors trivially shaped; rows are padded to the
+lane-width multiple by the caller if needed.
+
+On the CPU/interpret backend the per-row grid degenerates into a scan of
+dynamic slices — correct (the parity tests run it at small sizes) but far
+slower than a host-side packed gather, which is why
+:func:`repro.kernels.row_gather.ops.use_host_gather` routes large-table CPU
+serving through numpy instead (see ``ops.py`` for the selection contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_dequant_kernel(idx_ref, codes_ref, scale_ref, zero_ref, out_ref):
+    del idx_ref  # consumed by the block index maps (scalar prefetch)
+    out_ref[...] = (codes_ref[...].astype(jnp.float32) * scale_ref[0]
+                    + zero_ref[0])
+
+
+def gather_dequant_rows_q8(codes: jnp.ndarray, scale: jnp.ndarray,
+                           zero: jnp.ndarray, idx: jnp.ndarray, *,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Gather rows ``idx`` from an int8 row-quantized table and dequantize.
+
+    codes: (V, ...) int8 per-row codes; scale/zero: (V,) f32 per-row grids;
+    idx: any-shape int32 row indices -> f32 ``idx.shape + codes.shape[1:]``.
+
+    The indices are a scalar-prefetch operand: the block index maps read
+    ``idx[i]`` to place each grid step's table block, so the row gather is
+    expressed as per-step DMA placement instead of a generic gather HLO.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    row_shape = codes.shape[1:]
+    rowlen = 1
+    for d in row_shape:
+        rowlen *= d
+    flat_codes = codes.reshape(codes.shape[0], rowlen)
+    flat_idx = idx.reshape(-1).astype(jnp.int32)
+    m = flat_idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, rowlen), lambda i, idx: (idx[i], 0)),
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),
+        ],
+        out_specs=pl.BlockSpec((1, rowlen), lambda i, idx: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, rowlen), jnp.float32),
+        interpret=interpret,
+    )(flat_idx, flat_codes, scale, zero)
+    return out.reshape(idx.shape + row_shape)

@@ -39,18 +39,29 @@ composition point; each component maps to a paper section:
   frames (``checkpoint.transfer.unframe``); the engine tracks the trainer's
   version stamp alongside its own generation counter.
 * **§6 (quantized serving path)** — ``InferenceEngine(quantized=True)``
-  keeps the embedding tables resident as **int8 rows** with per-row
-  ``(scale, zero)`` grids (``quantization.quantize_rows``) instead of f32:
-  the update pipe quantizes on ingest (delta frames requantize only their
-  touched rows), every scoring gather moves a quarter of the bytes, and
+  keeps the *whole resident gather set* int8: the embedding tables as
+  **int8 rows** with per-row ``(scale, zero)`` grids
+  (``quantization.quantize_rows``) and the LR table as **blocked int8**
+  (``quantization.quantize_blocks``: ``(V,)`` viewed as ``(V/B, B)`` with a
+  per-block grid — per-row grids degenerate for scalar rows). The update
+  pipe quantizes on ingest (delta frames requantize only their touched
+  rows/blocks), every scoring gather moves ~a quarter of the bytes, and
   dequantization happens in-register — inside the fused Pallas candidate
   kernel (``ffm_candidate_matrices_q8``) on the ``pallas`` backend, or right
-  after the gather on the ``reference`` backend — so the f32 tables never
-  exist in memory on the request path. Cached context partials stay f32
-  (they are activations, not weights; the prefix cache needs only its
-  existing per-generation entry slots). **Tolerance contract**: scores
-  deviate from the f32 oracle by at most the per-row reconstruction error
-  ``quantization.row_max_error`` propagated through the pair sum
+  after the gather otherwise — so the f32 tables never exist in memory on
+  the request path. Cached context partials stay f32 (they are activations,
+  not weights; the prefix cache needs only its existing per-generation
+  entry slots). *How the gather executes* is strategy-selected per table
+  size and backend (``kernels/row_gather``): generic ``jnp.take`` below
+  ~2^17 rows, the scalar-prefetch Pallas gather-and-dequant kernel on
+  accelerator backends above it, and on CPU a **host packed pre-gather**
+  (``host_gather=``, auto) that feeds already-gathered codes + summed LR
+  terms to :func:`batched_candidates_forward_q8` — XLA-CPU's generic gather
+  leaves its fast path above that size (the ROADMAP'd int8 gather cliff)
+  while the packed numpy gather stays flat. **Tolerance contract**: scores
+  deviate from the f32 oracle by at most the per-row/per-block
+  reconstruction errors ``quantization.row_max_error`` /
+  ``quantization.block_max_error`` propagated through the pair and LR sums
   (``quantization.pair_logit_tolerance`` bounds the additive FFM part
   rigorously; the DeepFFM MLP head can amplify further, so parity there is
   asserted against the *roundtrip* oracle — an f32 engine running the
@@ -237,6 +248,47 @@ def compute_context_tails(cfg: FFMConfig, params, prefix, tail_idx, tail_val):
                          prefix["lr_terms"], tail_idx, tail_val)
 
 
+def _reference_candidate_pairs(cfg: FFMConfig, emb_ctx, val_ctx, ec, cand_val):
+    """ctx-cand / cand-cand pair columns from gathered f32 candidate rows —
+    the jnp reference math both candidate forwards share."""
+    f0 = cfg.context_fields
+    (pi, pj), _, xc, aa = ffm.pair_split(cfg)
+    # ctx-cand: pair (i ctx, j cand): dot(emb_ctx[i, j], ec[j-f0, i]) * v_i * v_j
+    exi = emb_ctx[:, pi[xc], pj[xc]]                  # (R, n_xc, k) ctx side
+    exj = ec[:, :, pj[xc] - f0, pi[xc]]               # (R, N, n_xc, k) cand side
+    vx = (val_ctx[:, pi[xc]][:, None, :]
+          * cand_val[:, :, pj[xc] - f0])
+    pairs_xc = jnp.einsum("rxk,rnxk->rnx", exi, exj) * vx
+
+    # cand-cand
+    eai = ec[:, :, pi[aa] - f0, pj[aa]]               # (R, N, n_aa, k)
+    eaj = ec[:, :, pj[aa] - f0, pi[aa]]
+    va = cand_val[:, :, pi[aa] - f0] * cand_val[:, :, pj[aa] - f0]
+    pairs_aa = jnp.einsum("rnxk,rnxk->rnx", eai, eaj) * va
+    return pairs_xc, pairs_aa
+
+
+def _finish_candidates(cfg: FFMConfig, model: str, params, cached,
+                       pairs_xc, pairs_aa, lr_cand):
+    """Assemble the canonical pair vector and run the model head — the tail
+    both candidate forwards share. ``lr_cand``: (R, N) candidate LR sums."""
+    r, n = lr_cand.shape
+    _, cc, xc, aa = ffm.pair_split(cfg)
+    pairs_cc = cached["pairs"][:, ffm.prefix_to_cc_perm(cfg)]
+    lr_ctx = jnp.sum(cached["lr_terms"], axis=-1)
+
+    vec = jnp.zeros((r, n, cfg.n_pairs), pairs_aa.dtype)
+    vec = vec.at[:, :, cc].set(
+        jnp.broadcast_to(pairs_cc[:, None, :], (r, n, cc.size)))
+    vec = vec.at[:, :, xc].set(pairs_xc)
+    vec = vec.at[:, :, aa].set(pairs_aa)
+
+    lr_out = lr_ctx[:, None] + lr_cand + params["lr"]["b"]
+    logits = deepffm.head_from_parts(
+        cfg, params, lr_out.reshape(-1), vec.reshape(r * n, cfg.n_pairs), model)
+    return logits.reshape(r, n)
+
+
 @partial(jax.jit, static_argnums=(0, 1, 2))
 def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
                                params, cached, cand_idx, cand_val):
@@ -245,16 +297,13 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     ``cached`` leaves carry a leading row axis R (stacked prefix states from
     :func:`compute_context` / :func:`compute_context_tails`); cand_idx/val:
     (R, N, F-Fc). Returns logits (R, N). Pair computation routes through the
-    Pallas candidate kernel when ``backend == "pallas"``.
+    Pallas candidate kernel when ``backend == "pallas"``. All table gathers
+    (emb rows, LR weights) happen in-trace here — engines whose quantized
+    table crosses the XLA-CPU gather cliff pre-gather on host instead and
+    call :func:`batched_candidates_forward_q8`.
     """
-    f0 = cfg.context_fields
     emb = params["ffm"]["emb"]
-    r, n = cand_idx.shape[:2]
-
-    (pi, pj), cc, xc, aa = ffm.pair_split(cfg)
     emb_ctx, val_ctx = cached["emb"], cached["val"]
-    pairs_cc = cached["pairs"][:, ffm.prefix_to_cc_perm(cfg)]
-    lr_ctx = jnp.sum(cached["lr_terms"], axis=-1)
 
     if backend == "pallas":
         from repro.kernels.ffm_interaction import ops as ffm_ops
@@ -272,33 +321,45 @@ def batched_candidates_forward(cfg: FFMConfig, model: str, backend: str,
     else:
         # gather_rows dequantizes right after the gather when emb is int8
         ec = ffm.gather_rows(emb, cand_idx)               # (R, N, Fcand, F, k)
-        # ctx-cand: pair (i ctx, j cand): dot(emb_ctx[i, j], ec[j-f0, i]) * v_i * v_j
-        exi = emb_ctx[:, pi[xc], pj[xc]]                  # (R, n_xc, k) ctx side
-        exj = ec[:, :, pj[xc] - f0, pi[xc]]               # (R, N, n_xc, k) cand side
-        vx = (val_ctx[:, pi[xc]][:, None, :]
-              * cand_val[:, :, pj[xc] - f0])
-        pairs_xc = jnp.einsum("rxk,rnxk->rnx", exi, exj) * vx
+        pairs_xc, pairs_aa = _reference_candidate_pairs(
+            cfg, emb_ctx, val_ctx, ec, cand_val)
 
-        # cand-cand
-        eai = ec[:, :, pi[aa] - f0, pj[aa]]               # (R, N, n_aa, k)
-        eaj = ec[:, :, pj[aa] - f0, pi[aa]]
-        va = cand_val[:, :, pi[aa] - f0] * cand_val[:, :, pj[aa] - f0]
-        pairs_aa = jnp.einsum("rnxk,rnxk->rnx", eai, eaj) * va
-
-    # assemble the full pair vector in canonical global order
-    vec = jnp.zeros((r, n, cfg.n_pairs), pairs_aa.dtype)
-    vec = vec.at[:, :, cc].set(
-        jnp.broadcast_to(pairs_cc[:, None, :], (r, n, cc.size)))
-    vec = vec.at[:, :, xc].set(pairs_xc)
-    vec = vec.at[:, :, aa].set(pairs_aa)
-
-    lr_cand = jnp.sum(jnp.take(params["lr"]["w"], cand_idx, axis=0) * cand_val,
+    lr_cand = jnp.sum(ffm.gather_lr(params["lr"]["w"], cand_idx) * cand_val,
                       axis=-1)
-    lr_out = lr_ctx[:, None] + lr_cand + params["lr"]["b"]
+    return _finish_candidates(cfg, model, params, cached,
+                              pairs_xc, pairs_aa, lr_cand)
 
-    logits = deepffm.head_from_parts(
-        cfg, params, lr_out.reshape(-1), vec.reshape(r * n, cfg.n_pairs), model)
-    return logits.reshape(r, n)
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def batched_candidates_forward_q8(cfg: FFMConfig, model: str, backend: str,
+                                  head_params, cached, qc, scale, zero,
+                                  cand_val, lr_cand):
+    """Candidate completion over *pre-gathered* int8 candidate codes.
+
+    The above-the-cliff twin of :func:`batched_candidates_forward` (§6 x the
+    gather subsystem): the engine gathers candidate rows on host — packed
+    numpy gather, immune to the XLA-CPU generic-gather slow path past ~2^17
+    table rows — and ships only the gathered block into the jit: ``qc``
+    (R, N, Fcand, F, k) int8 codes, ``scale``/``zero`` (R, N, Fcand) per-row
+    grids, ``lr_cand`` (R, N) already-summed candidate LR terms (the LR
+    lookups ride the same host gather). ``head_params`` carries only the
+    head leaves (LR bias, MergeNorm, MLP) — the resident tables never cross
+    the jit boundary here, so the call moves 1 byte per candidate element
+    plus two scalars per row, exactly like the in-kernel gather path.
+    """
+    emb_ctx, val_ctx = cached["emb"], cached["val"]
+    if backend == "pallas":
+        from repro.kernels.ffm_interaction import ops as ffm_ops
+
+        pairs_xc, pairs_aa = ffm_ops.candidate_interactions_q8(
+            cfg, emb_ctx, val_ctx, qc, scale, zero, cand_val)
+    else:
+        ec = (qc.astype(jnp.float32) * scale[..., None, None]
+              + zero[..., None, None])
+        pairs_xc, pairs_aa = _reference_candidate_pairs(
+            cfg, emb_ctx, val_ctx, ec, cand_val)
+    return _finish_candidates(cfg, model, head_params, cached,
+                              pairs_xc, pairs_aa, lr_cand)
 
 
 def candidates_forward(cfg: FFMConfig, model: str, params, cached,
@@ -340,6 +401,12 @@ class InferenceEngine:
       cache, overriding ``prefix_stride``; feed it from
       :meth:`suggest_checkpoint_depths` of a running engine to adapt the
       depth set to observed traffic.
+    * ``host_gather`` — pre-gather candidate codes/LR terms on host (packed
+      numpy gather) and score through
+      :func:`batched_candidates_forward_q8`, dodging the XLA-CPU gather
+      cliff past ~2^17 table rows. ``None`` (default) auto-selects by table
+      size and backend (``row_gather.ops.use_host_gather``); only active on
+      quantized engines.
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -348,11 +415,17 @@ class InferenceEngine:
                  prefix_stride: Optional[int] = 4, dedup: bool = True,
                  warmup_buckets: Optional[Tuple[int, int]] = None,
                  quantized: bool = False,
-                 prefix_depths: Optional[Sequence[int]] = None):
+                 prefix_depths: Optional[Sequence[int]] = None,
+                 host_gather: Optional[bool] = None):
+        from repro.kernels.row_gather import ops as rg_ops
+
         self.plan = ScoringPlan(cfg, model, backend=backend, min_bucket=min_bucket)
         self.cache_entries = cache_entries
         self.dedup = dedup
         self.quantized = quantized
+        self.host_gather = quantized and (
+            rg_ops.use_host_gather(cfg.hash_space)
+            if host_gather is None else bool(host_gather))
         self.weights_version = 0     # trainer's stamp from the update frame
         self._weights: Tuple[Optional[Dict], int] = (
             self._maybe_quantize(params), 0)
@@ -403,7 +476,8 @@ class InferenceEngine:
     @property
     def resident_weight_bytes(self) -> int:
         """Bytes of the currently published weight pytree — ~4x smaller with
-        ``quantized=True`` (int8 codes + two f32 scalars per row)."""
+        ``quantized=True`` (emb: int8 codes + two f32 scalars per row; LR:
+        int8 codes + two f32 scalars per block)."""
         params = self.params
         return 0 if params is None else Q.quantized_nbytes(params)
 
@@ -555,9 +629,18 @@ class InferenceEngine:
         f = params["ffm"]["emb"]
         emb = ({k: np.asarray(v) for k, v in f.items()}
                if isinstance(f, dict) else np.asarray(f))
-        lr = np.asarray(params["lr"]["w"])
+        w = params["lr"]["w"]
+        lr = ({k: np.asarray(v) for k, v in w.items()}
+              if isinstance(w, dict) else np.asarray(w))
         self._host_tables = ((params, emb, lr),) + self._host_tables[:1]
         return emb, lr
+
+    def _head_params(self, params):
+        """``params`` minus the resident gather tables — what the pre-gather
+        scoring path ships into the jit (the tables stay host-side)."""
+        out = {k: v for k, v in params.items() if k != "ffm"}
+        out["lr"] = {"b": params["lr"]["b"]}
+        return out
 
     def _resolve_contexts(self, ctxs: List[Tuple[Tuple[bytes, ...],
                                                  np.ndarray, np.ndarray]],
@@ -780,8 +863,7 @@ class InferenceEngine:
                 lambda x: np.concatenate(
                     [x, np.zeros((rb - n_chunks,) + x.shape[1:], x.dtype)]),
                 stacked)
-        out = batched_candidates_forward(
-            self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
+        out = self._candidates_forward(params, stacked, ki_b, kv_b)
         out = np.asarray(jax.block_until_ready(out))  # one transfer, then
         # plain numpy scatter-back (no per-request device gathers)
         flat = out[row_of_u[inverse], slot_of_u[inverse]]
@@ -792,6 +874,27 @@ class InferenceEngine:
             self.stats.record(time.perf_counter() - t0, total,
                               requests=len(reqs))
         return results
+
+    def _candidates_forward(self, params, stacked, ki_b, kv_b):
+        """Route one padded candidate block through the right jitted forward:
+        the in-trace-gather one, or — on a ``host_gather`` engine — the
+        pre-gathered q8 one, with the candidate codes and LR terms gathered
+        here on host (packed numpy gather, immune to the XLA gather cliff).
+        """
+        emb = params["ffm"]["emb"]
+        if self.host_gather and Q.is_row_quantized(emb):
+            from repro.kernels.row_gather import ops as rg_ops
+
+            emb_h, lr_h = self._host_weights(params)
+            qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
+            s = emb_h["scale"][ki_b]
+            z = emb_h["zero"][ki_b]
+            lr_cand = (ffm.gather_lr_np(lr_h, ki_b) * kv_b).sum(-1)
+            return batched_candidates_forward_q8(
+                self.cfg, self.model, self.backend, self._head_params(params),
+                stacked, qc, s, z, kv_b, lr_cand.astype(np.float32))
+        return batched_candidates_forward(
+            self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
 
     _warmed_requests: Optional[int] = None  # set by warmup(); clamps prewarm
 
@@ -823,8 +926,8 @@ class InferenceEngine:
                 "lr_terms": np.zeros((rb, fc), np.float32),
             }
             for nb in self.plan.buckets_upto(max_candidates):
-                batched_candidates_forward(
-                    cfg, self.model, self.backend, params, cached,
+                self._candidates_forward(
+                    params, cached,
                     np.zeros((rb, nb, fcand), np.int32),
                     np.zeros((rb, nb, fcand), np.float32))
                 calls += 1

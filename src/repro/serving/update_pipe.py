@@ -42,6 +42,18 @@ from repro.checkpoint import transfer
 from repro.core import quantization as Q
 
 
+def _merge_row_ranges(rr):
+    """Sort ``(start, stop)`` ranges and coalesce overlapping/adjacent ones."""
+    rr = sorted(rr)
+    merged = [rr[0]]
+    for s, e in rr[1:]:
+        if s <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+        else:
+            merged.append((s, e))
+    return merged
+
+
 @dataclass
 class UpdatePipeStats:
     submitted: int = 0
@@ -51,11 +63,12 @@ class UpdatePipeStats:
     bytes_ingested: int = 0
     idle_priority: bool = False  # ingest thread demoted below scorers
     contexts_refreshed: int = 0  # cache partials re-warmed post-publish
-    # quantize-on-ingest (engines with quantized=True): embedding rows
-    # (re)quantized to int8 across all frames, and the CPU spent doing it.
-    # Steady-state delta frames requantize only their touched rows, so
-    # rows_requantized grows with frame size, not model size.
+    # quantize-on-ingest (engines with quantized=True): embedding rows /
+    # LR blocks (re)quantized to int8 across all frames, and the CPU spent
+    # doing it. Steady-state delta frames requantize only their touched
+    # rows/blocks, so both counters grow with frame size, not model size.
     rows_requantized: int = 0
+    blocks_requantized: int = 0
     quantize_seconds: float = 0.0
 
 
@@ -126,57 +139,84 @@ class UpdatePipe:
                 and threading.current_thread() is not self._thread):
             # frames must apply in submission order: a synchronous ingest
             # overtaking frames still queued for the background thread would
-            # patch/XOR against the wrong base bytes — drain them first
-            self.flush()
+            # patch/XOR against the wrong base bytes. flush() alone leaves a
+            # window — a frame submitted between flush returning and the
+            # lock acquisition would still be overtaken — so loop
+            # flush-then-verify: only proceed when the lock is held AND
+            # nothing is pending (checked under _pending_cv, which submit
+            # increments before enqueueing).
+            while True:
+                self.flush()
+                self._ingest_lock.acquire()
+                with self._pending_cv:
+                    drained = self._pending == 0
+                if drained:
+                    break
+                self._ingest_lock.release()
+            try:
+                return self._ingest_locked(update, manifest, like_params)
+            finally:
+                self._ingest_lock.release()
         with self._ingest_lock:
-            t0 = time.perf_counter()
-            if manifest is not None or like_params is not None:
-                self.configure(manifest, like_params)
-            on_ingest_thread = (self._thread is not None
-                                and threading.current_thread() is self._thread)
-            self._receiver.apply_update(update)
-            params = self._receiver.materialize(
-                manifest=self._manifest, like=self._like,
-                pace=self._pace if on_ingest_thread else None)
-            if getattr(self._engine, "quantized", False):
-                # quantize-on-ingest (§6 serving): the standby slot holds
-                # int8 rows + per-row grids, not f32 — still pure numpy on
-                # this thread. A delta frame's touched element ranges map to
-                # embedding rows, and only those requantize (per-row grids
-                # are independent, so untouched rows stay byte-identical);
-                # full/patch frames requantize everything. ``prev`` is the
-                # pipe's OWN last publish, not ``engine.params``: untouched
-                # rows must copy codes quantized from the receiver's
-                # previous wire state — an ``install_params`` that diverged
-                # from the wire stream must not leak rows into this frame.
-                tq = time.perf_counter()
-                qstats: dict = {}
-                params = Q.quantize_params_rows(
-                    params, prev=self._last_qparams,
-                    touched_rows=self._touched_leaf_rows(), stats=qstats)
-                self._last_qparams = params
-                self.stats.rows_requantized += qstats.get("rows_requantized", 0)
-                self.stats.quantize_seconds += time.perf_counter() - tq
-            self.stats.decode_seconds += time.perf_counter() - t0
-            self.stats.bytes_ingested += len(update)
-            if on_ingest_thread and self._q.empty():
-                # pre-warm cached context partials against the standby params
-                # so the swap flips weights AND a warm cache in one step;
-                # skipped when more frames are queued (only the last matters)
-                prewarm = getattr(self._engine, "prewarm_contexts", None)
-                if prewarm is not None:
-                    self.stats.contexts_refreshed += prewarm(
-                        params, pause_s=self._pace[1] if self._pace else 0.0)
-            gen = self._engine._publish(params, self._receiver.version,
-                                        len(update))
-            self.stats.published += 1
-            return gen
+            return self._ingest_locked(update, manifest, like_params)
+
+    def _ingest_locked(self, update: bytes, manifest=None, like_params=None):
+        """Decode + publish one frame; caller holds ``_ingest_lock``."""
+        t0 = time.perf_counter()
+        if manifest is not None or like_params is not None:
+            self.configure(manifest, like_params)
+        on_ingest_thread = (self._thread is not None
+                            and threading.current_thread() is self._thread)
+        self._receiver.apply_update(update)
+        params = self._receiver.materialize(
+            manifest=self._manifest, like=self._like,
+            pace=self._pace if on_ingest_thread else None)
+        if getattr(self._engine, "quantized", False):
+            # quantize-on-ingest (§6 serving): the standby slot holds int8
+            # rows + per-row grids, not f32 — still pure numpy on this
+            # thread. A delta frame's touched element ranges map to
+            # embedding rows / LR blocks, and only those requantize
+            # (per-row and per-block grids are independent, so untouched
+            # ones stay byte-identical); full/patch frames requantize
+            # everything. ``prev`` is the pipe's OWN last publish, not
+            # ``engine.params``: untouched rows must copy codes quantized
+            # from the receiver's previous wire state — an
+            # ``install_params`` that diverged from the wire stream must
+            # not leak rows into this frame.
+            tq = time.perf_counter()
+            qstats: dict = {}
+            params = Q.quantize_params_rows(
+                params, prev=self._last_qparams,
+                touched_rows=self._touched_leaf_rows(), stats=qstats)
+            self._last_qparams = params
+            self.stats.rows_requantized += qstats.get("rows_requantized", 0)
+            self.stats.blocks_requantized += qstats.get("blocks_requantized", 0)
+            self.stats.quantize_seconds += time.perf_counter() - tq
+        self.stats.decode_seconds += time.perf_counter() - t0
+        self.stats.bytes_ingested += len(update)
+        if on_ingest_thread and self._q.empty():
+            # pre-warm cached context partials against the standby params
+            # so the swap flips weights AND a warm cache in one step;
+            # skipped when more frames are queued (only the last matters)
+            prewarm = getattr(self._engine, "prewarm_contexts", None)
+            if prewarm is not None:
+                self.stats.contexts_refreshed += prewarm(
+                    params, pause_s=self._pace[1] if self._pace else 0.0)
+        gen = self._engine._publish(params, self._receiver.version,
+                                    len(update))
+        self.stats.published += 1
+        return gen
 
     def _touched_leaf_rows(self):
         """Map the receiver's last incremental-decode element ranges onto
         per-leaf row ranges: ``{"a/b": [(row_start, row_stop), ...]}`` over
         the manifest's concatenated-element layout. ``None`` means the decode
-        was full (first frame, patch, regrid) — requantize everything."""
+        was full (first frame, patch, regrid) — requantize everything.
+        Widening element ranges to whole rows can make adjacent ranges
+        overlap (two half-row ranges widen to the same row), so each leaf's
+        ranges are merged before returning — otherwise the requantize would
+        process rows twice and ``stats.rows_requantized`` would double-count.
+        """
         ranges = self._receiver.last_touched_elems
         if ranges is None or self._manifest is None:
             return None
@@ -192,7 +232,7 @@ class UpdatePipe:
                     rr.append(((lo - pos) // row_elems,
                                -(-(hi - pos) // row_elems)))
             if rr:
-                out[ent["path"]] = rr
+                out[ent["path"]] = _merge_row_ranges(rr)
             pos += n
         return out
 
@@ -206,11 +246,17 @@ class UpdatePipe:
         at-most-once shipping, so callers using patch/delta framing should
         pass ``block=True`` to apply backpressure instead of dropping.
         """
-        if self._closed:
-            raise RuntimeError("update pipe is closed")
-        self._ensure_thread()
         with self._pending_cv:
+            # closed-check and pending-increment are atomic under the cv:
+            # a submit that merely *checked* closed first could enqueue its
+            # frame behind close()'s None sentinel — silently dropped, with
+            # _pending never decremented, hanging every later flush(). With
+            # the increment inside the check, close()'s flush() waits for
+            # this frame (or the submit sees _closed and raises).
+            if self._closed:
+                raise RuntimeError("update pipe is closed")
             self._pending += 1
+        self._ensure_thread()
         self.stats.submitted += 1
         try:
             self._q.put(update, block=block)
@@ -237,14 +283,26 @@ class UpdatePipe:
         return self._engine.generation
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
-        """Drain the queue and stop the ingest thread."""
+        """Drain the queue and stop the ingest thread. ``_closed`` flips
+        under ``_pending_cv`` *before* the sentinel is queued, pairing with
+        the atomic closed-check in :meth:`submit`: every concurrent submit
+        either lands ahead of the sentinel (drained by the flush loop) or
+        observes the closed pipe and raises — no frame can be silently
+        stranded behind the sentinel."""
         if self._thread is not None:
-            self.flush(timeout)
-            self._closed = True
+            # loop: a submit that won the race against _closed may still be
+            # adding frames while the first flush drains
+            while True:
+                self.flush(timeout)
+                with self._pending_cv:
+                    if self._pending == 0:
+                        self._closed = True
+                        break
             self._q.put(None)
             self._thread.join(timeout)
         else:
-            self._closed = True
+            with self._pending_cv:
+                self._closed = True
 
     # -- internals ----------------------------------------------------------
     def _ensure_thread(self) -> None:

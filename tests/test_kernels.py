@@ -117,3 +117,74 @@ def test_flash_attention_kernel_matches_model_flash():
     a = flash_attention_pallas(q, k, v, block_q=32, block_k=16)
     b = jnp_flash(q, k, v, chunk_q=32, chunk_k=16)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# -- row_gather: gather-and-dequant kernel + host packed gather ----------------
+
+@pytest.mark.parametrize("V,F,K,M", [(64, 6, 4, 17), (256, 12, 8, 48),
+                                     (33, 3, 2, 5)])
+def test_row_gather_q8_kernel_matches_ref(V, F, K, M):
+    from repro.kernels.row_gather.ref import gather_dequant_rows_q8_ref
+    from repro.kernels.row_gather.row_gather import gather_dequant_rows_q8
+
+    rng = np.random.default_rng(V + M)
+    codes = rng.integers(-127, 128, (V, F, K)).astype(np.int8)
+    scale = rng.uniform(1e-4, 1e-2, V).astype(np.float32)
+    zero = rng.normal(0, 0.05, V).astype(np.float32)
+    idx = rng.integers(0, V, M).astype(np.int32)
+    got = gather_dequant_rows_q8(jnp.asarray(codes), jnp.asarray(scale),
+                                 jnp.asarray(zero), jnp.asarray(idx))
+    want = gather_dequant_rows_q8_ref(jnp.asarray(codes), jnp.asarray(scale),
+                                      jnp.asarray(zero), jnp.asarray(idx))
+    assert got.shape == (M, F, K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_row_gather_q8_kernel_multidim_idx():
+    from repro.kernels.row_gather.row_gather import gather_dequant_rows_q8
+
+    rng = np.random.default_rng(5)
+    codes = rng.integers(-127, 128, (128, 4, 2)).astype(np.int8)
+    scale = rng.uniform(1e-3, 1e-2, 128).astype(np.float32)
+    zero = rng.normal(0, 0.1, 128).astype(np.float32)
+    idx = rng.integers(0, 128, (3, 7)).astype(np.int32)
+    got = np.asarray(gather_dequant_rows_q8(
+        jnp.asarray(codes), jnp.asarray(scale), jnp.asarray(zero),
+        jnp.asarray(idx)))
+    want = (codes[idx].astype(np.float32) * scale[idx][..., None, None]
+            + zero[idx][..., None, None])
+    assert got.shape == (3, 7, 4, 2)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("row_shape", [(24, 8), (3,), (5, 7), ()])
+def test_host_packed_gather_matches_fancy_index(row_shape):
+    """The packed u64/u32/u16 views must reproduce plain fancy indexing for
+    every row byte-length (incl. odd lengths that fall back to int8)."""
+    from repro.kernels.row_gather import ops as rg_ops
+
+    rng = np.random.default_rng(sum(row_shape) + 1)
+    table = rng.integers(-127, 128, (100,) + row_shape).astype(np.int8)
+    idx = rng.integers(0, 100, (4, 9)).astype(np.int64)
+    np.testing.assert_array_equal(rg_ops.gather_codes_np(table, idx),
+                                  table[idx])
+    # f32 tables pack too (wider words, same values)
+    tf = rng.normal(size=(64,) + row_shape).astype(np.float32)
+    i2 = rng.integers(0, 64, 13)
+    np.testing.assert_array_equal(rg_ops.gather_codes_np(tf, i2), tf[i2])
+
+
+def test_host_gather_dequant_matches_gather_rows():
+    from repro.core import quantization as QQ
+    from repro.kernels.row_gather import ops as rg_ops
+
+    rng = np.random.default_rng(9)
+    w = rng.normal(0, 0.1, (50, 6, 4)).astype(np.float32)
+    qt = QQ.quantize_rows(w)
+    idx = rng.integers(0, 50, (2, 11))
+    got = rg_ops.gather_dequant_np(qt, idx)
+    want = (qt["codes"][idx].astype(np.float32)
+            * qt["scale"][idx][..., None, None]
+            + qt["zero"][idx][..., None, None])
+    np.testing.assert_allclose(got, want, rtol=1e-7, atol=1e-8)

@@ -48,11 +48,13 @@ def _params(model="deepffm", seed=0):
 
 
 def _roundtrip_params(params, qparams):
-    """f32 params whose emb table is the dequantized int8 table — the exact
-    oracle for the quantized scoring path."""
+    """f32 params whose emb/LR tables are the dequantized int8 tables — the
+    exact oracle for the quantized scoring path (blocked LR included)."""
     out = dict(params)
     out["ffm"] = dict(params["ffm"])
     out["ffm"]["emb"] = jnp.asarray(Q.dequantize_rows(qparams["ffm"]["emb"]))
+    out["lr"] = dict(params["lr"])
+    out["lr"]["w"] = jnp.asarray(Q.dequantize_blocks(qparams["lr"]["w"]))
     return out
 
 
@@ -99,15 +101,22 @@ def test_quantize_params_rows_structure_and_stats():
     qp = Q.quantize_params_rows(params, stats=stats)
     assert Q.is_row_quantized(qp["ffm"]["emb"])
     assert stats["rows_requantized"] == CFG.hash_space
+    # the LR table quantizes too — blocked grids (scalar-per-row leaf)
+    assert Q.is_block_quantized(qp["lr"]["w"])
+    assert stats["blocks_requantized"] == CFG.hash_space // Q.LR_BLOCK
     # non-table leaves shared, f32
     assert qp["mlp"] is params["mlp"]
-    assert qp["lr"] is params["lr"]
-    # ~4x fewer resident bytes for the table-dominated tree
+    assert qp["lr"]["b"] is params["lr"]["b"]
+    # ~4x fewer resident bytes for the table-dominated tree, and strictly
+    # fewer than quantizing the emb rows alone (the LR leaf shrank too)
     ratio = Q.quantized_nbytes(params) / Q.quantized_nbytes(qp)
     assert 3.0 <= ratio <= 4.0
+    rows_only = Q.quantize_params_rows(params, block_paths=())
+    assert Q.quantized_nbytes(qp) < Q.quantized_nbytes(rows_only)
     # idempotent: re-quantizing a quantized tree is a no-op
     qp2 = Q.quantize_params_rows(qp)
     assert qp2["ffm"]["emb"] is qp["ffm"]["emb"]
+    assert qp2["lr"]["w"] is qp["lr"]["w"]
 
 
 # -- fused kernel vs reference ------------------------------------------------
@@ -230,6 +239,12 @@ def test_delta_ingest_requantizes_only_touched_rows_byte_exact():
         got = eng.params["ffm"]["emb"]
         for k in ("codes", "scale", "zero"):
             np.testing.assert_array_equal(got[k], want[k])
+        # blocked-LR residency: incremental block requantize lands byte-exact
+        # against a from-scratch blocked quantize of the same wire state
+        want_lr = Q.quantize_blocks(np.asarray(f32p["lr"]["w"]), Q.LR_BLOCK)
+        got_lr = eng.params["lr"]["w"]
+        for k in ("codes", "scale", "zero"):
+            np.testing.assert_array_equal(got_lr[k], want_lr[k])
         seen.append(eng.update_pipe().stats.rows_requantized)
         assert transfer.unframe(upd).is_delta == (rnd > 0)
     # first frame quantized the whole table; deltas only their touched rows
@@ -340,3 +355,249 @@ def test_suggest_checkpoint_depths_follows_observed_hits():
 def test_suggest_checkpoint_depths_cold_engine_keeps_current():
     eng = InferenceEngine(CFG, params=_params(), prefix_stride=3)
     assert eng.suggest_checkpoint_depths() == eng._cache.checkpoint_depths()
+
+
+# -- blocked int8 quantization (LR table) --------------------------------------
+
+def test_quantize_blocks_roundtrip_within_bound():
+    rng = np.random.default_rng(21)
+    w = rng.normal(0, 0.1, 1000).astype(np.float32)  # trailing partial block
+    w[64:128] = 0.5          # constant block reconstructs exactly
+    w[128:192] *= 100.0      # per-block grids: a wild block stays contained
+    qt = Q.quantize_blocks(w, block=64)
+    assert qt["codes"].dtype == np.int8 and qt["codes"].shape == (1000,)
+    assert qt["scale"].shape == (-(-1000 // 64),)
+    back = Q.dequantize_blocks(qt)
+    err = np.abs(back - w)
+    assert err.max() <= Q.block_max_error(qt) + 1e-7
+    per_block = np.repeat(qt["scale"] * 0.5, 64)[:1000] + 1e-7
+    assert (err <= per_block).all()
+    np.testing.assert_array_equal(back[64:128], w[64:128])
+    # quiet blocks keep fine grids despite the wild one
+    assert qt["scale"][0] < qt["scale"][2] / 50
+
+
+def test_requantize_blocks_touches_only_blocks_byte_exact():
+    rng = np.random.default_rng(22)
+    w = rng.normal(0, 0.1, 1000).astype(np.float32)
+    qt = Q.quantize_blocks(w, block=64)
+    w2 = w.copy()
+    w2[70] += 1.0     # block 1
+    w2[130:140] -= 2.0  # block 2
+    w2[999] += 0.5    # trailing partial block
+    out = Q.requantize_blocks(qt, w2, [(70, 71), (130, 140), (999, 1000)])
+    full = Q.quantize_blocks(w2, block=64)
+    for k in ("codes", "scale", "zero"):
+        np.testing.assert_array_equal(out[k], full[k])
+        assert out[k] is not qt[k]  # copies: the published table never mutates
+    # untouched blocks byte-identical to the original quantization
+    np.testing.assert_array_equal(out["codes"][:64], qt["codes"][:64])
+    np.testing.assert_array_equal(out["codes"][192:960], qt["codes"][192:960])
+
+
+def test_gather_lr_blocked_matches_dequantized_vector():
+    import jax.numpy as jnp2
+
+    rng = np.random.default_rng(23)
+    w = rng.normal(0, 0.1, 500).astype(np.float32)
+    qt = Q.quantize_blocks(w, block=64)
+    idx = rng.integers(0, 500, (7, 3))
+    dq = Q.dequantize_blocks(qt)
+    np.testing.assert_allclose(ffm.gather_lr_np(qt, idx), dq[idx],
+                               rtol=1e-7, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(ffm.gather_lr(qt, jnp2.asarray(idx))),
+                               dq[idx], rtol=1e-6, atol=1e-7)
+
+
+# -- host-gather engine (the gather-cliff path) --------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_host_gather_engine_matches_roundtrip_oracle(backend):
+    """``host_gather=True`` forces the packed pre-gather + q8 forward even on
+    a small table — it must match the roundtrip oracle exactly like the
+    in-trace gather path (same codes, same grids, same head)."""
+    params = _params()
+    qe = InferenceEngine(CFG, backend=backend, params=params, quantized=True,
+                         host_gather=True, warmup_buckets=(4, 16))
+    assert qe.host_gather
+    rt = InferenceEngine(CFG, backend=backend,
+                         params=_roundtrip_params(params, qe.params))
+    stream = CTRStream(CFG, seed=6)
+    for n in (1, 5, 8, 16):
+        req = stream.request(n)
+        np.testing.assert_allclose(np.asarray(qe.score(*req)),
+                                   np.asarray(rt.score(*req)),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_host_gather_batch_dedup_matches_in_trace_engine():
+    """Same quantized tables, two gather strategies: the host pre-gather
+    engine and the in-trace engine must agree bit-for-bit on batched,
+    deduped traffic (the strategies move the same bytes)."""
+    params = _params("ffm")
+    host = InferenceEngine(CFG, "ffm", params=params, quantized=True,
+                           host_gather=True, prefix_stride=2)
+    trace = InferenceEngine(CFG, "ffm", params=params, quantized=True,
+                            host_gather=False, prefix_stride=2)
+    assert not trace.host_gather
+    stream = CTRStream(CFG, seed=8)
+    reqs = [stream.request(n) for n in (2, 7, 4)]
+    reqs.append(reqs[0])
+    for got, want in zip(host.score_batch(reqs), trace.score_batch(reqs)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# -- update-pipe touched-range mapping ----------------------------------------
+
+def test_touched_leaf_rows_merges_overlapping_ranges():
+    """Two element ranges widening to the same/adjacent rows must come back
+    merged — otherwise ingest requantizes rows twice and double-counts
+    ``stats.rows_requantized``."""
+    from repro.serving.update_pipe import UpdatePipe
+
+    eng = InferenceEngine(CFG, quantized=True)
+    manifest = [{"path": "ffm/emb", "shape": (10, 4, 2), "dtype": "float32",
+                 "offset": 0},
+                {"path": "lr/w", "shape": (16,), "dtype": "float32",
+                 "offset": 320}]
+    pipe = UpdatePipe(eng, manifest=manifest)
+    # elems 0..80 are ffm/emb (8 per row), 80..96 are lr/w
+    pipe._receiver.last_touched_elems = [
+        (2, 3), (5, 2),    # both inside emb row 0
+        (15, 2),           # emb rows 1..3 (overlaps row boundary)
+        (62, 10),          # emb rows 7..9
+        (81, 1), (82, 2),  # lr elements 1..4 (adjacent)
+    ]
+    out = pipe._touched_leaf_rows()
+    assert out["ffm/emb"] == [(0, 3), (7, 9)]
+    assert out["lr/w"] == [(1, 4)]
+    # the merged ranges drive a single-count requantize
+    stats = {}
+    params = jax.tree_util.tree_map(np.asarray, _params())
+    qp = Q.quantize_params_rows(params)
+    Q.quantize_params_rows(
+        {"ffm": {"emb": np.asarray(params["ffm"]["emb"])[:10, :4, :2]},
+         "lr": {"w": np.asarray(params["lr"]["w"])[:16], "b": np.float32(0)}},
+        prev={"ffm": {"emb": Q.quantize_rows(
+            np.asarray(params["ffm"]["emb"])[:10, :4, :2])},
+            "lr": {"w": Q.quantize_blocks(
+                np.asarray(params["lr"]["w"])[:16], Q.LR_BLOCK)}},
+        touched_rows=out, stats=stats)
+    assert stats["rows_requantized"] == 5  # rows 0,1,2,7,8 — not 6
+    del qp
+
+
+# -- update-pipe ordering/close races -----------------------------------------
+
+def test_sync_ingest_does_not_overtake_frame_submitted_in_flush_window():
+    """A frame submitted between a synchronous ingest's queue drain and its
+    lock acquisition must still apply *before* the synchronous frame —
+    otherwise the later patch applies against the wrong base bytes."""
+    from repro.serving import update_pipe as up
+
+    params = [jax.tree_util.tree_map(np.asarray, _params("ffm", seed=s))
+              for s in range(3)]
+    snd = transfer.Sender(mode="patch")
+    frames = [snd.make_update(p) for p in params]
+
+    eng = InferenceEngine(CFG, "ffm", quantized=True)
+
+    class RacingPipe(up.UpdatePipe):
+        raced = False
+
+        def flush(self, timeout=30.0):
+            gen = super().flush(timeout)
+            if not self.raced and getattr(self, "_race_frame", None) is not None:
+                # the window: after the drain, before the ingest lock
+                self.raced = True
+                self.submit(self._race_frame, block=True)
+            return gen
+
+    pipe = RacingPipe(eng, manifest=snd.manifest, like_params=params[0])
+    eng._pipe = pipe
+    pipe.submit(frames[0], block=True)
+    pipe.flush()
+    pipe.raced = False
+    pipe._race_frame = frames[1]  # v2, submitted inside v3's flush window
+    pipe.ingest(frames[2])        # synchronous v3
+    pipe.flush()
+    assert pipe.version == 3
+    want = Q.quantize_params_rows(params[2])
+    got = eng.params
+    for k in ("codes", "scale", "zero"):
+        np.testing.assert_array_equal(got["ffm"]["emb"][k],
+                                      want["ffm"]["emb"][k])
+
+
+def test_submit_after_close_raises_and_close_never_strands_frames():
+    from repro.serving.update_pipe import UpdatePipe
+
+    params = jax.tree_util.tree_map(np.asarray, _params("ffm"))
+    snd = transfer.Sender(mode="raw")
+    eng = InferenceEngine(CFG, "ffm", quantized=True)
+    n_sent = 24
+    frames = [snd.make_update(params) for _ in range(n_sent)]
+    pipe = UpdatePipe(eng, manifest=snd.manifest, like_params=params)
+    results = []
+
+    def submitter(chunk):
+        for f in chunk:
+            try:
+                pipe.submit(f, block=True)
+                results.append("ok")
+            except RuntimeError:
+                results.append("closed")
+
+    threads = [threading.Thread(target=submitter, args=(frames[i::3],))
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.01)
+    pipe.close(timeout=30.0)
+    for t in threads:
+        t.join()
+    # every submit either completed or saw the closed pipe — and every
+    # accepted frame was published before the sentinel (nothing stranded)
+    assert len(results) == n_sent
+    assert pipe._pending == 0
+    assert pipe.stats.published == results.count("ok")
+    with pytest.raises(RuntimeError):
+        pipe.submit(frames[0])
+
+
+# -- outlier-sidecar regression (stale int8 codes) -----------------------------
+
+def test_sidecar_only_rows_requantize_on_ingest():
+    """A row whose change reaches the server *only* through the outlier
+    sidecar (its codes clip at the grid edge / its delta range was not
+    shipped) must still requantize: the sidecar indices are unioned into
+    the receiver's touched-element set. Without the union the engine keeps
+    int8 codes quantized from the pre-drift values — exactly the weights
+    that drifted furthest."""
+    p1 = jax.tree_util.tree_map(np.asarray, _params("ffm"))
+    p1["ffm"]["emb"] = (p1["ffm"]["emb"] * 0.01).astype(np.float32)
+    r, r2 = 100, 200
+    p2 = dict(p1)
+    p2["ffm"] = dict(p1["ffm"])
+    emb2 = p1["ffm"]["emb"].copy()
+    emb2[r] = 10.0   # far outside the round-1 grid -> outlier sidecar
+    emb2[r2] += 1e-4  # an honestly-reported touched row
+    p2["ffm"]["emb"] = emb2
+
+    snd = transfer.Sender(mode="patch+quant")
+    u1 = snd.make_update(p1)
+    # row r deliberately absent from `touched` — modelling a trainer whose
+    # touched tracking missed it; its exact value still rides the sidecar
+    u2 = snd.make_update(p2, touched={"ffm/emb": np.asarray([r2]),
+                                      "lr/w": np.zeros(0, np.int64)})
+    assert transfer.unframe(u2).is_delta
+
+    eng = InferenceEngine(CFG, "ffm", quantized=True)
+    eng.apply_update(u1, snd.manifest, p1)
+    eng.apply_update(u2)
+    got = Q.dequantize_rows(eng.params["ffm"]["emb"])
+    # constant row of 10.0 quantizes exactly; stale codes would leave ~0.01
+    np.testing.assert_allclose(got[r], 10.0, atol=1e-3)
+    # and the ingest stayed incremental: nowhere near a full requantize
+    assert eng.update_pipe().stats.rows_requantized < 2 * CFG.hash_space
