@@ -22,9 +22,17 @@ Four traffic shapes through one :class:`InferenceEngine` per configuration:
   ``hash_space`` 2^14..2^19: above ~2^17 rows XLA-CPU's generic gather
   leaves its fast path (the ROADMAP'd int8 gather cliff), so the quantized
   engine switches to the host packed pre-gather
-  (``kernels/row_gather``; ``host_gather`` auto). The acceptance flag
-  asserts quantized >= f32 predictions/s at *every* size — the cliff is
-  gone — and the raw per-strategy gather timings are recorded alongside.
+  (``kernels/row_gather``; ``host_gather`` auto — the f32 arm pins
+  ``host_gather=False`` so it keeps measuring the cliff the auto policy now
+  routes both dtypes around). The acceptance flag asserts quantized >= f32
+  predictions/s at *every* size — the cliff is gone — and the raw
+  per-strategy gather timings are recorded alongside.
+* ``sharded_scaling`` — the hash-space-sharded fleet
+  (:class:`~repro.serving.shard_router.ShardRouter`) at N = 1, 2, 4 shards
+  vs the single engine on identical traffic: aggregate predictions/s,
+  per-shard resident bytes (~1/N), and the bit-invariance of scores across
+  shard counts. Core-aware: the near-linear flag is only asserted on a
+  multi-core box (``cpu_count`` is recorded).
 
 Writes ``BENCH_serving.json`` (provenance-stamped via ``write_bench_json``).
 ``benchmarks/run.py --smoke`` checks every name in :data:`SCENARIOS` exists
@@ -51,7 +59,8 @@ CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
 # top-level keys BENCH_serving.json must carry — `run.py --smoke` fails if a
 # scenario silently stopped being written (the stale-artifact trap)
 BENCH_FILE = "BENCH_serving.json"
-SCENARIOS = ("results", "overlap_traffic", "quantized_serving", "gather_cliff")
+SCENARIOS = ("results", "overlap_traffic", "quantized_serving",
+             "gather_cliff", "sharded_scaling")
 
 
 def _drive(engine: InferenceEngine, reqs, *, uncached: bool = False) -> dict:
@@ -269,6 +278,16 @@ def run(quick: bool = False):
             f"ratio={r['int8_over_f32']:.2f}x "
             f"host_gather={r['host_gather']}"))
 
+    # -- sharded fleet: scatter-gather router at N shards --------------------
+    sharded = _sharded_scaling_scenario(quick)
+    for n, r in sorted(sharded["shard_counts"].items(),
+                       key=lambda kv: int(kv[0])):
+        rows.append(row(
+            f"serving_engine/sharded_n{n}", r["us_per_batch"],
+            f"preds/s={r['predictions_per_s']:.0f} "
+            f"agg_speedup={r['speedup_vs_n1']:.2f}x "
+            f"shard_mb={r['per_shard_weight_bytes'] / 1e6:.2f}"))
+
     write_bench_json(
         BENCH_FILE,
         {"config": {"n_fields": CFG.n_fields,
@@ -280,7 +299,8 @@ def run(quick: bool = False):
                              "batch_size": batch_size,
                              **overlap},
          "quantized_serving": quant,
-         "gather_cliff": cliff})
+         "gather_cliff": cliff,
+         "sharded_scaling": sharded})
     return rows
 
 
@@ -510,8 +530,13 @@ def _gather_cliff_scenario(quick: bool) -> dict:
         warm, meas = make_batches(2), make_batches(n_batches)
         candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
         engines = {
+            # f32 arm pinned to in-trace gathers: since the host pre-gather
+            # extended to f32 engines, the auto policy would route *both*
+            # arms around the cliff above it — this arm's job is to keep
+            # measuring the cliff the int8 arm dodges
             "f32": InferenceEngine(cfg, "ffm", backend="pallas",
-                                   params=params, prefix_stride=4),
+                                   params=params, prefix_stride=4,
+                                   host_gather=False),
             "int8": InferenceEngine(cfg, "ffm", backend="pallas",
                                     params=params, prefix_stride=4,
                                     quantized=True),
@@ -559,6 +584,7 @@ def _gather_cliff_scenario(quick: bool) -> dict:
         del engines, outs
     return {
         "cliff_rows": rg_ops.CLIFF_ROWS,
+        "cliff_rows_effective": rg_ops.cliff_rows(),  # per-process calibration
         "traffic": {"n_ctx": n_ctx, "n_cand": n_cand,
                     "batch_size": batch_size, "n_batches": n_batches,
                     "passes": passes},
@@ -573,6 +599,136 @@ def _gather_cliff_scenario(quick: bool) -> dict:
             "ffm_head_dev_within_tolerance": all(
                 r["max_abs_dev_vs_f32"] <= r["ffm_head_tolerance"]
                 for r in out_sizes.values()),
+        },
+    }
+
+
+def _sharded_scaling_scenario(quick: bool) -> dict:
+    """Scatter-gather router throughput at fleet sizes N = 1, 2, 4.
+
+    The same gather-heavy traffic shape as the cliff scenario (hot contexts,
+    fresh candidate slates) through a quantized :class:`ShardRouter` at each
+    shard count, plus the single-engine baseline, with interleaved
+    measurement passes. Records per-shard resident bytes (must be ~1/N of
+    the single engine's tables — the head replicates), bit-invariance of the
+    scores across shard counts (the router's fixed-order partial-sum
+    reduction contract), and the aggregate-speedup flag. **Core-aware**: the
+    per-shard partial jits run on a thread pool, so near-linear aggregate
+    scaling (N=2 >= ~1.6x N=1) is only expected — and only asserted — when
+    the box has cores to run shards on (``os.cpu_count()`` is recorded; on a
+    single-core runner the flag reports ``None`` and the honest expectation
+    is parity-with-overhead, not speedup).
+    """
+    import os
+
+    from repro.serving.shard_router import ShardRouter
+
+    v = 2**16
+    cfg = FFMConfig(n_fields=CFG.n_fields, context_fields=CFG.context_fields,
+                    hash_space=v, k=CFG.k, mlp_hidden=CFG.mlp_hidden)
+    rng = np.random.default_rng(29)
+    params = jax.tree_util.tree_map(
+        np.asarray, deepffm.init_params(cfg, jax.random.PRNGKey(23)))
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+    n_ctx, n_cand, batch_size = 4, 64, 8
+    n_batches = 2 if quick else 4
+    passes = 2 if quick else 4
+    shard_counts = (1, 2) if quick else (1, 2, 4)
+    ctxs = [(rng.integers(0, v, fc).astype(np.int32),
+             rng.normal(1, 0.25, fc).astype(np.float32))
+            for _ in range(n_ctx)]
+
+    def make_batches(n):
+        out = []
+        for _ in range(n):
+            reqs = []
+            for slot in range(batch_size):
+                ci, cv = ctxs[slot % n_ctx]  # fixed composition: stable shapes
+                ki = rng.integers(0, v, (n_cand, fcand)).astype(np.int32)
+                kv = rng.normal(1, 0.25, (n_cand, fcand)).astype(np.float32)
+                reqs.append((ci, cv, ki, kv))
+            out.append(reqs)
+        return out
+
+    warm, meas = make_batches(2), make_batches(n_batches)
+    candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
+    single = InferenceEngine(cfg, params=params, quantized=True,
+                             prefix_stride=4)
+    routers = {n: ShardRouter(cfg, n_shards=n, params=params, quantized=True,
+                              prefix_stride=4)
+               for n in shard_counts}
+    arms = {"single_engine": single,
+            **{f"n{n}": r for n, r in routers.items()}}
+    outs = {}
+    for name, eng in arms.items():
+        for reqs in warm:  # compile every shape + fill the prefix cache
+            eng.score_batch(reqs)
+        outs[name] = np.concatenate(
+            [np.concatenate(eng.score_batch(reqs)) for reqs in meas])
+    times = {name: [] for name in arms}
+    for _ in range(passes):  # interleaved: noise hits every arm equally
+        for name, eng in arms.items():
+            t0 = time.perf_counter()
+            for reqs in meas:
+                eng.score_batch(reqs)
+            times[name].append(time.perf_counter() - t0)
+
+    # the reduction contract: identical bits at every shard count
+    bits_invariant = all(np.array_equal(outs[f"n{n}"], outs[f"n{1}"])
+                         for n in shard_counts)
+    dev_vs_single = float(np.max(np.abs(outs["n1"] - outs["single_engine"])))
+
+    counts = {}
+    n1_pps = candidates / float(np.median(times["n1"]))
+    single_bytes = single.resident_weight_bytes
+    for n in shard_counts:
+        med = float(np.median(times[f"n{n}"]))
+        shard_bytes = routers[n].shard_resident_bytes()
+        counts[str(n)] = {
+            "seconds_median_pass": med,
+            "us_per_batch": med / n_batches * 1e6,
+            "predictions_per_s": candidates / med,
+            "speedup_vs_n1": (candidates / med) / max(n1_pps, 1e-12),
+            "per_shard_weight_bytes": int(max(shard_bytes)),
+            "shard_weight_bytes": [int(b) for b in shard_bytes],
+            "fleet_weight_bytes": routers[n].resident_weight_bytes,
+        }
+
+    # per-shard bytes ~ 1/N: the sharded tables split exactly; the small
+    # replicated head (MLP + MergeNorm + LR bias) rides along per shard
+    head_bytes = single_bytes - Q.quantized_nbytes(
+        {"ffm": {"emb": routers[max(shard_counts)].materialized_params()
+                 ["ffm"]["emb"]}})
+    per_shard_ok = all(
+        counts[str(n)]["per_shard_weight_bytes"]
+        <= (single_bytes - head_bytes) / n + head_bytes + 4096
+        for n in shard_counts)
+
+    cores = os.cpu_count() or 1
+    multi_core = cores >= 2
+    n2 = counts.get("2")
+    near_linear = (bool(n2 and n2["speedup_vs_n1"] >= 1.6)
+                   if multi_core else None)
+    med_single = float(np.median(times["single_engine"]))
+    return {
+        "traffic": {"hash_space": v, "n_ctx": n_ctx, "n_cand": n_cand,
+                    "batch_size": batch_size, "n_batches": n_batches,
+                    "passes": passes},
+        "cpu_count": cores,
+        "single_engine": {
+            "seconds_median_pass": med_single,
+            "us_per_batch": med_single / n_batches * 1e6,
+            "predictions_per_s": candidates / med_single,
+            "resident_weight_bytes": single_bytes,
+        },
+        "shard_counts": counts,
+        "router_vs_single_engine_dev": dev_vs_single,
+        "acceptance": {
+            "bits_invariant_across_shard_counts": bits_invariant,
+            "per_shard_bytes_about_1_over_n": per_shard_ok,
+            # None on a single-core box: there is nothing to parallelize
+            # over, so near-linear aggregate scaling is unobservable there
+            "near_linear_n2_on_multicore": near_linear,
         },
     }
 

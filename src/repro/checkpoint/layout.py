@@ -70,6 +70,20 @@ def to_bytes(tree) -> Tuple[bytes, List[Dict[str, Any]]]:
     return b"".join(chunks), manifest
 
 
+def manifest_of(tree) -> List[Dict[str, Any]]:
+    """The manifest :func:`to_bytes` would produce, without materializing the
+    byte buffer — layout is a function of shapes/dtypes only, so senders can
+    publish their wire layout before any weights are serialized."""
+    manifest, off = [], 0
+    for path, arr in flatten_with_paths(tree):
+        manifest.append(
+            {"path": path, "dtype": str(arr.dtype), "shape": list(arr.shape), "offset": off,
+             "nbytes": arr.nbytes}
+        )
+        off += arr.nbytes
+    return manifest
+
+
 def from_bytes(buf: bytes, manifest: List[Dict[str, Any]], like=None):
     """Rebuild {path: array}; if ``like`` pytree given, restructure into it."""
     flat: Dict[str, np.ndarray] = {}

@@ -163,20 +163,25 @@ class Sender:
     manifest: Any = None
     _leaf_info: Optional[List[Tuple[str, int, int, int, int, tuple]]] = None
 
-    def _serialize(self, params) -> Tuple[bytes, bytes]:
-        """-> (fixed-length diffable buffer, variable-length sidecar)."""
-        flat = layout.flatten_with_paths(params)
-        self.manifest = layout.to_bytes(params)[1]
-        # per-leaf layout for row-delta framing: element offset into the
-        # concatenated weight space and byte offset into the raw buffer
+    def _set_layout(self, manifest) -> None:
+        """Install a wire layout: the manifest plus the per-leaf info used by
+        row-delta framing (element offset into the concatenated weight space
+        and byte offset into the raw buffer). A pure function of
+        shapes/dtypes — no weight bytes involved."""
+        self.manifest = manifest
         info, elem_off = [], 0
-        for ent in self.manifest:
+        for ent in manifest:
             n = int(np.prod(ent["shape"]) or 1)
             itemsize = int(np.dtype(layout._np_dtype(ent["dtype"])).itemsize)
             info.append((ent["path"], elem_off, ent["offset"], itemsize, n,
                          tuple(ent["shape"])))
             elem_off += n
         self._leaf_info = info
+
+    def _serialize(self, params) -> Tuple[bytes, bytes]:
+        """-> (fixed-length diffable buffer, variable-length sidecar)."""
+        flat = layout.flatten_with_paths(params)
+        self._set_layout(layout.manifest_of(params))
         if "quant" in self.mode:
             import jax.numpy as jnp
 
@@ -249,6 +254,17 @@ class Sender:
                 f"non-monotonic update version {version} (last shipped "
                 f"{self.version}); round stamps must strictly increase")
         cur, sidecar = self._serialize(params)
+        return self._frame_from(cur, sidecar, touched, version)
+
+    def _frame_from(self, cur: bytes, sidecar: bytes,
+                    touched: Optional[Dict[str, Any]] = None,
+                    version: Optional[int] = None) -> bytes:
+        """Frame an already-serialized ``(fixed buffer, sidecar)`` pair:
+        delta/patch/full selection, grid-stability check, hysteresis state,
+        version stamping. Split from :meth:`make_update` so a sharded sender
+        can serialize the weight space *once* and frame per-shard slices of
+        it through per-shard instances (each carrying its shard's ``_last``
+        buffer and leaf layout)."""
         comparable = self._last is not None and len(self._last) == len(cur)
         # a quant-grid regrid changes codes of untouched rows too: the delta
         # precondition is a byte-identical header (grid hysteresis makes this
@@ -279,6 +295,217 @@ class Sender:
         self.version = self.version + 1 if version is None else version
         framed_side = struct.pack("<Q", len(sidecar)) + sidecar
         return _frame(kind, self.mode, framed_side + body, version=self.version)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fan-out sender
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardedSender:
+    """Trainer-side fan-out for a hash-space-sharded serving fleet.
+
+    One :meth:`make_updates` call serializes (and wire-quantizes) the weight
+    space **once** — the shared 16-bit grid and its hysteresis live at the
+    global level, exactly like a single :class:`Sender` — then slices the
+    fixed buffer into per-shard local buffers and frames each through a
+    per-shard inner ``Sender`` (local ``_last`` history, local leaf layout).
+    Consequences the fleet tests assert:
+
+    * **Byte exactness** — shard ``s``'s frame decodes to exactly the rows
+      ``[lo_s, hi_s)`` of what a full-space frame decodes to, because every
+      local code byte *is* the corresponding global code byte (one global
+      quantization; slicing happens after). Per-shard independent grids
+      would break this: each shard would snap the same weight to a
+      different bucket.
+    * **Delta filtering by row-range intersection** — the trainer's
+      ``touched`` row sets intersect each shard's range (row-sharded
+      leaves) before framing, so a shard's delta frame carries only *its*
+      touched rows' XOR bytes; a shard whose range saw no updates still
+      gets a (near-empty) delta frame, keeping every shard's version chain
+      in lockstep.
+    * **Grid coherence** — each local header derives from the global header,
+      so either every shard sees a stable grid (all emit deltas) or none
+      does (all fall back to full frames); shards can never disagree on
+      frame kind within a round.
+
+    ``ranges`` are the fleet topology's contiguous row ranges
+    (:func:`repro.launch.topology.shard_ranges`); ``row_paths`` the
+    row-sharded manifest paths (``layout.path_str`` keys). Dense leaves
+    (model head, LR bias) replicate into every shard's frame.
+    """
+
+    ranges: Any = None
+    row_paths: Tuple[str, ...] = ()
+    mode: str = "patch+quant"
+    alpha: int = 2
+    beta: int = 2
+    version: int = 0
+    delta_verify: bool = False
+    _global: Optional[Sender] = None
+    _shard_senders: Optional[List[Sender]] = None
+
+    def __post_init__(self):
+        if not self.ranges:
+            raise ValueError("ShardedSender needs the fleet's shard ranges")
+        self.ranges = [(int(lo), int(hi)) for lo, hi in self.ranges]
+        self.row_paths = tuple(self.row_paths)
+        # the global sender carries the one wire-quantization grid (and its
+        # hysteresis); it never frames, so it keeps no _last buffer
+        self._global = Sender(mode=self.mode, alpha=self.alpha, beta=self.beta)
+        self._shard_senders = [
+            Sender(mode=self.mode, delta_verify=self.delta_verify)
+            for _ in self.ranges]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.ranges)
+
+    @property
+    def manifests(self) -> List[List[Dict[str, Any]]]:
+        """Per-shard local manifests (local shapes/offsets) — what each
+        shard's receiver decodes against. Available after :meth:`prime` or
+        the first :meth:`make_updates`."""
+        return [s.manifest for s in self._shard_senders]
+
+    def prime(self, like_params) -> None:
+        """Publish the wire layout before any round is serialized: compute
+        the global manifest/leaf layout from ``like_params``'s shapes+dtypes
+        alone and derive every shard's local manifest, so :attr:`manifests`
+        can configure the fleet's decode pipes up front — the natural
+        construct → ``configure_fanout`` → first-round order. Without this,
+        a pipe configured against a ``None`` manifest rejects every frame
+        *asynchronously* (logged and dropped on the ingest thread), which
+        surfaces only as a fleet that never advances generations. Safe to
+        call repeatedly; the first real serialize recomputes the same
+        layout."""
+        self._global._set_layout(layout.manifest_of(like_params))
+        unknown = [p for p in self.row_paths
+                   if p not in {e["path"] for e in self._global.manifest}]
+        if unknown:
+            raise ValueError(f"row-sharded paths not in layout: {unknown}")
+        for sender, (lo, hi) in zip(self._shard_senders, self.ranges):
+            sender.manifest, sender._leaf_info = self._local_layout(lo, hi)
+
+    def _local_layout(self, lo: int, hi: int):
+        """Slice the global manifest/leaf layout down to one shard: row-path
+        leaves keep rows [lo, hi); offsets (byte and element) recompute
+        sequentially over the same sorted-path order."""
+        manifest, info = [], []
+        byte_off = elem_off = 0
+        for path, g_elem_off, g_byte_off, itemsize, n, shape in \
+                self._global._leaf_info:
+            if path in self.row_paths:
+                row_elems = n // max(shape[0], 1)
+                l_shape = (hi - lo,) + tuple(shape[1:])
+                l_n = (hi - lo) * row_elems
+                g_start = g_elem_off + lo * row_elems
+            else:
+                l_shape, l_n, g_start = tuple(shape), n, g_elem_off
+            ent = next(e for e in self._global.manifest if e["path"] == path)
+            manifest.append({"path": path, "dtype": ent["dtype"],
+                             "shape": list(l_shape), "offset": byte_off,
+                             "nbytes": l_n * itemsize})
+            info.append((path, elem_off, byte_off, itemsize, l_n, l_shape))
+            byte_off += l_n * itemsize
+            elem_off += l_n
+        return manifest, info
+
+    def _slice_fixed(self, cur: bytes, lo: int, hi: int,
+                     local_n: int) -> bytes:
+        """Shard-local fixed buffer: the global buffer's bytes for the
+        shard's leaf spans, behind a local header (quant mode) or raw
+        byte-offset slices."""
+        quant = "quant" in self.mode
+        chunks = []
+        if quant:
+            w_min, bucket, _, _ = struct.unpack_from(Q.HEADER_FMT, cur, 0)
+            chunks.append(struct.pack(Q.HEADER_FMT, w_min, bucket, local_n, 0))
+        for path, elem_off, byte_off, itemsize, n, shape in \
+                self._global._leaf_info:
+            if path in self.row_paths:
+                row_elems = n // max(shape[0], 1)
+                e0, e1 = elem_off + lo * row_elems, elem_off + hi * row_elems
+            else:
+                e0, e1 = elem_off, elem_off + n
+            if quant:
+                chunks.append(cur[Q.HEADER_SIZE + 2 * e0:
+                                  Q.HEADER_SIZE + 2 * e1])
+            else:
+                b0 = byte_off + (e0 - elem_off) * itemsize
+                chunks.append(cur[b0: b0 + (e1 - e0) * itemsize])
+        return b"".join(chunks)
+
+    def _slice_sidecar(self, sidecar: bytes, lo: int, hi: int) -> bytes:
+        """Shard-local outlier sidecar: keep outliers landing in the shard's
+        element spans, remapped to local concatenated-element indices."""
+        if not sidecar:
+            return b""
+        (n_out,) = struct.unpack_from("<Q", sidecar, 0)
+        idx = np.frombuffer(sidecar, "<u8", count=n_out, offset=8)
+        vals = np.frombuffer(sidecar, "<f4", count=n_out,
+                             offset=8 + 8 * n_out)
+        keep_idx, keep_vals = [], []
+        l_elem_off = 0
+        for path, elem_off, _, _, n, shape in self._global._leaf_info:
+            if path in self.row_paths:
+                row_elems = n // max(shape[0], 1)
+                g0, g1 = elem_off + lo * row_elems, elem_off + hi * row_elems
+            else:
+                g0, g1 = elem_off, elem_off + n
+            m = (idx >= g0) & (idx < g1)
+            if m.any():
+                keep_idx.append(idx[m] - g0 + l_elem_off)
+                keep_vals.append(vals[m])
+            l_elem_off += g1 - g0
+        if not keep_idx:
+            return b""
+        ki = np.concatenate(keep_idx).astype("<u8")
+        kv = np.concatenate(keep_vals).astype("<f4")
+        return struct.pack("<Q", ki.size) + ki.tobytes() + kv.tobytes()
+
+    def _local_touched(self, touched: Optional[Dict[str, Any]], lo: int,
+                       hi: int) -> Optional[Dict[str, Any]]:
+        """Intersect the trainer's touched row sets with [lo, hi) and rebase
+        to local rows. An empty intersection stays in the dict as an empty
+        set — "this leaf ships zero rows", not "this leaf is dense"."""
+        if touched is None:
+            return None
+        out = {}
+        for path, rows in touched.items():
+            if path in self.row_paths:
+                rows = np.asarray(rows, np.int64)
+                rows = rows[(rows >= lo) & (rows < hi)] - lo
+            out[path] = rows
+        return out
+
+    def make_updates(self, params, version: Optional[int] = None,
+                     touched: Optional[Dict[str, Any]] = None) -> List[bytes]:
+        """Emit one versioned update blob *per shard* (fixed shard order).
+
+        Semantics per shard match :meth:`Sender.make_update` over that
+        shard's slice of the weight space; ``touched`` row indices are
+        full-space and filtered here."""
+        if version is not None and version <= self.version:
+            raise ValueError(
+                f"non-monotonic update version {version} (last shipped "
+                f"{self.version}); round stamps must strictly increase")
+        cur, sidecar = self._global._serialize(params)
+        unknown = [p for p in self.row_paths
+                   if p not in {e["path"] for e in self._global.manifest}]
+        if unknown:
+            raise ValueError(f"row-sharded paths not in layout: {unknown}")
+        frames = []
+        for sender, (lo, hi) in zip(self._shard_senders, self.ranges):
+            manifest, info = self._local_layout(lo, hi)
+            sender.manifest, sender._leaf_info = manifest, info
+            local_n = sum(n for *_, n, _ in info)
+            frames.append(sender._frame_from(
+                self._slice_fixed(cur, lo, hi, local_n),
+                self._slice_sidecar(sidecar, lo, hi),
+                self._local_touched(touched, lo, hi), version))
+        self.version = self.version + 1 if version is None else version
+        return frames
 
 
 @dataclass

@@ -69,7 +69,11 @@ def gather_lr(lr_w, idx) -> jnp.ndarray:
 
 
 def gather_lr_np(lr_w, idx: np.ndarray) -> np.ndarray:
-    """Host-numpy :func:`gather_lr` (serving context-tail / pre-gather path)."""
+    """Host-numpy :func:`gather_lr` (serving context-tail / pre-gather path).
+    Like :func:`gather_rows_np`, an object exposing ``gather_np`` handles
+    its own lookups (sharded-view LR tables)."""
+    if hasattr(lr_w, "gather_np"):
+        return lr_w.gather_np(idx)
     if isinstance(lr_w, dict):
         idx = np.asarray(idx)
         c = np.asarray(lr_w["codes"])[idx].astype(np.float32)
@@ -210,7 +214,11 @@ def gather_rows_np(emb, idx: np.ndarray) -> np.ndarray:
     Used by the serving engine's context-tail path, which runs on host: the
     gathered block is tiny (tail fields x F x k), so numpy beats a jit
     dispatch + device round-trip by a wide margin. Quantized tables go
-    through the packed host gather (``row_gather.ops.gather_dequant_np``)."""
+    through the packed host gather (``row_gather.ops.gather_dequant_np``).
+    A table object exposing ``gather_np`` handles its own rows — the hook
+    the sharded serving tier's assembled-view tables plug into."""
+    if hasattr(emb, "gather_np"):
+        return emb.gather_np(idx)
     if isinstance(emb, dict):
         from repro.kernels.row_gather import ops as rg_ops
 

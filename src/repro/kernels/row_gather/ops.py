@@ -29,7 +29,10 @@ strategy survives every regime:
 """
 from __future__ import annotations
 
+import os
+import time
 from functools import partial
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +42,68 @@ from repro.kernels.row_gather.row_gather import gather_dequant_rows_q8
 
 # Above this many table rows XLA-CPU's generic gather leaves its fast path
 # (ROADMAP "Quantized-path follow-ons"; see module docstring for numbers).
+# This constant is the *fallback* threshold: the deployment box's real
+# crossover is measured once per process by :func:`calibrate_cliff_rows`
+# (export ``REPRO_CLIFF_CALIBRATE=0`` to disable probing and pin the
+# constant), because the cliff location moved by a factor of 4 between the
+# two CPU generations the sweep has already run on.
 CLIFF_ROWS = 1 << 17
+
+# calibration probe bounds: never move the cliff below 2^16 (tiny tables
+# stay on the zero-copy in-trace path regardless of micro-timing noise) or
+# above 2^20 (past that every measured box is deep into the slow path)
+_PROBE_SIZES = (1 << 16, 1 << 17, 1 << 18, 1 << 19)
+_PROBE_MAX = 1 << 20
+_calibrated: Optional[int] = None
+
+
+def calibrate_cliff_rows(sizes: Sequence[int] = _PROBE_SIZES,
+                         row_bytes: int = 192, n_idx: int = 4096,
+                         repeats: int = 3) -> int:
+    """Measure this box's actual gather cliff: the smallest probed table size
+    at which the host packed gather (:func:`gather_codes_np`) beats XLA's
+    ``jnp.take`` on an int8 row table of serving-realistic width
+    (``row_bytes`` defaults to a 24-field x 8-wide int8 row). A few ms per
+    size after the one-time ``take`` compiles; the serving engine caches the
+    result per process via :func:`cliff_rows`. Returns ``_PROBE_MAX`` when
+    the in-trace gather wins everywhere probed (host pre-gather then only
+    activates on tables past every measured point)."""
+    idx = np.random.default_rng(0).integers(0, min(sizes), size=n_idx)
+    idx_dev = jnp.asarray(idx)
+    for n_rows in sorted(sizes):
+        table = np.zeros((n_rows, row_bytes), np.int8)
+        table_dev = jnp.asarray(table)
+        # eager jnp.take (what the in-trace gather lowers to on CPU): first
+        # call compiles, timed calls measure steady state
+        jax.block_until_ready(jnp.take(table_dev, idx_dev, axis=0))
+        t_jit = min(_timed(lambda: jax.block_until_ready(
+            jnp.take(table_dev, idx_dev, axis=0))) for _ in range(repeats))
+        t_host = min(_timed(lambda: gather_codes_np(table, idx))
+                     for _ in range(repeats))
+        if t_host < t_jit:
+            return int(n_rows)
+    return _PROBE_MAX
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def cliff_rows() -> int:
+    """The effective gather-cliff threshold: the per-process calibrated
+    crossover, or the :data:`CLIFF_ROWS` constant when probing is disabled
+    (``REPRO_CLIFF_CALIBRATE=0``) or the probe fails."""
+    if os.environ.get("REPRO_CLIFF_CALIBRATE", "1").lower() in ("0", "false"):
+        return CLIFF_ROWS
+    global _calibrated
+    if _calibrated is None:
+        try:
+            _calibrated = calibrate_cliff_rows()
+        except Exception:  # never let a probe failure break engine startup
+            _calibrated = CLIFF_ROWS
+    return _calibrated
 
 
 def use_host_gather(n_rows: int) -> bool:
@@ -47,8 +111,8 @@ def use_host_gather(n_rows: int) -> bool:
     (numpy) instead of gathering inside the jitted forward: CPU backend (the
     Pallas kernel's scalar-prefetch DMA path needs real accelerator hardware;
     in interpret mode it degenerates to a scan of dynamic slices) and a table
-    past the gather cliff."""
-    return n_rows >= CLIFF_ROWS and jax.default_backend() == "cpu"
+    past the gather cliff (calibrated per process — :func:`cliff_rows`)."""
+    return n_rows >= cliff_rows() and jax.default_backend() == "cpu"
 
 
 def _packed_view(flat: np.ndarray):
@@ -100,7 +164,7 @@ def gather_dequant_rows(qtable, idx):
     """
     codes = qtable["codes"]
     n_rows = codes.shape[0]
-    if n_rows >= CLIFF_ROWS:
+    if n_rows >= cliff_rows():
         if (_is_concrete(codes) and _is_concrete(idx)
                 and jax.default_backend() == "cpu"):
             return jnp.asarray(gather_dequant_np(qtable, np.asarray(idx)))

@@ -1,0 +1,163 @@
+"""Hash-space shard topology for the sharded serving tier (paper §2/§6).
+
+The paper's 300M predictions/s is a *fleet* number: many CPU workers, each
+resident over a slice of the model, behind a scatter-gather front-end
+(Juan et al. 2017 describe the same deployment shape for online FFMs). This
+module is the topology half of that tier: given a model config and a shard
+count it decides **which parameter rows live on which shard**, and slices a
+params pytree accordingly. The scoring half lives in
+:mod:`repro.serving.shard_router`.
+
+Row ownership follows the same declarative idiom as
+:mod:`repro.launch.sharding`: every parameter carries logical axis names from
+its :class:`~repro.common.pspec.ParamSpec`, and a rule table maps logical
+axes to a placement decision — here simply *row-sharded* (leading ``vocab``
+axis: the hashed feature tables) vs *replicated* (everything else: LR bias,
+MergeNorm, MLP head — tiny next to the tables). The hash space splits into
+**contiguous ranges** rather than ``hash % N``: a contiguous range keeps a
+shard's rows a memcpy-able slice of every full-space artifact — the f32
+table, the int8 row-quantized table, *and the serialized transfer buffer* —
+which is what makes per-shard delta-frame filtering
+(:class:`repro.checkpoint.transfer.ShardedSender`) a byte-range intersection
+instead of a re-serialization.
+
+Shard boundaries are aligned to :data:`repro.core.quantization.LR_BLOCK` so
+the blocked-int8 LR grids of a shard are exactly the corresponding slice of
+the full-space grids (per-block grids are independent; a block never spans a
+boundary). Combined with per-row embedding grids (independent by
+construction) this gives the exactness invariant the fleet tests assert:
+``quantize(shard_slice(w)) == shard_slice(quantize(w))`` byte-for-byte.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import layout
+from repro.common import pspec
+from repro.core import deepffm, quantization as Q
+
+
+# Logical-axis rule table (launch.sharding idiom): which leading axes make a
+# parameter row-sharded across the hash-space shards. Everything else
+# replicates — the serving analogue of sharding.logical_rules mapping every
+# non-vocab axis to None.
+ROW_SHARD_AXES = ("vocab",)
+
+
+def row_sharded_paths(cfg, model: str = "deepffm") -> Tuple[str, ...]:
+    """Manifest paths (``layout.path_str`` keys) of the row-sharded leaves.
+
+    Derived from the model's declarative ParamSpecs, not hard-coded names:
+    a leaf is row-sharded iff its leading logical axis is in
+    :data:`ROW_SHARD_AXES` (for DeepFFM: ``ffm/emb`` with axes
+    ``("vocab", "null", "null")`` and ``lr/w`` with ``("vocab",)``).
+    """
+    specs = deepffm.param_specs(cfg, model)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=pspec.is_spec)[0]
+    return tuple(sorted(
+        layout.path_str(path) for path, spec in leaves
+        if spec.shape and spec.axes[0] in ROW_SHARD_AXES))
+
+
+def shard_ranges(n_rows: int, n_shards: int,
+                 align: int = Q.LR_BLOCK) -> List[Tuple[int, int]]:
+    """Split ``[0, n_rows)`` into ``n_shards`` contiguous ranges with
+    boundaries aligned to ``align`` (the blocked-LR grid size — see module
+    docstring for why alignment buys byte-exact per-shard quantization).
+    Ranges are as equal as alignment allows; earlier shards get the
+    remainder. Every row is owned by exactly one shard."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    units = -(-n_rows // align)          # alignment units to distribute
+    if n_shards > units:
+        raise ValueError(
+            f"{n_shards} shards over {n_rows} rows need boundaries finer "
+            f"than the {align}-row alignment (only {units} units)")
+    per, extra = divmod(units, n_shards)
+    ranges, lo = [], 0
+    for s in range(n_shards):
+        hi = lo + (per + (1 if s < extra else 0)) * align
+        ranges.append((lo, min(hi, n_rows)))
+        lo = hi
+    ranges[-1] = (ranges[-1][0], n_rows)
+    return ranges
+
+
+def owner_of(ranges: Sequence[Tuple[int, int]], idx) -> np.ndarray:
+    """Owning shard per hashed row index (vectorized; contiguous ranges make
+    this one ``searchsorted`` against the upper boundaries)."""
+    bounds = np.asarray([hi for _, hi in ranges[:-1]], np.int64)
+    return np.searchsorted(bounds, np.asarray(idx), side="right")
+
+
+def _slice_rows(leaf, lo: int, hi: int):
+    """Row slice of one row-sharded leaf: f32 array, int8 row-quantized dict,
+    or blocked-int8 dict (boundaries must be block-aligned for the latter —
+    :func:`shard_ranges` guarantees it)."""
+    if Q.is_block_quantized(leaf):
+        block = int(leaf["block"])
+        if lo % block:
+            raise ValueError(
+                f"shard boundary {lo} not aligned to LR block {block}")
+        return {"codes": leaf["codes"][lo:hi],
+                "scale": leaf["scale"][lo // block: -(-hi // block)],
+                "zero": leaf["zero"][lo // block: -(-hi // block)],
+                "block": block}
+    if Q.is_row_quantized(leaf):
+        return {"codes": leaf["codes"][lo:hi], "scale": leaf["scale"][lo:hi],
+                "zero": leaf["zero"][lo:hi]}
+    return np.asarray(leaf)[lo:hi]
+
+
+@dataclass(frozen=True)
+class ShardTopology:
+    """One fleet's row-ownership map: contiguous hash-space ranges plus the
+    rule-derived set of row-sharded leaf paths. Frozen — a topology is part
+    of the fleet's wire contract (trainer-side frame filtering and
+    server-side routing must agree on it)."""
+
+    cfg: Any
+    model: str
+    ranges: Tuple[Tuple[int, int], ...]
+    row_paths: Tuple[str, ...]
+
+    @classmethod
+    def build(cls, cfg, model: str = "deepffm", n_shards: int = 1,
+              align: int = Q.LR_BLOCK) -> "ShardTopology":
+        return cls(cfg, model,
+                   tuple(shard_ranges(cfg.hash_space, n_shards, align)),
+                   row_sharded_paths(cfg, model))
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.ranges)
+
+    def owner_of(self, idx) -> np.ndarray:
+        return owner_of(self.ranges, idx)
+
+    def shard_cfg(self, shard: int):
+        """The shard-local config: same model family, hash space shrunk to
+        the owned range (every per-shard table is indexed by local rows)."""
+        lo, hi = self.ranges[shard]
+        return self.cfg.replace(hash_space=hi - lo)
+
+    def shard_params(self, params, shard: int):
+        """Slice a full-space params pytree down to one shard: row-sharded
+        leaves keep ``[lo, hi)`` rows (f32 or quantized — see
+        :func:`_slice_rows`), replicated leaves are shared by reference."""
+        lo, hi = self.ranges[shard]
+
+        def walk(node, prefix):
+            if isinstance(node, dict) and not (
+                    Q.is_row_quantized(node) or Q.is_block_quantized(node)):
+                return {k: walk(v, prefix + (k,)) for k, v in node.items()}
+            if "/".join(prefix) in self.row_paths:
+                return _slice_rows(node, lo, hi)
+            return node
+
+        return walk(params, ())

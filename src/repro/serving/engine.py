@@ -362,6 +362,33 @@ def batched_candidates_forward_q8(cfg: FFMConfig, model: str, backend: str,
                               pairs_xc, pairs_aa, lr_cand)
 
 
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def batched_candidates_forward_rows(cfg: FFMConfig, model: str, backend: str,
+                                    head_params, cached, ec, cand_val,
+                                    lr_cand):
+    """Candidate completion over *pre-gathered f32* candidate rows.
+
+    The f32 twin of :func:`batched_candidates_forward_q8`: the PR 5 sweep
+    shows f32 ``jnp.take`` hits the same XLA-CPU generic-gather wall as the
+    int8 rows (0.9 -> 3.9 ms at 2^19), so f32 engines above the measured
+    cliff pre-gather on host too (packed numpy gather moves the same bytes
+    either way) and ship the already-gathered ``ec`` (R, N, Fcand, F, k)
+    block plus the summed ``lr_cand`` terms. ``head_params`` again carries
+    only the head leaves — the resident table never crosses the jit boundary.
+    """
+    emb_ctx, val_ctx = cached["emb"], cached["val"]
+    if backend == "pallas":
+        from repro.kernels.ffm_interaction import ops as ffm_ops
+
+        pairs_xc, pairs_aa = ffm_ops.candidate_interactions(
+            cfg, emb_ctx, val_ctx, ec, cand_val)
+    else:
+        pairs_xc, pairs_aa = _reference_candidate_pairs(
+            cfg, emb_ctx, val_ctx, ec, cand_val)
+    return _finish_candidates(cfg, model, head_params, cached,
+                              pairs_xc, pairs_aa, lr_cand)
+
+
 def candidates_forward(cfg: FFMConfig, model: str, params, cached,
                        cand_idx, cand_val):
     """Single-request compatibility wrapper (reference backend). ``cached`` is
@@ -401,12 +428,14 @@ class InferenceEngine:
       cache, overriding ``prefix_stride``; feed it from
       :meth:`suggest_checkpoint_depths` of a running engine to adapt the
       depth set to observed traffic.
-    * ``host_gather`` — pre-gather candidate codes/LR terms on host (packed
-      numpy gather) and score through
-      :func:`batched_candidates_forward_q8`, dodging the XLA-CPU gather
-      cliff past ~2^17 table rows. ``None`` (default) auto-selects by table
-      size and backend (``row_gather.ops.use_host_gather``); only active on
-      quantized engines.
+    * ``host_gather`` — pre-gather candidate rows/LR terms on host (packed
+      numpy gather) and score through :func:`batched_candidates_forward_q8`
+      (int8 tables) or :func:`batched_candidates_forward_rows` (f32 tables),
+      dodging the XLA-CPU gather cliff — both dtypes hit it; the threshold
+      is probed per process at engine startup
+      (``row_gather.ops.cliff_rows``, constant fallback via
+      ``REPRO_CLIFF_CALIBRATE=0``). ``None`` (default) auto-selects by
+      table size and backend (``row_gather.ops.use_host_gather``).
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -423,7 +452,7 @@ class InferenceEngine:
         self.cache_entries = cache_entries
         self.dedup = dedup
         self.quantized = quantized
-        self.host_gather = quantized and (
+        self.host_gather = (
             rg_ops.use_host_gather(cfg.hash_space)
             if host_gather is None else bool(host_gather))
         self.weights_version = 0     # trainer's stamp from the update frame
@@ -626,12 +655,16 @@ class InferenceEngine:
         for entry in self._host_tables:
             if entry[0] is params:
                 return entry[1], entry[2]
-        f = params["ffm"]["emb"]
-        emb = ({k: np.asarray(v) for k, v in f.items()}
-               if isinstance(f, dict) else np.asarray(f))
-        w = params["lr"]["w"]
-        lr = ({k: np.asarray(v) for k, v in w.items()}
-              if isinstance(w, dict) else np.asarray(w))
+
+        def host_view(t):
+            if hasattr(t, "gather_np"):  # sharded-view table: already host
+                return t
+            if isinstance(t, dict):
+                return {k: np.asarray(v) for k, v in t.items()}
+            return np.asarray(t)
+
+        emb = host_view(params["ffm"]["emb"])
+        lr = host_view(params["lr"]["w"])
         self._host_tables = ((params, emb, lr),) + self._host_tables[:1]
         return emb, lr
 
@@ -882,21 +915,34 @@ class InferenceEngine:
         here on host (packed numpy gather, immune to the XLA gather cliff).
         """
         emb = params["ffm"]["emb"]
-        if self.host_gather and Q.is_row_quantized(emb):
+        if self.host_gather:
             from repro.kernels.row_gather import ops as rg_ops
 
             emb_h, lr_h = self._host_weights(params)
-            qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
-            s = emb_h["scale"][ki_b]
-            z = emb_h["zero"][ki_b]
-            lr_cand = (ffm.gather_lr_np(lr_h, ki_b) * kv_b).sum(-1)
-            return batched_candidates_forward_q8(
-                self.cfg, self.model, self.backend, self._head_params(params),
-                stacked, qc, s, z, kv_b, lr_cand.astype(np.float32))
+            lr_cand = (ffm.gather_lr_np(lr_h, ki_b)
+                       * kv_b).sum(-1).astype(np.float32)
+            if Q.is_row_quantized(emb):
+                qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
+                s = emb_h["scale"][ki_b]
+                z = emb_h["zero"][ki_b]
+                return batched_candidates_forward_q8(
+                    self.cfg, self.model, self.backend,
+                    self._head_params(params), stacked, qc, s, z, kv_b,
+                    lr_cand)
+            if not isinstance(emb, dict):
+                # f32 table above the cliff: same packed pre-gather, whole
+                # rows instead of codes (the gather moves identical bytes;
+                # only the in-jit dequant disappears)
+                ec = rg_ops.gather_codes_np(emb_h, ki_b)
+                return batched_candidates_forward_rows(
+                    self.cfg, self.model, self.backend,
+                    self._head_params(params), stacked,
+                    ec.astype(np.float32, copy=False), kv_b, lr_cand)
         return batched_candidates_forward(
             self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
 
     _warmed_requests: Optional[int] = None  # set by warmup(); clamps prewarm
+    _warmed_buckets: Optional[Tuple[int, int]] = None  # rotate() re-warms these
 
     def warmup(self, *, max_requests: int = 8, max_candidates: int = 64) -> int:
         """Pre-compile every jitted shape the engine can emit for microbatches
@@ -909,6 +955,7 @@ class InferenceEngine:
         ``warmup_buckets`` runs it when params are passed in)."""
         self._require_params()
         self._warmed_requests = max_requests
+        self._warmed_buckets = (max_requests, max_candidates)
         params, _ = self._weights
         cfg = self.cfg
         fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
@@ -932,6 +979,48 @@ class InferenceEngine:
                     np.zeros((rb, nb, fcand), np.float32))
                 calls += 1
         return calls
+
+    def rotate(self, *, max_depths: int = 4, min_share: float = 0.05,
+               warmup_buckets: Optional[Tuple[int, int]] = None
+               ) -> "InferenceEngine":
+        """Build a fully warmed successor engine adapted to observed traffic
+        — the auto-rotation primitive (ROADMAP carried item; the shard
+        rotation building block).
+
+        The prefix cache's checkpoint-depth set is fixed per engine (it
+        closes the compiled tail-shape set), so adapting it means a *new*
+        engine: the successor takes :meth:`suggest_checkpoint_depths` of this
+        engine's traffic histogram, shares the currently published params by
+        reference (already-quantized tables are adopted, not re-quantized),
+        carries the generation counter and trainer version stamp forward,
+        and pre-compiles the same warmup bucket set this engine ran
+        (``warmup_buckets`` overrides; nothing is warmed when neither is
+        known). All of that happens off the request path — this engine keeps
+        serving throughout. The caller then performs the atomic swap by
+        publishing the returned engine into its serving slot
+        (:meth:`repro.serving.shard_router.ShardRouter.rotate_shard` is
+        exactly that swap, including re-pointing the shard's update pipe so
+        the delta-frame chain continues unbroken).
+        """
+        self._require_params()
+        depths = self.suggest_checkpoint_depths(max_depths=max_depths,
+                                                min_share=min_share)
+        succ = InferenceEngine(
+            self.cfg, self.model, backend=self.backend,
+            cache_entries=self.cache_entries,
+            min_bucket=self.plan.min_bucket, dedup=self.dedup,
+            quantized=self.quantized, prefix_depths=depths,
+            host_gather=self.host_gather)
+        succ.weights_version = self.weights_version
+        # adopt the published pytree by reference (already-quantized tables
+        # must not re-walk the quantizer) and keep the generation counter
+        # monotonic across the swap: scorers comparing generations must
+        # never see it move backwards
+        succ._weights = (self.params, self.generation)
+        buckets = warmup_buckets or self._warmed_buckets
+        if buckets is not None:
+            succ.warmup(max_requests=buckets[0], max_candidates=buckets[1])
+        return succ
 
     def score_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val,
                        use_backend: bool = False) -> jnp.ndarray:

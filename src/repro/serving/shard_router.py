@@ -1,0 +1,611 @@
+"""Scatter-gather serving over hash-space-sharded engine shards (§2/§6).
+
+The paper's >300M predictions/s is an aggregate over a fleet of CPU workers,
+each resident over a slice of the model. :class:`ShardRouter` is that fleet's
+front-end: it owns N :class:`~repro.serving.engine.InferenceEngine` shards,
+each holding a **contiguous hash-space range** of the embedding rows and
+blocked-int8 LR rows (:class:`repro.launch.topology.ShardTopology` decides
+ownership from the ParamSpec rule table), splits every request's feature rows
+by owning shard, scores per-shard **partial candidate terms** on a thread
+pool, and reduces them into the final logit. Per-shard resident bytes are
+~1/N of the single-engine set; per-shard delta ingest arrives through a
+fan-out of per-shard :class:`~repro.serving.update_pipe.UpdatePipe` instances
+fed by :class:`repro.checkpoint.transfer.ShardedSender` frames.
+
+Partial-sum reduction contract
+------------------------------
+
+The FFM logit is additive over pair terms and LR terms, so sharding is exact
+— but *bit-stable* sharding needs care, because XLA-CPU float summation is
+only deterministic for an identical reduction structure. The router's
+contract, asserted by the fleet tests:
+
+* **Every pair term is computed in exactly one place, from fully assembled
+  inputs.** A pair (i, j) needs embedding rows from (up to) two shards, so
+  no shard can own a full pair sum. Instead each *candidate entry* — one
+  (request, candidate, candidate-field) cell — is owned by the shard holding
+  its hashed row. The owning shard's worker gathers the row from its local
+  table (packed host gather) and computes the entry's ctx-facing partial
+  terms with one fixed contraction (``mik,mik->mi`` over a compacted entry
+  list, padded to a power-of-two bucket — XLA-CPU keeps that contraction's
+  bits invariant to the padded length, measured, which is what makes the
+  result independent of how entries distribute over shards).
+* **Host scatter in fixed shard order into disjoint positions.** Each
+  entry's terms land at positions no other shard writes, so the scatter is
+  order-free by construction, and the fixed order makes that auditable.
+* **Cross-candidate (aa) pairs reduce at the router** from the scattered
+  per-entry dequantized row slices, with the same einsum form and shapes as
+  the single engine's fused q8 forward; context (cc) pairs and LR sums come
+  from the router-level prefix cache over *assembled* rows (the sharded
+  tables present a ``gather_np`` view that concatenates per-shard gathers),
+  which is bit-equal to the single engine's host context path because both
+  are elementwise-deterministic numpy.
+
+Net effect: router output is **bit-identical for every shard count N**
+(including N=1) at every generation, and matches the single-engine oracle to
+the quantization tolerance contract (the single engine itself is not
+bit-equal to ``deepffm.forward`` — its prefix tails run in numpy, its pair
+sums in XLA — so cross-N bit equality is the strongest stable invariant, and
+it is the one that matters operationally: resharding a fleet must not move
+any score).
+
+Per-shard generation vector
+---------------------------
+
+Each shard publishes ``(params, generation)`` atomically on its own update
+pipe; the router tracks the **fleet generation vector**
+(:meth:`ShardRouter.fleet_generations` — per-shard ``(generation,
+weights_version)``, ``None`` for a dead shard) and rebuilds its assembled
+view (bumping its own generation, which stamps the prefix cache) whenever
+the vector changes. A scoring batch snapshots one assembled view, so it sees
+each shard at one coherent generation; while delta frames are in flight the
+vector can be *torn* (shards at different trainer versions), which is safe
+by the same argument as a single engine's hot swap — every row is internally
+consistent, and the mix resolves at ``flush_updates``. Killing a shard
+(:meth:`kill_shard`) degrades gracefully: its rows read as zero
+contributions, ``degraded`` flips, and the request path never raises.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FFMConfig
+from repro.core import deepffm, ffm
+from repro.core import quantization as Q
+from repro.kernels.row_gather import ops as rg_ops
+from repro.launch.topology import ShardTopology
+from repro.serving.engine import InferenceEngine, _finish_candidates
+
+
+# ---------------------------------------------------------------------------
+# Assembled-view tables (the router's virtual params)
+# ---------------------------------------------------------------------------
+
+class ShardedRows:
+    """Row-gatherable view over per-shard embedding tables.
+
+    Quacks like a table for ``ffm.gather_rows_np`` (via ``gather_np``):
+    a gather splits its indices by owning shard, gathers locally (packed
+    host gather + per-row dequant for int8 parts — the exact numpy ops the
+    single engine's context path runs, so assembled rows are bit-equal to
+    full-table gathers), and scatters into one f32 block. Dead shards
+    (``parts[s] is None``) contribute zero rows.
+    """
+
+    dtype = np.float32
+
+    def __init__(self, parts: Sequence, ranges: Sequence[Tuple[int, int]],
+                 row_shape: Tuple[int, ...]):
+        self.parts = list(parts)
+        self.ranges = list(ranges)
+        self.row_shape = tuple(row_shape)
+        self._bounds = np.asarray([hi for _, hi in ranges[:-1]], np.int64)
+
+    def owner_of(self, idx: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self._bounds, idx, side="right")
+
+    def gather_np(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        flat = idx.reshape(-1)
+        out = np.zeros((flat.size,) + self.row_shape, np.float32)
+        owner = self.owner_of(flat)
+        for s, part in enumerate(self.parts):
+            m = np.flatnonzero(owner == s)
+            if part is None or m.size == 0:
+                continue
+            local = flat[m] - self.ranges[s][0]
+            if Q.is_row_quantized(part):
+                out[m] = rg_ops.gather_dequant_np(part, local)
+            else:
+                out[m] = np.asarray(part)[local]
+        return out.reshape(idx.shape + self.row_shape)
+
+
+class ShardedLR:
+    """``gather_np`` view over per-shard blocked-int8 (or f32) LR slices.
+    Shard boundaries are LR-block aligned (topology invariant), so each
+    local slice's block grids are exactly the full-space grids."""
+
+    dtype = np.float32
+
+    def __init__(self, parts: Sequence, ranges: Sequence[Tuple[int, int]]):
+        self.parts = list(parts)
+        self.ranges = list(ranges)
+        self._bounds = np.asarray([hi for _, hi in ranges[:-1]], np.int64)
+
+    def gather_np(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        flat = idx.reshape(-1)
+        out = np.zeros(flat.size, np.float32)
+        owner = np.searchsorted(self._bounds, flat, side="right")
+        for s, part in enumerate(self.parts):
+            m = np.flatnonzero(owner == s)
+            if part is None or m.size == 0:
+                continue
+            local = flat[m] - self.ranges[s][0]
+            out[m] = ffm.gather_lr_np(part, local).astype(np.float32)
+        return out.reshape(idx.shape)
+
+
+# ---------------------------------------------------------------------------
+# Jitted partial / reduce stages
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0,))
+def _shard_partial_q8(cfg: FFMConfig, a_ctx, vc, vm, qc, scale, zero):
+    """One shard's compacted candidate-entry partials, int8 rows.
+
+    ``qc`` (M, F, k) int8 codes of the owned candidate rows (padded bucket
+    M), ``scale``/``zero`` (M,) their grids, ``a_ctx`` (M, Fc, k) the
+    ctx-side facing vectors (``stacked_emb[r, :, f0+j]`` per entry),
+    ``vc`` (M, Fc) context values, ``vm`` (M,) candidate values. Returns
+    ``terms`` (M, Fc) — the entry's ctx-cand pair terms — and ``aa_rows``
+    (M, Fcand, k), the dequantized candidate-facing slice the router
+    scatters for the cross-candidate reduce. Dequantization inside this jit
+    is bit-identical to the single engine's fused dequant (measured), and
+    the ``mik,mik->mi`` contraction's bits are invariant to the padded M —
+    the two facts the cross-N bit-stability contract rests on.
+    """
+    fc = cfg.context_fields
+    rows = (qc.astype(jnp.float32) * scale[:, None, None]
+            + zero[:, None, None])                        # (M, F, k)
+    terms = (jnp.einsum("mik,mik->mi", a_ctx, rows[:, :fc])
+             * vc * vm[:, None])
+    return terms, rows[:, fc:]
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _shard_partial_rows(cfg: FFMConfig, a_ctx, vc, vm, rows):
+    """f32-table twin of :func:`_shard_partial_q8` (pre-gathered rows)."""
+    fc = cfg.context_fields
+    terms = (jnp.einsum("mik,mik->mi", a_ctx, rows[:, :fc])
+             * vc * vm[:, None])
+    return terms, rows[:, fc:]
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _reduce_forward(cfg: FFMConfig, model: str, head_params, cached,
+                    pairs_xc, aa_block, kv_b, lr_cand):
+    """Fixed-shard-order reduction: finish the logits from scattered partial
+    terms. ``pairs_xc`` (R, N, n_xc) ctx-cand terms (scattered per entry);
+    ``aa_block`` (R, N, Fcand, Fcand, k) the candidate rows' cand-facing
+    slices. The aa einsum form/shape matches the single engine's
+    ``_reference_candidate_pairs`` exactly, so its bits do not depend on the
+    shard count that produced the block."""
+    f0 = cfg.context_fields
+    (pi, pj), _, _, aa = ffm.pair_split(cfg)
+    eai = aa_block[:, :, pi[aa] - f0, pj[aa] - f0]
+    eaj = aa_block[:, :, pj[aa] - f0, pi[aa] - f0]
+    va = kv_b[:, :, pi[aa] - f0] * kv_b[:, :, pj[aa] - f0]
+    pairs_aa = jnp.einsum("rnxk,rnxk->rnx", eai, eaj) * va
+    return _finish_candidates(cfg, model, head_params, cached,
+                              pairs_xc, pairs_aa, lr_cand)
+
+
+# ---------------------------------------------------------------------------
+# The router
+# ---------------------------------------------------------------------------
+
+class ShardRouter(InferenceEngine):
+    """Fleet front-end: N hash-space-sharded engines behind one
+    :class:`InferenceEngine` surface (see module docstring for the reduction
+    and generation contracts).
+
+    The router *is* an engine: ``score``/``score_batch``, the prefix cache,
+    cross-request dedup, bucketing, warmup, and stats are inherited and
+    operate on the **assembled view** — virtual params whose gather-table
+    leaves are :class:`ShardedRows`/:class:`ShardedLR` views over the live
+    shards. Only ``_candidates_forward`` is replaced: candidate entries are
+    compacted per owning shard, partial-scored on the worker pool, scattered,
+    and reduced (the per-shard engines hold the resident tables and ingest
+    update frames; their own scoring paths serve direct/debug traffic).
+    """
+
+    def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
+                 n_shards: int = 2, backend: str = "reference", params=None,
+                 quantized: bool = True, cache_entries: int = 4096,
+                 min_bucket: int = 8, prefix_stride: Optional[int] = 4,
+                 dedup: bool = True,
+                 warmup_buckets: Optional[Tuple[int, int]] = None,
+                 prefix_depths: Optional[Sequence[int]] = None,
+                 max_workers: Optional[int] = None):
+        self.topology = ShardTopology.build(cfg, model, n_shards)
+        self._shards: List[Optional[InferenceEngine]] = [
+            InferenceEngine(self.topology.shard_cfg(s), model,
+                            backend=backend, quantized=quantized,
+                            cache_entries=64, prefix_stride=None,
+                            host_gather=False)
+            for s in range(n_shards)]
+        self.degraded = False
+        self._fleet_lock = threading.Lock()
+        self._fleet_vector: Optional[Tuple] = None
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers or n_shards,
+            thread_name_prefix="shard-router")
+        # entry->pair-position map: xc pairs are (i ctx, j cand); the entry
+        # (r, n, j) contributes one term per context field i, landing at the
+        # xc position of pair (i, f0+j)
+        (pi, pj), _, xc, _ = ffm.pair_split(cfg)
+        fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+        self._xcpos = np.empty((fc, fcand), np.int64)
+        self._xcpos[pi[xc], pj[xc] - fc] = np.arange(xc.size)
+        # the router's own engine surface operates on the assembled view:
+        # never quantize (shards own quantization), never host-gather (the
+        # candidate path is replaced wholesale)
+        super().__init__(cfg, model, backend=backend, params=None,
+                         cache_entries=cache_entries, min_bucket=min_bucket,
+                         prefix_stride=prefix_stride, dedup=dedup,
+                         quantized=False, prefix_depths=prefix_depths,
+                         host_gather=False)
+        if params is not None:
+            self.install_params(params)
+            if warmup_buckets is not None:
+                self.warmup(max_requests=warmup_buckets[0],
+                            max_candidates=warmup_buckets[1])
+
+    # -- fleet weight management -------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def shards(self) -> List[Optional[InferenceEngine]]:
+        """Live view of the shard slots (``None`` = killed)."""
+        return self._shards
+
+    def fleet_generations(self) -> List[Optional[Tuple[int, int]]]:
+        """Per-shard ``(generation, weights_version)``; ``None`` for a dead
+        shard — the router-level view of the fleet's generation vector."""
+        return [None if s is None else (s.generation, s.weights_version)
+                for s in self._shards]
+
+    def install_params(self, params) -> None:
+        """Shard a full-space f32 pytree across the fleet and republish the
+        assembled view. Each live shard quantizes its own slice (on a
+        quantized fleet) — byte-identical to slicing a full-space
+        quantization, per the topology's alignment invariant."""
+        for s, shard in enumerate(self._shards):
+            if shard is not None:
+                shard.install_params(self.topology.shard_params(params, s))
+        self._refresh_fleet(force=True)
+
+    def kill_shard(self, shard: int) -> None:
+        """Simulate (or administratively take) a shard down. Its rows score
+        as zero contributions from the next refresh on; the request path
+        keeps serving (``degraded`` flips for monitoring)."""
+        self._shards[shard] = None
+        self.degraded = True
+        self._refresh_fleet(force=True)
+
+    def rotate_shard(self, shard: int, **rotate_kw) -> InferenceEngine:
+        """Atomic shard rotation: build the shard's successor off the request
+        path (:meth:`InferenceEngine.rotate`), re-point the shard's update
+        pipe at it under the pipe's ingest lock (the receiver's byte chain —
+        and therefore the delta-frame sequence — continues unbroken), and
+        swap the serving slot. Returns the successor."""
+        old = self._shards[shard]
+        if old is None:
+            raise ValueError(f"shard {shard} is dead")
+        succ = old.rotate(**rotate_kw)
+        pipe = old._pipe
+        if pipe is not None:
+            with pipe._ingest_lock:
+                pipe._engine = succ
+                with succ._pipe_lock:
+                    succ._pipe = pipe
+                self._shards[shard] = succ
+        else:
+            self._shards[shard] = succ
+        self._refresh_fleet(force=True)
+        return succ
+
+    def _refresh_fleet(self, force: bool = False) -> None:
+        """Rebuild the assembled view iff the fleet generation vector moved;
+        publishing bumps the router generation (stamping the prefix cache)."""
+        vector = tuple(self.fleet_generations())
+        with self._fleet_lock:
+            if not force and vector == self._fleet_vector:
+                return
+            parts = [None if s is None else s.params for s in self._shards]
+            live = [p for p in parts if p is not None]
+            if not live:
+                raise RuntimeError("every shard is dead or weightless")
+            primary = live[0]
+            cfg = self.cfg
+            virtual = {k: v for k, v in primary.items()
+                       if k not in ("ffm", "lr")}
+            virtual["ffm"] = {"emb": ShardedRows(
+                [None if p is None else p["ffm"]["emb"] for p in parts],
+                self.topology.ranges, (cfg.n_fields, cfg.k))}
+            virtual["lr"] = {
+                "w": ShardedLR(
+                    [None if p is None else p["lr"]["w"] for p in parts],
+                    self.topology.ranges),
+                "b": primary["lr"]["b"]}
+            self._fleet_vector = vector
+            # single-reference publish (same atomicity argument as the
+            # engine's _publish); _weights_raw directly — the property
+            # getter re-enters _refresh_fleet, and _fleet_lock is held
+            self._weights_raw = (virtual, self._weights_raw[1] + 1)
+            self.weights_version = max(
+                (v[1] for v in vector if v is not None), default=0)
+
+    def _maybe_refresh(self) -> None:
+        if tuple(self.fleet_generations()) != self._fleet_vector:
+            self._refresh_fleet()
+
+    # the engine's scoring path snapshots `self._weights`; route that read
+    # through a lazy fleet-vector check so shard publishes (async update
+    # pipes) become visible at the next batch boundary
+    @property
+    def _weights(self):
+        if self._fleet_vector is not None:
+            self._maybe_refresh()
+        return self._weights_raw
+
+    @_weights.setter
+    def _weights(self, value):
+        self._weights_raw = value
+
+    # -- update fan-out ------------------------------------------------------
+    def configure_fanout(self, manifests: Sequence, like_params) -> None:
+        """Install per-shard decode defaults: shard ``s``'s pipe decodes
+        against ``manifests[s]`` (local shapes — from
+        ``transfer.ShardedSender.manifests``) and the shared ``like_params``
+        tree (only structure/dtypes are kept)."""
+        missing = [s for s, m in enumerate(manifests) if m is None]
+        if missing:
+            # a pipe configured with a None manifest rejects every frame
+            # asynchronously (logged + dropped on the ingest thread) — the
+            # fleet would just silently never advance. The sender publishes
+            # manifests at prime()/first make_updates.
+            raise ValueError(
+                f"no manifest for shard(s) {missing}: prime the ShardedSender "
+                "(or run a round) before configure_fanout")
+        for shard, manifest in zip(self._shards, manifests):
+            if shard is not None:
+                shard.update_pipe(manifest=manifest, like_params=like_params)
+
+    def submit_updates(self, updates: Sequence[Optional[bytes]]) -> int:
+        """Fan one training round's per-shard frames out to the shards'
+        update pipes (async; backpressure per shard). Dead shards' frames are
+        dropped. Returns the number of frames accepted."""
+        n = 0
+        for shard, frame in zip(self._shards, updates):
+            if shard is not None and frame is not None:
+                n += bool(shard.submit_update(frame))
+        return n
+
+    def flush_updates(self, timeout: Optional[float] = 30.0) -> List[
+            Optional[Tuple[int, int]]]:
+        """Wait until every live shard has published its pending frames,
+        refresh the assembled view, and return the generation vector."""
+        for shard in self._shards:
+            if shard is not None and shard._pipe is not None:
+                shard._pipe.flush(timeout)
+        self._maybe_refresh()
+        return self.fleet_generations()
+
+    # -- resource accounting -------------------------------------------------
+    @property
+    def resident_weight_bytes(self) -> int:
+        """Sum of the live shards' resident bytes (the head leaves replicate
+        per shard; the tables split)."""
+        return sum(s.resident_weight_bytes
+                   for s in self._shards if s is not None)
+
+    def shard_resident_bytes(self) -> List[int]:
+        return [0 if s is None else s.resident_weight_bytes
+                for s in self._shards]
+
+    # -- scoring: scatter partials / gather the reduction --------------------
+    def _candidates_forward(self, params, stacked, ki_b, kv_b):
+        cfg = self.cfg
+        fc, fcand, k = cfg.context_fields, cfg.n_fields - cfg.context_fields, cfg.k
+        rb, nb = ki_b.shape[:2]
+        emb_view: ShardedRows = params["ffm"]["emb"]
+
+        lr_cand = (ffm.gather_lr_np(params["lr"]["w"], ki_b)
+                   * kv_b).sum(-1).astype(np.float32)
+
+        owner = emb_view.owner_of(ki_b.reshape(-1)).reshape(ki_b.shape)
+        stacked_emb = np.asarray(stacked["emb"], np.float32)
+        stacked_val = np.asarray(stacked["val"], np.float32)
+
+        def shard_task(s: int):
+            part = emb_view.parts[s]
+            sel = np.flatnonzero((owner == s).reshape(-1))
+            if part is None or sel.size == 0:
+                return None
+            r_m, rem = np.divmod(sel, nb * fcand)
+            n_m, j_m = np.divmod(rem, fcand)
+            local = ki_b[r_m, n_m, j_m] - emb_view.ranges[s][0]
+            a_ctx = stacked_emb[r_m, :, fc + j_m]          # (M, Fc, k)
+            vc = stacked_val[r_m]                          # (M, Fc)
+            vm = kv_b[r_m, n_m, j_m]                       # (M,)
+            m = sel.size
+            mb = self.plan.bucket(m, minimum=self.plan.min_bucket)
+
+            def pad(x):
+                if x.shape[0] == mb:
+                    return x
+                return np.concatenate(
+                    [x, np.zeros((mb - x.shape[0],) + x.shape[1:], x.dtype)])
+
+            a_ctx, vc, vm = pad(a_ctx), pad(vc), pad(vm)
+            if Q.is_row_quantized(part):
+                qc = pad(rg_ops.gather_codes_np(part["codes"], local))
+                sc = pad(np.asarray(part["scale"])[local])
+                ze = pad(np.asarray(part["zero"])[local])
+                terms, aa_rows = _shard_partial_q8(cfg, a_ctx, vc, vm,
+                                                   qc, sc, ze)
+            else:
+                rows = pad(rg_ops.gather_codes_np(
+                    np.asarray(part), local).astype(np.float32, copy=False))
+                terms, aa_rows = _shard_partial_rows(cfg, a_ctx, vc, vm, rows)
+            return (r_m, n_m, j_m,
+                    np.asarray(terms)[:m], np.asarray(aa_rows)[:m])
+
+        futures = [self._pool.submit(shard_task, s)
+                   for s in range(len(emb_view.parts))]
+
+        (pi, pj), _, xc, _ = ffm.pair_split(cfg)
+        pairs_xc = np.zeros((rb, nb, xc.size), np.float32)
+        aa_block = np.zeros((rb, nb, fcand, fcand, k), np.float32)
+        # fixed shard order; every entry's positions are written by exactly
+        # one shard, so the scatter targets are disjoint by construction
+        for fut in futures:
+            res = fut.result()
+            if res is None:
+                continue
+            r_m, n_m, j_m, terms, aa_rows = res
+            pairs_xc[r_m[:, None], n_m[:, None],
+                     self._xcpos[:, j_m].T] = terms
+            aa_block[r_m, n_m, j_m] = aa_rows
+        return _reduce_forward(cfg, self.model, self._head_params(params),
+                               stacked, pairs_xc, aa_block, kv_b, lr_cand)
+
+    def warmup(self, *, max_requests: int = 8, max_candidates: int = 64) -> int:
+        """Pre-compile the router's full shape set: every (row-bucket,
+        candidate-bucket) reduce shape via the inherited warmup (which
+        drives :meth:`_candidates_forward` on zero dummies — zeros are all
+        owned by shard 0, so that warms only the largest entry bucket), plus
+        every intermediate compacted-entry bucket of the partial jits, which
+        real traffic reaches as soon as ownership splits."""
+        calls = super().warmup(max_requests=max_requests,
+                               max_candidates=max_candidates)
+        cfg = self.cfg
+        fc, fcand, k = (cfg.context_fields,
+                        cfg.n_fields - cfg.context_fields, cfg.k)
+        rb = self.plan.bucket(max_requests, minimum=1)
+        nb = self.plan.bucket(max_candidates)
+        quantized = any(
+            p is not None and Q.is_row_quantized(p["ffm"]["emb"])
+            for p in (s.params for s in self._shards if s is not None))
+        f32 = any(
+            p is not None and not isinstance(p["ffm"]["emb"], dict)
+            for p in (s.params for s in self._shards if s is not None))
+        for mb in self.plan.buckets_upto(rb * nb * fcand):
+            a_ctx = np.zeros((mb, fc, k), np.float32)
+            vc = np.zeros((mb, fc), np.float32)
+            vm = np.zeros(mb, np.float32)
+            if quantized:
+                _shard_partial_q8(cfg, a_ctx, vc, vm,
+                                  np.zeros((mb, cfg.n_fields, k), np.int8),
+                                  np.zeros(mb, np.float32),
+                                  np.zeros(mb, np.float32))
+            if f32:
+                _shard_partial_rows(
+                    cfg, a_ctx, vc, vm,
+                    np.zeros((mb, cfg.n_fields, k), np.float32))
+            calls += 1
+        return calls
+
+    # -- oracle --------------------------------------------------------------
+    def materialized_params(self):
+        """Concatenate the live shards' tables back into one full-space
+        pytree (dead shards contribute zero rows) — the router's oracle
+        weights. Exact on a quantized fleet: per-shard grids are slices of
+        the full-space grids, so concatenation reverses the sharding
+        byte-for-byte."""
+        parts = [None if s is None else s.params for s in self._shards]
+        live = [p for p in parts if p is not None]
+        if not live:
+            raise RuntimeError("every shard is dead or weightless")
+        primary = live[0]
+        cfg = self.cfg
+
+        def emb_part(p, lo, hi):
+            if p is not None:
+                return p["ffm"]["emb"]
+            n = hi - lo
+            like = next(q["ffm"]["emb"] for q in live)
+            if Q.is_row_quantized(like):
+                return {"codes": np.zeros((n, cfg.n_fields, cfg.k), np.int8),
+                        "scale": np.ones(n, np.float32),
+                        "zero": np.zeros(n, np.float32)}
+            return np.zeros((n, cfg.n_fields, cfg.k), np.float32)
+
+        def lr_part(p, lo, hi):
+            if p is not None:
+                return p["lr"]["w"]
+            n = hi - lo
+            like = next(q["lr"]["w"] for q in live)
+            if Q.is_block_quantized(like):
+                b = int(like["block"])
+                return {"codes": np.zeros(n, np.int8),
+                        "scale": np.ones(-(-n // b), np.float32),
+                        "zero": np.zeros(-(-n // b), np.float32),
+                        "block": b}
+            return np.zeros(n, np.float32)
+
+        embs = [emb_part(p, lo, hi)
+                for p, (lo, hi) in zip(parts, self.topology.ranges)]
+        lrs = [lr_part(p, lo, hi)
+               for p, (lo, hi) in zip(parts, self.topology.ranges)]
+        out = {kk: v for kk, v in primary.items() if kk not in ("ffm", "lr")}
+        if all(Q.is_row_quantized(e) for e in embs):
+            out["ffm"] = {"emb": {
+                key: np.concatenate([e[key] for e in embs])
+                for key in ("codes", "scale", "zero")}}
+        else:
+            out["ffm"] = {"emb": np.concatenate(
+                [Q.dequantize_rows(e) if Q.is_row_quantized(e)
+                 else np.asarray(e) for e in embs])}
+        if all(Q.is_block_quantized(w) for w in lrs):
+            out["lr"] = {"w": {
+                "codes": np.concatenate([w["codes"] for w in lrs]),
+                "scale": np.concatenate([w["scale"] for w in lrs]),
+                "zero": np.concatenate([w["zero"] for w in lrs]),
+                "block": int(lrs[0]["block"])},
+                "b": primary["lr"]["b"]}
+        else:
+            out["lr"] = {"w": np.concatenate(
+                [Q.dequantize_blocks(w) if Q.is_block_quantized(w)
+                 else np.asarray(w) for w in lrs]),
+                "b": primary["lr"]["b"]}
+        return out
+
+    def score_uncached(self, ctx_idx, ctx_val, cand_idx, cand_val,
+                       use_backend: bool = False) -> jnp.ndarray:
+        """Full-forward oracle against the materialized (concatenated)
+        fleet tables — the assembled view's duck-typed leaves cannot cross a
+        jit boundary, so the router materializes for its oracle."""
+        self._require_params()
+        n = cand_idx.shape[0]
+        fc = self.cfg.context_fields
+        idx = jnp.concatenate(
+            [jnp.broadcast_to(jnp.asarray(ctx_idx), (n, fc)),
+             jnp.asarray(cand_idx)], axis=1)
+        val = jnp.concatenate(
+            [jnp.broadcast_to(jnp.asarray(ctx_val), (n, fc)),
+             jnp.asarray(cand_val)], axis=1)
+        return deepffm.forward(self.cfg, self.materialized_params(), idx, val,
+                               self.model)

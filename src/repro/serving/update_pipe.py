@@ -98,6 +98,13 @@ class UpdatePipe:
         self._ingest_lock = threading.Lock()
         self._pending = 0                      # submitted, not yet published
         self._pending_cv = threading.Condition()
+        # flush() waiters currently blocked on the drain (under _pending_cv):
+        # while > 0 the ingest thread runs *un*throttled at normal priority —
+        # a flush is an explicit synchronization point, and on a saturated
+        # box a SCHED_IDLE + paced ingest thread can otherwise be starved
+        # past any flush timeout by hot scorer threads (1-core worst case)
+        self._hurry = 0
+        self._ingest_tid: Optional[int] = None
         self._thread: Optional[threading.Thread] = None
         self._thread_lock = threading.Lock()
         self._closed = False
@@ -168,9 +175,12 @@ class UpdatePipe:
         on_ingest_thread = (self._thread is not None
                             and threading.current_thread() is self._thread)
         self._receiver.apply_update(update)
+        # pacing applies only to background decodes, and only while no
+        # flush() is waiting on the drain (the hurry contract — see flush)
+        paced = on_ingest_thread and not self._hurried()
         params = self._receiver.materialize(
             manifest=self._manifest, like=self._like,
-            pace=self._pace if on_ingest_thread else None)
+            pace=self._pace if paced else None)
         if getattr(self._engine, "quantized", False):
             # quantize-on-ingest (§6 serving): the standby slot holds int8
             # rows + per-row grids, not f32 — still pure numpy on this
@@ -200,8 +210,9 @@ class UpdatePipe:
             # skipped when more frames are queued (only the last matters)
             prewarm = getattr(self._engine, "prewarm_contexts", None)
             if prewarm is not None:
-                self.stats.contexts_refreshed += prewarm(
-                    params, pause_s=self._pace[1] if self._pace else 0.0)
+                pause = self._pace[1] if (self._pace and not self._hurried()
+                                          ) else 0.0
+                self.stats.contexts_refreshed += prewarm(params, pause_s=pause)
         gen = self._engine._publish(params, self._receiver.version,
                                     len(update))
         self.stats.published += 1
@@ -270,17 +281,44 @@ class UpdatePipe:
 
     def flush(self, timeout: Optional[float] = 30.0) -> int:
         """Wait until every submitted frame has been published (or dropped);
-        returns the engine generation."""
+        returns the engine generation.
+
+        While any flusher waits, the background ingest thread is *hurried*:
+        promoted back to normal scheduling and excused from pacing sleeps.
+        The demotion/pacing exists to protect request-path p99 from decode
+        bursts, but a flush is an explicit synchronization point — the caller
+        has declared freshness more urgent than latency, and without the
+        boost a saturated box (hot scorer threads, one core) can starve the
+        SCHED_IDLE ingest thread past any finite timeout. The last flusher
+        out re-demotes the thread."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._pending_cv:
-            while self._pending > 0:
-                remaining = (None if deadline is None
-                             else deadline - time.monotonic())
-                if remaining is not None and remaining <= 0:
-                    raise TimeoutError(
-                        f"{self._pending} update frame(s) still pending")
-                self._pending_cv.wait(remaining)
+            if self._pending == 0:
+                return self._engine.generation
+            self._hurry += 1
+            promote = self._hurry == 1
+        if promote:
+            self._set_ingest_priority(idle=False)
+        try:
+            with self._pending_cv:
+                while self._pending > 0:
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"{self._pending} update frame(s) still pending")
+                    self._pending_cv.wait(remaining)
+        finally:
+            with self._pending_cv:
+                self._hurry -= 1
+                demote = self._hurry == 0
+            if demote:
+                self._set_ingest_priority(idle=True)
         return self._engine.generation
+
+    def _hurried(self) -> bool:
+        with self._pending_cv:
+            return self._hurry > 0
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Drain the queue and stop the ingest thread. ``_closed`` flips
@@ -312,23 +350,42 @@ class UpdatePipe:
                                                 name="update-pipe-ingest")
                 self._thread.start()
 
+    def _set_ingest_priority(self, *, idle: bool) -> None:
+        """Demote (or restore) the ingest thread's OS scheduling, best-effort.
+
+        ``idle=True`` parks it below every scoring thread — SCHED_IDLE where
+        the kernel allows, else nice 19 (~1/20 weight); ``idle=False`` puts
+        it back to normal for a hurried flush. Callable from any thread
+        (Linux addresses threads by native id); a no-op before the thread
+        has started or where the OS refuses the switch."""
+        tid = self._ingest_tid
+        if tid is None:
+            return
+        try:
+            os.sched_setscheduler(
+                tid, os.SCHED_IDLE if idle else os.SCHED_OTHER,
+                os.sched_param(0))
+            self.stats.idle_priority = idle
+            return
+        except (AttributeError, OSError, PermissionError):
+            pass
+        try:  # containers often reject sched classes; fall back to nice
+            os.setpriority(os.PRIO_PROCESS, tid, 19 if idle else 0)
+            self.stats.idle_priority = idle
+        except (AttributeError, OSError, PermissionError):
+            pass
+
     def _run(self) -> None:
         # Demote this thread below every scoring thread: on a busy box the
         # decode burst otherwise steals cores from concurrent scorers and
         # shows up as request-path p99 spikes — the exact stall async
         # ingestion exists to remove. SCHED_IDLE means ingest only consumes
         # cycles the request path leaves idle; freshness degrades gracefully
-        # under saturation instead of latency. (Linux-only; elsewhere the
-        # thread just runs at normal priority.)
-        try:
-            os.sched_setscheduler(0, os.SCHED_IDLE, os.sched_param(0))
-            self.stats.idle_priority = True
-        except (AttributeError, OSError, PermissionError):
-            try:  # containers often reject SCHED_IDLE; nice 19 ~= 1/20 weight
-                os.setpriority(os.PRIO_PROCESS, threading.get_native_id(), 19)
-                self.stats.idle_priority = True
-            except (AttributeError, OSError, PermissionError):
-                pass
+        # under saturation instead of latency — except under a waiting
+        # flush(), which temporarily lifts the demotion. (Linux-only;
+        # elsewhere the thread just runs at normal priority.)
+        self._ingest_tid = threading.get_native_id()
+        self._set_ingest_priority(idle=not self._hurried())
         while True:
             update = self._q.get()
             if update is None:

@@ -481,7 +481,8 @@ class TrainingPipeline:
                  delta_updates: bool = True, seed: int = 0,
                  prefetch_depth: int = 8, sparse_backward: bool = True,
                  hogwild_threads: int = 4, local_sgd_workers: int = 2,
-                 donate: bool = True, row_sparse: bool = True):
+                 donate: bool = True, row_sparse: bool = True,
+                 shard_ranges=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.cfg, self.model, self.lr = cfg, model, lr
@@ -491,7 +492,21 @@ class TrainingPipeline:
         self.params = deepffm.init_params(cfg, jax.random.PRNGKey(seed), model)
         self.opt = make_optimizer("adagrad", lr=lr, power_t=power_t)
         self.opt_state = self.opt.init(self.params)
-        self.sender = transfer.Sender(mode=transfer_mode)
+        # ``shard_ranges`` (a fleet topology's contiguous row ranges) flips
+        # the update channel to fan-out: run_round emits one frame per shard
+        # (transfer.ShardedSender) instead of one full-space frame; the
+        # row-sharded paths come from the model's declarative specs
+        if shard_ranges is not None:
+            row_paths = sorted({"lr/w"} |
+                               ({emb_leaf_path(model)}
+                                if emb_leaf_path(model) else set()))
+            self.sender = transfer.ShardedSender(
+                ranges=shard_ranges, row_paths=row_paths, mode=transfer_mode)
+            # publish the wire layout now, so sender.manifests can configure
+            # the fleet's decode pipes before the first round runs
+            self.sender.prime(self.params)
+        else:
+            self.sender = transfer.Sender(mode=transfer_mode)
         self.reports: List[RoundReport] = []
         if backend == "jit":
             self.backend: TrainerBackend = JitBackend(
@@ -511,8 +526,10 @@ class TrainingPipeline:
         """AdaGrad accumulator (legacy ``OnlineTrainer`` surface)."""
         return self.opt_state["acc"]
 
-    def run_round(self, batches: Iterable[Dict[str, Any]]) -> bytes:
-        """One online round; returns the versioned update blob for serving."""
+    def run_round(self, batches: Iterable[Dict[str, Any]]):
+        """One online round; returns the versioned update blob for serving —
+        one ``bytes`` frame, or the per-shard ``List[bytes]`` (shard order)
+        when the pipeline was built with ``shard_ranges``."""
         t0 = time.perf_counter()
         batch_list = list(Prefetcher(batches, depth=self.prefetch_depth))
         self.params, self.opt_state, m = self.backend.run(
@@ -522,8 +539,18 @@ class TrainingPipeline:
         # report.round and the frame's version stamp are the same number: the
         # serving engine tracks it as weights_version
         version = len(self.reports) + 1
-        update = self.sender.make_update(self.params, version=version,
-                                         touched=touched or None)
+        if isinstance(self.sender, transfer.ShardedSender):
+            # fan-out channel: one frame per shard, same version stamp on
+            # all; run_round returns the List[bytes] in shard order
+            update = self.sender.make_updates(self.params, version=version,
+                                              touched=touched or None)
+            update_bytes = sum(len(u) for u in update)
+            kind = _KIND_NAMES[transfer.unframe(update[0]).kind]
+        else:
+            update = self.sender.make_update(self.params, version=version,
+                                             touched=touched or None)
+            update_bytes = len(update)
+            kind = _KIND_NAMES[transfer.unframe(update).kind]
         seconds = time.perf_counter() - t0
         skip = (sparse_updates.skip_stats_from_col_alive(m.col_alive)
                 if m.col_alive else {})
@@ -533,10 +560,10 @@ class TrainingPipeline:
             progressive_auc=roc_auc(np.concatenate(m.labels),
                                     np.concatenate(m.scores))
             if m.labels else 0.5,
-            update_bytes=len(update),
+            update_bytes=update_bytes,
             examples_per_s=m.examples / max(seconds, 1e-9),
             skip_stats=skip, touched_rows=n_rows,
-            update_kind=_KIND_NAMES[transfer.unframe(update).kind],
+            update_kind=kind,
         ))
         return update
 
