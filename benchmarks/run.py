@@ -23,7 +23,8 @@ BENCHES = (
 )
 
 
-SMOKE = ("serving_engine", "training_pipeline")  # fast CI smoke (implies --quick)
+SMOKE = ("serving_engine", "training_pipeline",
+         "roofline")  # fast CI smoke (implies --quick)
 
 
 def check_scenarios(mod) -> list:

@@ -268,6 +268,70 @@ def empty_context_prefix_np(cfg: FFMConfig, dtype=np.float32
     }
 
 
+def fused_context_state_np(cfg: FFMConfig, emb, lr_w,
+                           prefix: Dict[str, np.ndarray],
+                           tail_idx: np.ndarray, tail_val: np.ndarray
+                           ) -> Dict[str, np.ndarray]:
+    """Gather-only context extension for the fused scoring path.
+
+    Where :func:`extend_context_prefix_np` computes the tail pair einsum on
+    host, the fused Pallas kernel computes those pairs in-device — so context
+    resolution only needs the *rows*: tail embeddings and LR terms gathered
+    here, the prefix's cached pair sum carried as a scalar, and the prefix
+    depth recorded so the kernel knows which pairs are still owed. The
+    returned dict stacks directly into the fused kernel's per-row inputs:
+
+    * ``emb``      (fc, F, k) f32 — full-depth context embeddings
+    * ``val``      (fc,)
+    * ``depth``    () int32      — cached prefix depth p
+    * ``pair_sum`` () f32        — sum of the prefix's cached ctx-ctx pairs
+    * ``lr_terms`` (fc,)
+
+    ``prefix["pairs"]`` is *not* re-emitted: only its sum enters the logit,
+    and the full j-major vector is rebuilt from the kernel's returned pair
+    matrix by :func:`prefix_state_from_dots_np` when the engine inserts the
+    full-depth state into the prefix cache.
+    """
+    p = prefix["emb"].shape[0]
+    te = gather_rows_np(emb, tail_idx).astype(np.float32)
+    e = np.concatenate([prefix["emb"], te], axis=0)
+    v = np.concatenate([prefix["val"], np.asarray(tail_val, np.float32)])
+    lr_tail = (gather_lr_np(lr_w, tail_idx)
+               * np.asarray(tail_val, np.float32)).astype(np.float32)
+    lr_terms = np.concatenate([prefix["lr_terms"], lr_tail])
+    return {
+        "emb": e,
+        "val": v,
+        "depth": np.int32(p),
+        "pair_sum": np.float32(prefix["pairs"].sum()),
+        "lr_terms": lr_terms,
+    }
+
+
+def prefix_state_from_dots_np(cfg: FFMConfig, fused: Dict[str, np.ndarray],
+                              prefix_pairs: np.ndarray, dots: np.ndarray
+                              ) -> Dict[str, np.ndarray]:
+    """Rebuild a full-depth insertable prefix state from fused-kernel output.
+
+    ``fused`` is a :func:`fused_context_state_np` state, ``prefix_pairs`` the
+    j-major pair vector of its depth-p cached prefix, and ``dots`` the
+    kernel's returned (fc, fc) ctx pair matrix (value products applied). The
+    tail pairs are the j-major gather ``dots[ii, p + jt]`` — the same slots
+    ``extend_context_prefix_np`` computes on host — so the resulting state is
+    byte-compatible with the staged path's cache entries.
+    """
+    fc = fused["emb"].shape[0]
+    p = int(fused["depth"])
+    ii, jt = tail_pair_gather(fc, p)
+    tail = np.asarray(dots, np.float32)[ii, p + jt]
+    return {
+        "emb": fused["emb"],
+        "val": fused["val"],
+        "pairs": np.concatenate([np.asarray(prefix_pairs, np.float32), tail]),
+        "lr_terms": fused["lr_terms"],
+    }
+
+
 def slice_context_prefix(state: Dict[str, jnp.ndarray], depth: int
                          ) -> Dict[str, jnp.ndarray]:
     """View of a prefix state at a shallower ``depth`` (pure slicing, by

@@ -124,6 +124,200 @@ def ffm_candidate_matrices(ectx: jnp.ndarray, vctx: jnp.ndarray, ecx: jnp.ndarra
     return xc[:, :n], aa[:, :n]
 
 
+def _ctx_tail_block(ectx, vctx, p):
+    """Shared fused-kernel context block: the full (Fc, Fc) ctx-ctx pair
+    matrix (dots x value products) plus the *tail* pair sum — every pair
+    (i, j) with i < j and j >= p, i.e. exactly the pairs a depth-p cached
+    prefix is missing. This is ``ffm.extend_context_prefix``'s tail einsum
+    folded into the candidate kernel, so a partial-depth context costs no
+    host pair arithmetic on the scoring path."""
+    fc = ectx.shape[0]
+    ec = ectx[:, :fc]                                  # (Fc, Fc, K)
+    d = jnp.sum(ec * jnp.swapaxes(ec, 0, 1), axis=-1)  # (Fc, Fc)
+    d = d * (vctx[:, None] * vctx[None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (fc, fc), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (fc, fc), 1)
+    tail = jnp.sum(jnp.where((ii < jj) & (jj >= p), d, 0.0))
+    return d, tail
+
+
+def _fused_kernel_q8(ectx_ref, vctx_ref, p_ref, base_ref, qcx_ref, qcc_ref,
+                     s_ref, z_ref, vcand_ref, out_ref, dots_ref):
+    ectx = ectx_ref[0]   # (Fc, F, K) f32 — full-depth ctx embeddings
+    vctx = vctx_ref[0]   # (Fc,)
+    p = p_ref[0, 0]      # scalar int32 — cached prefix depth of this row
+    base = base_ref[0]   # (Nt,) f32 — lr_ctx + lr_cand + bias + cached pairs
+    s = s_ref[0]         # (Nt, Fcand) per-hash-row dequant grids
+    z = z_ref[0]
+    vc = vcand_ref[0]    # (Nt, Fcand)
+    fc = ectx.shape[0]
+    k = ectx.shape[-1]
+
+    # ctx-ctx: cached pair sum arrives in `base`; only the tail pairs
+    # (j >= p) are computed here, in-kernel
+    d, tail = _ctx_tail_block(ectx, vctx, p)
+    dots_ref[0] = d
+
+    # ctx-cand: f32 ctx activation x int8 candidate codes. Affine-decomposed
+    # per candidate row (e = q*s + z): dot(ex, e) = s * dot(ex, q) +
+    # z * sum(ex) — the zero-point never multiplies element-wise
+    ex = ectx[:, fc:]                                  # (Fc, Fcand, K)
+    qx = qcx_ref[0].astype(jnp.float32)                # (Nt, Fcand, Fc, K)
+    dq = jnp.sum(ex[None] * jnp.swapaxes(qx, 1, 2), axis=-1)  # (Nt, Fc, Fcand)
+    esum = jnp.sum(ex, axis=-1)                        # (Fc, Fcand)
+    xc = (s[:, None, :] * dq + z[:, None, :] * esum[None])
+    xc_sum = jnp.sum(xc * vctx[None, :, None] * vc[:, None, :], axis=(1, 2))
+
+    # cand-cand: int8 x int8 -> int32 accumulation; dequantization touches
+    # only the scalar dot results, never the K-vectors. With e_i = q_i*s_i +
+    # z_i (per-row grids): dot(e_i, e_j) = s_i s_j Q_ij + s_i z_j A_ij +
+    # s_j z_i A_ji + K z_i z_j, where Q (code dot) and A (code row-sums)
+    # are exact int32.
+    q = qcc_ref[0].astype(jnp.int32)                   # (Nt, Fcand, Fcand, K)
+    qd = jnp.sum(q * jnp.swapaxes(q, 1, 2), axis=-1).astype(jnp.float32)
+    a = jnp.sum(q, axis=-1).astype(jnp.float32)        # (Nt, Fcand, Fcand)
+    aa = (s[:, :, None] * s[:, None, :] * qd
+          + s[:, :, None] * z[:, None, :] * a
+          + s[:, None, :] * z[:, :, None] * jnp.swapaxes(a, 1, 2)
+          + k * z[:, :, None] * z[:, None, :])
+    fcand = vc.shape[-1]
+    ic = jax.lax.broadcasted_iota(jnp.int32, (fcand, fcand), 0)
+    jc = jax.lax.broadcasted_iota(jnp.int32, (fcand, fcand), 1)
+    aa = jnp.where((ic < jc)[None], aa * vc[:, :, None] * vc[:, None, :], 0.0)
+    aa_sum = jnp.sum(aa, axis=(1, 2))
+
+    out_ref[0] = base + tail + xc_sum + aa_sum
+
+
+def _fused_kernel_rows(ectx_ref, vctx_ref, p_ref, base_ref, ecx_ref, ecc_ref,
+                       vcand_ref, out_ref, dots_ref):
+    ectx = ectx_ref[0]   # (Fc, F, K)
+    vctx = vctx_ref[0]
+    p = p_ref[0, 0]
+    base = base_ref[0]
+    vc = vcand_ref[0]
+
+    d, tail = _ctx_tail_block(ectx, vctx, p)
+    dots_ref[0] = d
+
+    ex = ectx[:, ectx.shape[0]:]                       # (Fc, Fcand, K)
+    ecx = ecx_ref[0]                                   # (Nt, Fcand, Fc, K)
+    dx = jnp.sum(ex[None] * jnp.swapaxes(ecx, 1, 2), axis=-1)
+    xc_sum = jnp.sum(dx * vctx[None, :, None] * vc[:, None, :], axis=(1, 2))
+
+    ecc = ecc_ref[0]                                   # (Nt, Fcand, Fcand, K)
+    da = jnp.sum(ecc * jnp.swapaxes(ecc, 1, 2), axis=-1)
+    fcand = vc.shape[-1]
+    ic = jax.lax.broadcasted_iota(jnp.int32, (fcand, fcand), 0)
+    jc = jax.lax.broadcasted_iota(jnp.int32, (fcand, fcand), 1)
+    da = jnp.where((ic < jc)[None], da * vc[:, :, None] * vc[:, None, :], 0.0)
+    out_ref[0] = base + tail + xc_sum + jnp.sum(da, axis=(1, 2))
+
+
+def _fused_call(kernel, ectx, vctx, depth, base, cand_blocks, vcand,
+                block_n: int, interpret: bool):
+    """Common pallas_call plumbing for the fused-logit kernels: grid over
+    (request row, candidate tile); per step one row's whole context block
+    plus one candidate tile is resident. Outputs the (R, N) logits and the
+    per-row (Fc, Fc) ctx pair matrix (each candidate tile recomputes and
+    writes the same ctx block — Fc^2 values, noise next to the tile math —
+    which the engine reads back to insert full-depth prefix states)."""
+    r, fc, f, k = ectx.shape
+    fcand = f - fc
+    n = vcand.shape[1]
+    nt = min(block_n, n)
+    pad = (-n) % nt
+    if pad:
+        base = jnp.pad(base, ((0, 0), (0, pad)))
+        vcand = jnp.pad(vcand, ((0, 0), (0, pad), (0, 0)))
+        cand_blocks = [
+            jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
+            for b in cand_blocks]
+    np_ = vcand.shape[1]
+    grid = (r, np_ // nt)
+    cand_specs = []
+    for b in cand_blocks:
+        tail_dims = b.ndim - 2
+        cand_specs.append(pl.BlockSpec(
+            (1, nt) + b.shape[2:],
+            (lambda i, j, nd=tail_dims: (i, j) + (0,) * nd)))
+    out, dots = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, fc, f, k), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, fc), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nt), lambda i, j: (i, j)),
+            *cand_specs,
+            pl.BlockSpec((1, nt, fcand), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, fc, fc), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, np_), jnp.float32),
+            jax.ShapeDtypeStruct((r, fc, fc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ectx, vctx, depth.reshape(r, 1), base, *cand_blocks, vcand)
+    return out[:, :n], dots
+
+
+def ffm_fused_logits_q8(ectx: jnp.ndarray, vctx: jnp.ndarray,
+                        depth: jnp.ndarray, base: jnp.ndarray,
+                        qcx: jnp.ndarray, qcc: jnp.ndarray,
+                        scale: jnp.ndarray, zero: jnp.ndarray,
+                        vcand: jnp.ndarray, *, block_n: int = 64,
+                        interpret: bool = True):
+    """One fused Pallas call per padding bucket: context-tail pairs +
+    candidate pair terms + the additive FFM head, int8 pair arithmetic.
+
+    The single-call serving path the roofline report motivates: instead of
+    staging ``extend_context_prefix`` (host) -> candidate dot matrices ->
+    pair-vector scatter -> head sum, each grid step takes one request row's
+    full-depth context block and a candidate tile and emits *logits*
+    directly — the (R, N, n_pairs) pair vector and the (R, N, Fc, Fcand) /
+    (R, N, Fcand, Fcand) dot matrices never exist in memory. Candidate
+    cand-cand pair dots accumulate as **int8 x int8 -> int32** (exact) and
+    dequantize only the scalar dot result via the per-row ``(scale, zero)``
+    grids; ctx-cand dots keep the f32 cached-activation side and decompose
+    the candidate affine so the zero-point never multiplies element-wise.
+
+    ectx:  (R, Fc, F, K) f32   full-depth context embeddings (tail rows
+                               host-gathered; their *pairs* compute here)
+    vctx:  (R, Fc)             context values
+    depth: (R,) int32          cached prefix depth p per row — pairs with
+                               j >= p are computed in-kernel, the rest
+                               arrive pre-summed inside ``base``
+    base:  (R, N) f32          lr_ctx + lr_cand + bias + cached ctx pair sum
+    qcx:   (R, N, Fcand, Fc, K) int8    candidate codes, ctx-field columns
+    qcc:   (R, N, Fcand, Fcand, K) int8 candidate codes, cand-field columns
+    scale/zero: (R, N, Fcand) f32       per-candidate-row dequant grids
+    vcand: (R, N, Fcand)
+    ->     logits (R, N) f32, ctx_dots (R, Fc, Fc) f32 (pair matrix with
+           value products applied — rows of it are the j-major tail pairs
+           the engine inserts into the prefix cache after scoring)
+    """
+    return _fused_call(_fused_kernel_q8, ectx, vctx, depth, base,
+                       [qcx, qcc, scale, zero], vcand, block_n, interpret)
+
+
+def ffm_fused_logits_rows(ectx: jnp.ndarray, vctx: jnp.ndarray,
+                          depth: jnp.ndarray, base: jnp.ndarray,
+                          ecx: jnp.ndarray, ecc: jnp.ndarray,
+                          vcand: jnp.ndarray, *, block_n: int = 64,
+                          interpret: bool = True):
+    """f32 twin of :func:`ffm_fused_logits_q8` for engines serving f32
+    tables above the gather cliff: same single-call fusion (tail pairs +
+    candidate pairs + additive head), pre-gathered f32 candidate rows
+    ``ecx`` (R, N, Fcand, Fc, K) / ``ecc`` (R, N, Fcand, Fcand, K) instead
+    of int8 codes + grids. Returns (logits (R, N), ctx_dots (R, Fc, Fc))."""
+    return _fused_call(_fused_kernel_rows, ectx, vctx, depth, base,
+                       [ecx, ecc], vcand, block_n, interpret)
+
+
 def _cand_kernel_q8(ectx_ref, vctx_ref, qcx_ref, qcc_ref, s_ref, z_ref,
                     vcand_ref, xc_ref, aa_ref):
     ectx = ectx_ref[0]   # (Fc, Fcand, K) f32 — cached ctx partial (activation)

@@ -18,6 +18,8 @@ from repro.core import ffm as ffm_core
 from repro.kernels.ffm_interaction.ffm_interaction import (
     ffm_candidate_matrices,
     ffm_candidate_matrices_q8,
+    ffm_fused_logits_q8,
+    ffm_fused_logits_rows,
     ffm_interaction_matrix,
 )
 
@@ -69,3 +71,36 @@ def candidate_interactions_q8(cfg, emb_ctx, val_ctx, qc, scale, zero, cand_val):
     pairs_xc = xc_mat[:, :, pi[xc], pj[xc] - fc]
     pairs_aa = aa_mat[:, :, pi[aa] - fc, pj[aa] - fc]
     return pairs_xc, pairs_aa
+
+
+@partial(jax.jit, static_argnums=(0,))
+def fused_candidate_logits_q8(cfg, emb_ctx, val_ctx, depth, base, qc, scale,
+                              zero, cand_val):
+    """Single fused Pallas call per padding bucket: tail ctx-ctx pairs +
+    int8 candidate pair terms + the additive FFM head (§5 x §6).
+
+    Replaces the staged ``candidate_interactions_q8`` -> pair-vector scatter
+    -> head sum chain with one kernel that emits logits directly; the
+    candidate codes ``qc`` ``(R, N, Fcand, F, K)`` stay int8 across HBM and
+    accumulate cand-cand dots as int32, dequantized only at the scalar dot.
+    ``depth``/``base`` carry the cached-prefix split: pairs below ``depth``
+    arrive pre-summed in ``base``, pairs at/after compute in-kernel.
+    Returns ``(logits (R, N), ctx_dots (R, Fc, Fc))`` — the second output is
+    the full ctx pair matrix the engine turns back into insertable prefix
+    states.
+    """
+    fc = cfg.context_fields
+    return ffm_fused_logits_q8(
+        emb_ctx, val_ctx, depth.astype(jnp.int32), base,
+        qc[..., :fc, :], qc[..., fc:, :], scale, zero, cand_val)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def fused_candidate_logits_rows(cfg, emb_ctx, val_ctx, depth, base, ec,
+                                cand_val):
+    """f32 twin of :func:`fused_candidate_logits_q8` for engines serving
+    unquantized tables (host-gathered f32 rows ``ec``)."""
+    fc = cfg.context_fields
+    return ffm_fused_logits_rows(
+        emb_ctx, val_ctx, depth.astype(jnp.int32), base,
+        ec[..., :fc, :], ec[..., fc:, :], cand_val)

@@ -32,3 +32,50 @@ def ffm_candidate_matrices_q8_ref(ectx, vctx, qcx, qcc, scale, zero, vcand):
     ecx = qcx.astype(jnp.float32) * s + z
     ecc = qcc.astype(jnp.float32) * s + z
     return ffm_candidate_matrices_ref(ectx, vctx, ecx, ecc, vcand)
+
+
+def _ctx_tail_ref(ectx, vctx, depth):
+    """Full ctx-ctx pair matrix (value products applied) plus per-row tail
+    pair sum — pairs (i, j) with i < j and j >= depth[r]."""
+    fc = ectx.shape[1]
+    ec = ectx[:, :, :fc]
+    d = jnp.einsum("rijk,rjik->rij", ec, ec)
+    d = d * vctx[:, :, None] * vctx[:, None, :]
+    ii = jnp.arange(fc)[:, None]
+    jj = jnp.arange(fc)[None, :]
+    mask = (ii < jj)[None] & (jj[None] >= depth[:, None, None])
+    tail = jnp.sum(jnp.where(mask, d, 0.0), axis=(1, 2))
+    return d, tail
+
+
+def ffm_fused_logits_rows_ref(ectx, vctx, depth, base, ecx, ecc, vcand):
+    """Oracle for the fused f32 logit kernel.
+
+    ectx: (R, Fc, F, K); vctx: (R, Fc); depth: (R,) int32; base: (R, N);
+    ecx: (R, N, Fcand, Fc, K); ecc: (R, N, Fcand, Fcand, K);
+    vcand: (R, N, Fcand) -> (logits (R, N), ctx_dots (R, Fc, Fc)).
+    """
+    fc = ectx.shape[1]
+    d, tail = _ctx_tail_ref(ectx, vctx, depth)
+    ex = ectx[:, :, fc:]                        # (R, Fc, Fcand, K)
+    dx = jnp.einsum("rijk,rnjik->rnij", ex, ecx)
+    xc = dx * vctx[:, None, :, None] * vcand[:, :, None, :]
+    da = jnp.einsum("rnijk,rnjik->rnij", ecc, ecc)
+    fcand = vcand.shape[-1]
+    tri = jnp.triu(jnp.ones((fcand, fcand), bool), 1)
+    aa = jnp.where(tri, da * vcand[:, :, :, None] * vcand[:, :, None, :], 0.0)
+    out = base + tail[:, None] + jnp.sum(xc, axis=(2, 3)) + jnp.sum(aa, axis=(2, 3))
+    return out, d
+
+
+def ffm_fused_logits_q8_ref(ectx, vctx, depth, base, qcx, qcc, scale, zero,
+                            vcand):
+    """Oracle for the fused int8 logit kernel: dequantize candidate codes to
+    f32 rows, then the f32 fused reference. The kernel's int32-exact code
+    dots reassociate the same sums, so agreement is within the
+    ``quantization.fused_logit_tolerance`` rounding envelope, not bitwise."""
+    s = scale[..., None, None]
+    z = zero[..., None, None]
+    ecx = qcx.astype(jnp.float32) * s + z
+    ecc = qcc.astype(jnp.float32) * s + z
+    return ffm_fused_logits_rows_ref(ectx, vctx, depth, base, ecx, ecc, vcand)

@@ -30,6 +30,7 @@ strategy survives every regime:
 from __future__ import annotations
 
 import os
+import threading
 import time
 from functools import partial
 from typing import Optional, Sequence
@@ -55,6 +56,10 @@ CLIFF_ROWS = 1 << 17
 _PROBE_SIZES = (1 << 16, 1 << 17, 1 << 18, 1 << 19)
 _PROBE_MAX = 1 << 20
 _calibrated: Optional[int] = None
+# N ShardRouter shard threads all hit their first gather at once; without
+# serialization each would run the micro-probe (N x probe cost on the request
+# path) and racing writers could leave shards disagreeing on strategy.
+_calibrate_lock = threading.Lock()
 
 
 def calibrate_cliff_rows(sizes: Sequence[int] = _PROBE_SIZES,
@@ -98,11 +103,14 @@ def cliff_rows() -> int:
     if os.environ.get("REPRO_CLIFF_CALIBRATE", "1").lower() in ("0", "false"):
         return CLIFF_ROWS
     global _calibrated
-    if _calibrated is None:
-        try:
-            _calibrated = calibrate_cliff_rows()
-        except Exception:  # never let a probe failure break engine startup
-            _calibrated = CLIFF_ROWS
+    if _calibrated is None:  # double-checked: reads stay lock-free once set
+        with _calibrate_lock:
+            if _calibrated is None:
+                try:
+                    _calibrated = calibrate_cliff_rows()
+                except Exception:
+                    # never let a probe failure break engine startup
+                    _calibrated = CLIFF_ROWS
     return _calibrated
 
 

@@ -70,6 +70,34 @@ composition point; each component maps to a paper section:
   sub-quantization-step calibration or when the model head is too sensitive
   to embedding perturbation; quantize when serving is gather-bandwidth
   bound — the paper's CPU deployment regime.
+* **Fused bucket scoring (§5 x §6, roofline-grounded)** —
+  ``InferenceEngine(fused=True)``, auto-selected on quantized ``"ffm"``
+  engines whose table auto-picks the host pre-gather, collapses the staged
+  chain — host context-tail extension (``ffm.extend_context_prefix_np``) ->
+  candidate dot matrices -> pair-vector scatter -> additive head — into
+  **one Pallas call per padding bucket**
+  (:func:`fused_candidates_forward_q8`): context resolution only *gathers*
+  rows (``ffm.fused_context_state_np``); the kernel computes the context
+  pairs a depth-p cached prefix is still missing in-device, accumulates
+  cand-cand pair dots as **int8 x int8 -> int32** (exact) dequantizing only
+  the scalar dot result, and emits logits directly — the ``(R, N, n_pairs)``
+  pair vector and the candidate dot matrices never exist in memory. The
+  kernel also returns each row's ctx pair matrix, from which full-depth
+  prefix states are rebuilt and inserted *after* scoring
+  (``ffm.prefix_state_from_dots_np``) — cache learning survives the fusion,
+  and the inserted states are byte-compatible with the staged path's.
+  **Int8-accumulator tolerance contract**: against the staged oracle on the
+  *same* quantized tables the deviation is pure f32 reassociation (the int32
+  code dots are exact), bounded by ``quantization.fused_logit_tolerance``;
+  against the f32 oracle the quantization bound
+  ``quantization.pair_logit_tolerance`` dominates exactly as on the staged
+  path. The staged path is still selected for: ``deepffm``/MLP heads (the
+  fused kernel emits additive-head logits only), engines without the host
+  pre-gather (the in-trace gather already avoids the host<->jit crossings
+  fusion removes), ``score_uncached`` / ``prewarm_contexts`` (oracle and
+  cache-fill mechanisms), and the ``ShardRouter`` (its scatter-gather
+  forward composes per-shard partial sums in a fixed order — fusing inside
+  shards would break the bit-invariance-across-shard-counts contract).
 
 Request batching: candidate counts are padded to power-of-two buckets and
 multiple requests are stacked into one jitted call
@@ -87,7 +115,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -129,17 +157,22 @@ class ServeStats:
     ctx_partials_full: int = 0
     ctx_tail_fields: int = 0
     latency_window: int = 4096
-    _latencies_s: List[float] = field(default_factory=list, repr=False)
+    _latencies_s: Optional[deque] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        # deque(maxlen=...) keeps the window mutation a single C-level call:
+        # concurrent scorer threads recording without the engine lock (e.g.
+        # bench drivers) can no longer interleave an extend with the windowed
+        # delete and drop or double-count entries
+        self._latencies_s = deque(maxlen=self.latency_window)
 
     def record(self, seconds: float, candidates: int, requests: int = 1) -> None:
         self.requests += requests
         self.candidates += candidates
         self.seconds += seconds
         # every request in a microbatch completes when the batch does, so the
-        # batch wall time is each request's latency
+        # batch wall time is each request's latency; maxlen evicts the oldest
         self._latencies_s.extend([seconds] * requests)
-        if len(self._latencies_s) > self.latency_window:
-            del self._latencies_s[: -self.latency_window]
 
     @property
     def dedup_saved(self) -> int:
@@ -151,9 +184,10 @@ class ServeStats:
         return self.candidates / max(self.seconds, 1e-9)
 
     def latency_ms(self, pct: float) -> float:
-        if not self._latencies_s:
+        snap = list(self._latencies_s)  # atomic snapshot vs concurrent records
+        if not snap:
             return 0.0
-        return float(np.percentile(np.asarray(self._latencies_s), pct) * 1e3)
+        return float(np.percentile(np.asarray(snap), pct) * 1e3)
 
     @property
     def p50_ms(self) -> float:
@@ -184,12 +218,18 @@ class ScoringPlan:
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm",
-                 backend: str = "reference", min_bucket: int = 8):
+                 backend: str = "reference", min_bucket: int = 8,
+                 fused: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if not 1 <= cfg.context_fields < cfg.n_fields:
             raise ValueError("context cache needs 1 <= context_fields < n_fields")
+        if fused and model != "ffm":
+            # the fused kernel emits additive-head logits; MergeNorm/MLP heads
+            # need the full pair vector and stay on the staged path
+            raise ValueError(f"fused scoring requires model='ffm', got {model!r}")
         self.cfg, self.model, self.backend = cfg, model, backend
+        self.fused = bool(fused)
         self.min_bucket = max(1, min_bucket)
 
     def bucket(self, n: int, minimum: Optional[int] = None) -> int:
@@ -389,6 +429,46 @@ def batched_candidates_forward_rows(cfg: FFMConfig, model: str, backend: str,
                               pairs_xc, pairs_aa, lr_cand)
 
 
+@partial(jax.jit, static_argnums=(0,))
+def fused_candidates_forward_q8(cfg: FFMConfig, lr_b, cached, qc, scale, zero,
+                                cand_val, lr_cand):
+    """One-call fused scoring over pre-gathered int8 candidate codes.
+
+    The roofline-motivated collapse of :func:`batched_candidates_forward_q8`
+    + :func:`_finish_candidates` into a single Pallas dispatch per padding
+    bucket (``"ffm"`` model only — the head is the additive LR + pair sum).
+    ``cached`` is the *fused* context state (leaves stacked over R rows):
+    ``emb`` (R, Fc, F, k) full-depth embeddings, ``val`` (R, Fc), ``depth``
+    (R,) cached prefix depths, ``pair_sum`` (R,) summed cached ctx pairs,
+    ``lr_terms`` (R, Fc). The missing ctx pairs (j >= depth) compute inside
+    the kernel; cand-cand dots accumulate int8 x int8 -> int32 and
+    dequantize only at the scalar result. Returns ``(logits (R, N),
+    ctx_dots (R, Fc, Fc))`` — the second output rebuilds insertable
+    full-depth prefix states (``ffm.prefix_state_from_dots_np``).
+    """
+    from repro.kernels.ffm_interaction import ops as ffm_ops
+
+    base = (jnp.sum(cached["lr_terms"], axis=-1)
+            + cached["pair_sum"])[:, None] + lr_cand + lr_b
+    return ffm_ops.fused_candidate_logits_q8(
+        cfg, cached["emb"], cached["val"], cached["depth"], base,
+        qc, scale, zero, cand_val)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def fused_candidates_forward_rows(cfg: FFMConfig, lr_b, cached, ec, cand_val,
+                                  lr_cand):
+    """f32 twin of :func:`fused_candidates_forward_q8` (pre-gathered f32
+    rows ``ec`` (R, N, Fcand, F, k) instead of codes + grids)."""
+    from repro.kernels.ffm_interaction import ops as ffm_ops
+
+    base = (jnp.sum(cached["lr_terms"], axis=-1)
+            + cached["pair_sum"])[:, None] + lr_cand + lr_b
+    return ffm_ops.fused_candidate_logits_rows(
+        cfg, cached["emb"], cached["val"], cached["depth"], base,
+        ec, cand_val)
+
+
 def candidates_forward(cfg: FFMConfig, model: str, params, cached,
                        cand_idx, cand_val):
     """Single-request compatibility wrapper (reference backend). ``cached`` is
@@ -436,6 +516,18 @@ class InferenceEngine:
       (``row_gather.ops.cliff_rows``, constant fallback via
       ``REPRO_CLIFF_CALIBRATE=0``). ``None`` (default) auto-selects by
       table size and backend (``row_gather.ops.use_host_gather``).
+    * ``fused`` — score each padding bucket in one fused Pallas call
+      (:func:`fused_candidates_forward_q8` / ``_rows``): ctx-tail pairs +
+      candidate pair terms + additive head, int8 pair arithmetic on
+      quantized tables (``"ffm"`` model only — see the module docstring for
+      the tolerance contract and when the staged path remains selected).
+      ``True`` forces ``host_gather`` on (the fused forwards consume
+      pre-gathered blocks); ``None`` (default) turns it on exactly when the
+      engine is a quantized ``"ffm"`` server whose table *auto*-picked the
+      host pre-gather — the regime the roofline report shows is bound by
+      staged-path memory traffic. Engines with explicitly pinned
+      ``host_gather`` keep the staged path unless ``fused=True`` is asked
+      for, so bit-exactness expectations against in-trace engines survive.
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -445,16 +537,24 @@ class InferenceEngine:
                  warmup_buckets: Optional[Tuple[int, int]] = None,
                  quantized: bool = False,
                  prefix_depths: Optional[Sequence[int]] = None,
-                 host_gather: Optional[bool] = None):
+                 host_gather: Optional[bool] = None,
+                 fused: Optional[bool] = None):
         from repro.kernels.row_gather import ops as rg_ops
 
-        self.plan = ScoringPlan(cfg, model, backend=backend, min_bucket=min_bucket)
+        host_auto = host_gather is None
+        resolved_host = (rg_ops.use_host_gather(cfg.hash_space)
+                         if host_auto else bool(host_gather))
+        if fused is None:
+            fused = (model == "ffm" and quantized and resolved_host
+                     and host_auto)
+        elif fused:
+            resolved_host = True  # fused forwards consume pre-gathered blocks
+        self.plan = ScoringPlan(cfg, model, backend=backend,
+                                min_bucket=min_bucket, fused=bool(fused))
         self.cache_entries = cache_entries
         self.dedup = dedup
         self.quantized = quantized
-        self.host_gather = (
-            rg_ops.use_host_gather(cfg.hash_space)
-            if host_gather is None else bool(host_gather))
+        self.host_gather = resolved_host
         self.weights_version = 0     # trainer's stamp from the update frame
         self._weights: Tuple[Optional[Dict], int] = (
             self._maybe_quantize(params), 0)
@@ -482,6 +582,10 @@ class InferenceEngine:
     @property
     def backend(self) -> str:
         return self.plan.backend
+
+    @property
+    def fused(self) -> bool:
+        return self.plan.fused
 
     @property
     def params(self):
@@ -758,6 +862,90 @@ class InferenceEngine:
             pending = deferred
         return states, full_hit
 
+    def _resolve_contexts_fused(self, ctxs: List[Tuple[Tuple[bytes, ...],
+                                                       np.ndarray, np.ndarray]],
+                                params, generation: int,
+                                record_stats: bool = True):
+        """Gather-only context resolution for the fused scoring path.
+
+        Returns ``(states, insert_info, full_hit)``: per context a stackable
+        fused state (``ffm.fused_context_state_np`` — full-depth rows + LR
+        terms + cached depth and pair sum, *no* host pair arithmetic), plus
+        for each cache miss the ``(depth, prefix_pairs)`` needed to rebuild
+        and insert the full-depth state after the kernel returns its ctx
+        pair matrix (:meth:`_insert_fused_misses`).
+
+        Unlike the staged resolver this runs a single round: the tail pairs
+        don't exist until the fused kernel runs, so contexts in one burst
+        can't chain off each other's fresh inserts — each extends
+        independently from its deepest *already-cached* prefix. The cache
+        still learns (inserts land post-scoring), so steady-state traffic
+        converges to the same hit depths.
+        """
+        fc = self.cfg.context_fields
+        states: List[Optional[Dict]] = [None] * len(ctxs)
+        insert_info: List[Optional[Tuple]] = [None] * len(ctxs)
+        full_hit: List[bool] = [False] * len(ctxs)
+        with self._lock:
+            looked = [self._cache.lookup(c[0], generation) for c in ctxs]
+        emb_h, lr_h = self._host_weights(params)
+        empty = ffm.empty_context_prefix_np(
+            self.cfg, ffm.table_dtype(params["ffm"]["emb"]))
+        n_full = tails = 0
+        for i, (toks, ci, cv) in enumerate(ctxs):
+            depth, state = looked[i]
+            if depth == fc:
+                full_hit[i] = True
+                states[i] = {
+                    "emb": state["emb"], "val": state["val"],
+                    "depth": np.int32(fc),
+                    "pair_sum": np.float32(np.asarray(state["pairs"]).sum()),
+                    "lr_terms": state["lr_terms"],
+                }
+                continue
+            base = (ffm.slice_context_prefix(state, depth)
+                    if state is not None else empty)
+            states[i] = ffm.fused_context_state_np(
+                self.cfg, emb_h, lr_h, base, ci[depth:], cv[depth:])
+            insert_info[i] = (depth,
+                              np.array(base["pairs"], np.float32, copy=True))
+            n_full += depth == 0
+            tails += fc - depth
+        if record_stats:
+            with self._lock:
+                for (depth, _), info in zip(looked, insert_info):
+                    self._cache.hit_depths[fc if info is None else depth] += 1
+                self.stats.ctx_partials_full += n_full
+                self.stats.ctx_tail_fields += tails
+        return states, insert_info, full_hit
+
+    def _insert_fused_misses(self, u_ctxs, states, insert_info, chunk_group,
+                             u_of_group, ctx_dots, generation: int) -> None:
+        """Post-scoring cache insertion for the fused path: rebuild each
+        missed context's full-depth prefix state from the kernel's returned
+        ctx pair matrix and insert it. ``chunk_group`` maps forward rows to
+        groups; on a no-dedup engine ``u_of_group`` maps groups back to
+        unique contexts. A context whose requests all carried empty slates
+        never entered the forward and stays uninserted (no pair matrix to
+        read back — the staged resolver will fill it on its next miss)."""
+        if all(info is None for info in insert_info):
+            return
+        first_chunk: Dict[int, int] = {}
+        for c, g in enumerate(chunk_group):
+            u = int(g) if self.dedup else int(u_of_group[g])
+            first_chunk.setdefault(u, c)
+        inserts = []
+        for u, info in enumerate(insert_info):
+            if info is None or u not in first_chunk:
+                continue
+            depth, prefix_pairs = info
+            inserts.append((u, ffm.prefix_state_from_dots_np(
+                self.cfg, states[u], prefix_pairs,
+                ctx_dots[first_chunk[u]])))
+        with self._lock:
+            for u, full in inserts:
+                self._cache.insert(u_ctxs[u][0], generation, full)
+
     # -- scoring ------------------------------------------------------------
     def _require_params(self):
         if self.params is None:
@@ -816,7 +1004,11 @@ class InferenceEngine:
             u_of.append(u)
 
         fc = self.cfg.context_fields
-        states, full_hit = self._resolve_contexts(u_ctxs, params, generation)
+        if self.fused:
+            states, insert_info, full_hit = self._resolve_contexts_fused(
+                u_ctxs, params, generation)
+        else:
+            states, full_hit = self._resolve_contexts(u_ctxs, params, generation)
         # hit/miss bookkeeping matches the flat cache: first request of an
         # uncached context is the miss, every other request this batch (and
         # every full-depth match) is a hit
@@ -896,8 +1088,15 @@ class InferenceEngine:
                 lambda x: np.concatenate(
                     [x, np.zeros((rb - n_chunks,) + x.shape[1:], x.dtype)]),
                 stacked)
-        out = self._candidates_forward(params, stacked, ki_b, kv_b)
-        out = np.asarray(jax.block_until_ready(out))  # one transfer, then
+        fwd = self._candidates_forward(params, stacked, ki_b, kv_b)
+        if self.fused:
+            out, ctx_dots = jax.block_until_ready(fwd)
+            self._insert_fused_misses(u_ctxs, states, insert_info,
+                                      chunk_group, u_of, np.asarray(ctx_dots),
+                                      generation)
+            out = np.asarray(out)
+        else:
+            out = np.asarray(jax.block_until_ready(fwd))  # one transfer, then
         # plain numpy scatter-back (no per-request device gathers)
         flat = out[row_of_u[inverse], slot_of_u[inverse]]
         offs = np.concatenate([[0], np.cumsum(counts)])
@@ -908,12 +1107,13 @@ class InferenceEngine:
                               requests=len(reqs))
         return results
 
-    def _candidates_forward(self, params, stacked, ki_b, kv_b):
-        """Route one padded candidate block through the right jitted forward:
-        the in-trace-gather one, or — on a ``host_gather`` engine — the
-        pre-gathered q8 one, with the candidate codes and LR terms gathered
-        here on host (packed numpy gather, immune to the XLA gather cliff).
-        """
+    def _forward_args(self, params, stacked, ki_b, kv_b):
+        """Pick the jitted forward for one padded candidate block and build
+        its argument tuple — the host pre-gather (candidate codes/rows + LR
+        sums via packed numpy gather, immune to the XLA gather cliff)
+        happens here. Shared by :meth:`_candidates_forward` (calls it) and
+        :meth:`lower_candidates_forward` (lowers it for the roofline
+        report), so the analyzed HLO is exactly the deployed forward."""
         emb = params["ffm"]["emb"]
         if self.host_gather:
             from repro.kernels.row_gather import ops as rg_ops
@@ -921,11 +1121,22 @@ class InferenceEngine:
             emb_h, lr_h = self._host_weights(params)
             lr_cand = (ffm.gather_lr_np(lr_h, ki_b)
                        * kv_b).sum(-1).astype(np.float32)
+            if self.fused:
+                lr_b = np.float32(np.asarray(params["lr"]["b"], np.float32))
+                if Q.is_row_quantized(emb):
+                    qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
+                    return fused_candidates_forward_q8, (
+                        self.cfg, lr_b, stacked, qc, emb_h["scale"][ki_b],
+                        emb_h["zero"][ki_b], kv_b, lr_cand)
+                ec = rg_ops.gather_codes_np(emb_h, ki_b)
+                return fused_candidates_forward_rows, (
+                    self.cfg, lr_b, stacked,
+                    np.asarray(ec, np.float32), kv_b, lr_cand)
             if Q.is_row_quantized(emb):
                 qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
                 s = emb_h["scale"][ki_b]
                 z = emb_h["zero"][ki_b]
-                return batched_candidates_forward_q8(
+                return batched_candidates_forward_q8, (
                     self.cfg, self.model, self.backend,
                     self._head_params(params), stacked, qc, s, z, kv_b,
                     lr_cand)
@@ -934,12 +1145,81 @@ class InferenceEngine:
                 # rows instead of codes (the gather moves identical bytes;
                 # only the in-jit dequant disappears)
                 ec = rg_ops.gather_codes_np(emb_h, ki_b)
-                return batched_candidates_forward_rows(
+                return batched_candidates_forward_rows, (
                     self.cfg, self.model, self.backend,
                     self._head_params(params), stacked,
                     ec.astype(np.float32, copy=False), kv_b, lr_cand)
-        return batched_candidates_forward(
+        return batched_candidates_forward, (
             self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
+
+    def _candidates_forward(self, params, stacked, ki_b, kv_b):
+        """Route one padded candidate block through the right jitted forward
+        (see :meth:`_forward_args`). Fused engines return ``(logits,
+        ctx_dots)``; staged ones return logits."""
+        fn, args = self._forward_args(params, stacked, ki_b, kv_b)
+        return fn(*args)
+
+    def _warmup_dummies(self, rb: int, nb: int):
+        """Numpy dummy (cached-state, cand-idx, cand-val) arguments for one
+        (row-bucket, candidate-bucket) shape — what :meth:`warmup` calls and
+        :meth:`lower_candidates_forward` lowers."""
+        cfg = self.cfg
+        fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+        emb_dt = ffm.table_dtype(self.params["ffm"]["emb"])
+        if self.fused:
+            cached = {
+                "emb": np.zeros((rb, fc, cfg.n_fields, cfg.k), emb_dt),
+                "val": np.zeros((rb, fc), np.float32),
+                "depth": np.zeros((rb,), np.int32),
+                "pair_sum": np.zeros((rb,), np.float32),
+                "lr_terms": np.zeros((rb, fc), np.float32),
+            }
+        else:
+            cached = {
+                "emb": np.zeros((rb, fc, cfg.n_fields, cfg.k), emb_dt),
+                "val": np.zeros((rb, fc), np.float32),
+                "pairs": np.zeros((rb, ffm.prefix_pair_count(fc)), np.float32),
+                "lr_terms": np.zeros((rb, fc), np.float32),
+            }
+        return (cached, np.zeros((rb, nb, fcand), np.int32),
+                np.zeros((rb, nb, fcand), np.float32))
+
+    def lower_candidates_forward(self, rb: int, nb: int):
+        """Lower (trace, don't run) the deployed candidate forward at one
+        (row-bucket, candidate-bucket) shape and return the jax ``Lowered``
+        — ``.compile().as_text()`` is the optimized HLO the roofline report
+        analyzes (``launch.hlo_analysis``). Uses the same argument builder
+        as the hot path, so the analyzed program is byte-for-byte the one
+        requests run, not a stub."""
+        self._require_params()
+        params, _ = self._weights
+        cached, ki_b, kv_b = self._warmup_dummies(rb, nb)
+        fn, args = self._forward_args(params, cached, ki_b, kv_b)
+        return fn.lower(*args)
+
+    def host_gather_bytes(self, rb: int, nb: int) -> int:
+        """Analytic bytes the *host* pre-gather stage moves per forward call
+        at one (rb, nb) bucket — the traffic the jit's HLO cannot see, added
+        to the HLO byte count for the serving roofline. Counts read + write
+        of every gathered block (numpy ``take`` copies): candidate embedding
+        rows (int8 codes + per-row grids on a quantized engine, f32 rows
+        otherwise), LR weights, and the index reads. An engineering
+        estimate of the dominant streams, not a hardware counter."""
+        self._require_params()
+        cfg = self.cfg
+        fcand = cfg.n_fields - cfg.context_fields
+        rows = rb * nb * fcand
+        if not self.host_gather:
+            return 0
+        emb = self.params["ffm"]["emb"]
+        if Q.is_row_quantized(emb):
+            row_bytes = cfg.n_fields * cfg.k + 2 * 4   # codes + (scale, zero)
+        else:
+            row_bytes = cfg.n_fields * cfg.k * 4
+        lr_w = self.params["lr"]["w"]
+        lr_bytes = 1 + 2 * 4 if Q.is_block_quantized(lr_w) else 4
+        idx_bytes = 4
+        return int(rows * (2 * (row_bytes + lr_bytes) + idx_bytes))
 
     _warmed_requests: Optional[int] = None  # set by warmup(); clamps prewarm
     _warmed_buckets: Optional[Tuple[int, int]] = None  # rotate() re-warms these
@@ -957,26 +1237,17 @@ class InferenceEngine:
         self._warmed_requests = max_requests
         self._warmed_buckets = (max_requests, max_candidates)
         params, _ = self._weights
-        cfg = self.cfg
-        fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
-        emb_dt = ffm.table_dtype(params["ffm"]["emb"])
         rbs = self.plan.buckets_upto(max_requests, minimum=1)
         calls = 0
         # numpy dummies, matching the hot path: jax's jit cache keys on the
         # argument container type, so warming with device arrays would leave
-        # the numpy-argument entries cold
+        # the numpy-argument entries cold. On a fused engine the dummies are
+        # fused context states (depth/pair_sum instead of the pair vector) —
+        # the fused forward's compiled shape set is covered the same way.
         for rb in rbs:
-            cached = {
-                "emb": np.zeros((rb, fc, cfg.n_fields, cfg.k), emb_dt),
-                "val": np.zeros((rb, fc), np.float32),
-                "pairs": np.zeros((rb, ffm.prefix_pair_count(fc)), np.float32),
-                "lr_terms": np.zeros((rb, fc), np.float32),
-            }
             for nb in self.plan.buckets_upto(max_candidates):
-                self._candidates_forward(
-                    params, cached,
-                    np.zeros((rb, nb, fcand), np.int32),
-                    np.zeros((rb, nb, fcand), np.float32))
+                self._candidates_forward(params,
+                                         *self._warmup_dummies(rb, nb))
                 calls += 1
         return calls
 
@@ -1010,7 +1281,7 @@ class InferenceEngine:
             cache_entries=self.cache_entries,
             min_bucket=self.plan.min_bucket, dedup=self.dedup,
             quantized=self.quantized, prefix_depths=depths,
-            host_gather=self.host_gather)
+            host_gather=self.host_gather, fused=self.fused)
         succ.weights_version = self.weights_version
         # adopt the published pytree by reference (already-quantized tables
         # must not re-walk the quantizer) and keep the generation counter

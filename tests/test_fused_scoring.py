@@ -1,0 +1,314 @@
+"""Fused bucket scoring (one Pallas call per microbatch) end-to-end.
+
+The fused path rewrites the staged serving forward — context-tail extend,
+candidate pair matrices, pair-vector head — into a single kernel launch per
+padding bucket with int8 pair arithmetic. The staged path stays in the tree
+as the oracle; everything here pins the fused path to it:
+
+* parity across *every* warmup bucket (ragged request/candidate counts,
+  partial-depth prefix hits, empty slates), quantized and f32, inside the
+  derived ``fused_logit_tolerance`` (the only new error is f32 summation
+  reassociation plus the affine int8 pair decomposition);
+* the prefix cache still *learns* through fused scoring: the kernel's
+  ctx-dots readback inserts full-depth states, so repeat traffic full-hits;
+* auto-selection: fused rides the auto host-gather policy and never flips
+  an engine whose strategy was pinned by the caller;
+* the sharded fleet keeps its bit-invariance contract (shards never
+  auto-fuse — their partial-sum reduction order is the contract);
+* scoring stays atomic while delta frames stream into the quantized tables;
+* the two hot-path bugfixes riding this PR: ``ServeStats`` latency
+  recording is bounded + thread-safe, and the gather-cliff calibration
+  probe runs exactly once under a thread race.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.core import quantization as Q
+from repro.serving.engine import InferenceEngine, ServeStats
+
+CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**13, k=4,
+                mlp_hidden=(16,))
+FC, FCAND = CFG.context_fields, CFG.n_fields - CFG.context_fields
+
+
+def _params(seed=0):
+    params = deepffm.init_params(CFG, jax.random.PRNGKey(seed), "ffm")
+    params["lr"]["w"] = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed + 1), params["lr"]["w"].shape)) * 0.1
+    return jax.tree_util.tree_map(np.asarray, params)
+
+
+def _req(rng, n_cand, ctx=None):
+    ci, cv = ctx if ctx is not None else (
+        rng.integers(0, CFG.hash_space, FC).astype(np.int32),
+        rng.normal(1, 0.25, FC).astype(np.float32))
+    return (ci, cv,
+            rng.integers(0, CFG.hash_space, (n_cand, FCAND)).astype(np.int32),
+            rng.normal(1, 0.25, (n_cand, FCAND)).astype(np.float32))
+
+
+def _engine(params, *, quantized, fused, **kw):
+    return InferenceEngine(CFG, "ffm", backend="pallas", params=params,
+                           prefix_stride=4, quantized=quantized,
+                           host_gather=True, fused=fused,
+                           warmup_buckets=(8, 32), **kw)
+
+
+def _tolerances(params, engine, reqs):
+    vmax = float(max(max(np.abs(r[1]).max(), np.abs(r[3]).max())
+                     for r in reqs))
+    absmax = float(np.abs(params["ffm"]["emb"]).max())
+    if engine.quantized:
+        eps = Q.row_max_error(engine.params["ffm"]["emb"])
+    else:
+        eps = 0.0  # f32 rows: the bound collapses to pure reassociation
+    return Q.fused_logit_tolerance(CFG, absmax, eps, vmax=vmax)
+
+
+@pytest.mark.parametrize("quantized", [True, False])
+def test_fused_matches_staged_across_all_warmup_buckets(quantized):
+    """Every (request, candidate) bucket the warmed engine can emit —
+    ragged sizes, shared contexts (prefix hits at partial depth), and an
+    empty slate mixed in — scores within the derived tolerance of the
+    staged path on the same tables."""
+    params = _params()
+    staged = _engine(params, quantized=quantized, fused=False)
+    fused = _engine(params, quantized=quantized, fused=True)
+    assert fused.fused and not staged.fused
+    rng = np.random.default_rng(7)
+    hot = (rng.integers(0, CFG.hash_space, FC).astype(np.int32),
+           rng.normal(1, 0.25, FC).astype(np.float32))
+    batches = []
+    for n_req, n_cand in [(1, 1), (1, 5), (2, 8), (3, 17), (8, 32), (5, 9)]:
+        reqs = [_req(rng, n_cand, ctx=hot if s % 2 else None)
+                for s in range(n_req)]
+        batches.append(reqs)
+    batches.append([_req(rng, 4),
+                    (hot[0], hot[1],
+                     np.zeros((0, FCAND), np.int32),
+                     np.zeros((0, FCAND), np.float32))])
+    for reqs in batches:
+        tol = _tolerances(params, fused, [r for r in reqs if r[2].size])
+        want = staged.score_batch(reqs)
+        got = fused.score_batch(reqs)
+        for w, g in zip(want, got):
+            assert np.asarray(g).shape == np.asarray(w).shape
+            if np.asarray(w).size:
+                dev = float(np.max(np.abs(np.asarray(g) - np.asarray(w))))
+                assert dev <= tol, (dev, tol, len(reqs))
+
+
+def test_fused_prefix_cache_learns_and_full_hits():
+    """The ctx-dots readback must insert *full-depth* states: the second
+    pass over identical contexts full-hits (depth == context_fields) and
+    still matches the staged oracle — the rebuilt pair vectors are real."""
+    params = _params(3)
+    fused = _engine(params, quantized=True, fused=True)
+    staged = _engine(params, quantized=True, fused=False)
+    rng = np.random.default_rng(11)
+    ctxs = [(rng.integers(0, CFG.hash_space, FC).astype(np.int32),
+             rng.normal(1, 0.25, FC).astype(np.float32)) for _ in range(4)]
+    first = [_req(rng, 16, ctx=c) for c in ctxs]
+    second = [_req(rng, 16, ctx=c) for c in ctxs]  # same ctx, fresh slates
+    fused.score_batch(first)
+    fused.prefix_hit_depths.clear()
+    got = fused.score_batch(second)
+    assert fused.prefix_hit_depths == {FC: len(ctxs)}
+    staged.score_batch(first)
+    want = staged.score_batch(second)
+    tol = _tolerances(params, fused, second)
+    for w, g in zip(want, got):
+        assert float(np.max(np.abs(np.asarray(g) - np.asarray(w)))) <= tol
+
+
+def test_fused_auto_selection_respects_pinned_strategies():
+    """Auto-fused activates only where the host-gather policy itself was
+    auto: pinning ``host_gather`` (either way) or a non-ffm head keeps the
+    engine staged, and ``fused=True`` on a non-ffm head refuses loudly."""
+    from repro.kernels.row_gather import ops as rg_ops
+
+    params = _params()
+    # pinned host_gather=True: the dedup-vs-in-trace bit-compat contract
+    assert not InferenceEngine(CFG, "ffm", params=params, quantized=True,
+                               host_gather=True).fused
+    assert not InferenceEngine(CFG, "ffm", params=params, quantized=True,
+                               host_gather=False).fused
+    # auto host gather: fused iff the policy picks the host path
+    auto = InferenceEngine(CFG, "ffm", params=params, quantized=True)
+    assert auto.fused == auto.host_gather == rg_ops.use_host_gather(
+        CFG.hash_space)
+    # f32 engines and deepffm heads never auto-fuse
+    assert not InferenceEngine(CFG, "ffm", params=params).fused
+    deep = deepffm.init_params(CFG, jax.random.PRNGKey(0), "deepffm")
+    assert not InferenceEngine(CFG, params=deep, quantized=True).fused
+    with pytest.raises(ValueError):
+        InferenceEngine(CFG, params=deep, quantized=True, fused=True)
+    # explicit fused forces the host pre-gather it depends on
+    forced = InferenceEngine(CFG, "ffm", params=params, quantized=True,
+                             fused=True)
+    assert forced.fused and forced.host_gather
+
+
+def test_fused_single_engine_vs_shard_router():
+    """The sharded fleet's scores are bit-invariant across shard counts
+    (its fixed-order reduction contract — shards must never auto-fuse) and
+    the fused single engine stays within tolerance of the fleet."""
+    from repro.serving.shard_router import ShardRouter
+
+    params = _params(5)
+    fused = _engine(params, quantized=True, fused=True)
+    routers = {n: ShardRouter(CFG, "ffm", n_shards=n, params=params,
+                              quantized=True, prefix_stride=4)
+               for n in (1, 2)}
+    for r in routers.values():
+        assert not r.fused
+        assert all(not s.fused for s in r.shards)
+    rng = np.random.default_rng(13)
+    batches = [[_req(rng, 12) for _ in range(3)] for _ in range(2)]
+    outs = {}
+    for n, r in routers.items():
+        outs[n] = np.concatenate(
+            [np.concatenate([np.asarray(o) for o in r.score_batch(reqs)])
+             for reqs in batches])
+    np.testing.assert_array_equal(outs[1], outs[2])
+    got = np.concatenate(
+        [np.concatenate([np.asarray(o) for o in fused.score_batch(reqs)])
+         for reqs in batches])
+    tol = _tolerances(params, fused, [r for reqs in batches for r in reqs])
+    # the fleet re-sums xc pair terms across shards in its own fixed order;
+    # give the cross-arm comparison that reassociation headroom on top
+    assert float(np.max(np.abs(got - outs[1]))) <= tol + 1e-5
+
+
+def test_fused_scoring_while_deltas_stream():
+    """Scorer threads race async delta ingest through the *fused* engine:
+    every batch's scores come from exactly one published generation (zero
+    emb rows quantize exactly, so any valid score is exactly v * n_fields),
+    and after the stream settles the fused scores still match the staged
+    oracle on the final tables."""
+    versions = [float(3 ** i) for i in range(4)]
+
+    def params_v(v):
+        p = deepffm.init_params(CFG, jax.random.PRNGKey(0), "ffm")
+        p = jax.tree_util.tree_map(lambda x: np.zeros_like(x), p)
+        p["lr"]["w"] = np.full_like(p["lr"]["w"], v)
+        return p
+
+    eng = InferenceEngine(CFG, "ffm", quantized=True, fused=True,
+                          params=params_v(versions[0]),
+                          warmup_buckets=(4, 8))
+    assert eng.fused
+    snd = transfer.Sender(mode="raw")
+    updates = [snd.make_update(params_v(v)) for v in versions]
+    eng.update_pipe(snd.manifest, params_v(0.0))
+    valid = {round(v * CFG.n_fields, 3) for v in versions}
+    errors, stop = [], threading.Event()
+
+    def scorer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            reqs = []
+            for _ in range(rng.integers(1, 4)):
+                ci = rng.integers(0, CFG.hash_space, FC).astype(np.int32)
+                ki = rng.integers(0, CFG.hash_space,
+                                  (rng.integers(1, 5), FCAND)).astype(np.int32)
+                reqs.append((ci, np.ones(FC, np.float32), ki,
+                             np.ones(ki.shape, np.float32)))
+            outs = eng.score_batch(reqs)
+            got = {round(float(x), 3) for o in outs for x in np.asarray(o)}
+            if not got <= valid:
+                errors.append(got - valid)
+            if len(got) > 1:  # one snapshot per batch -> one version per batch
+                errors.append(got)
+
+    threads = [threading.Thread(target=scorer, args=(s,)) for s in (1, 2)]
+    for t in threads:
+        t.start()
+    for u in updates[1:]:
+        time.sleep(0.03)
+        eng.submit_update(u)
+    eng.update_pipe().flush()
+    time.sleep(0.03)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    assert eng.generation == len(versions) - 1
+    # settled-state parity vs the engine's own staged full forward
+    rng = np.random.default_rng(17)
+    req = _req(rng, 8)
+    got = np.asarray(eng.score(*req))
+    want = np.asarray(eng.score_uncached(*req))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+def test_serve_stats_record_is_bounded_and_thread_safe():
+    """The latency reservoir is a bounded deque: concurrent recorders never
+    lose counter increments to a list-append race beyond the window, and
+    percentile snapshots taken *during* recording never crash."""
+    stats = ServeStats(latency_window=256)
+    n_threads, n_each = 8, 500
+    crashed = []
+
+    def recorder(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(n_each):
+            stats.record(float(rng.uniform(1e-4, 1e-2)), 4)
+
+    def reader():
+        for _ in range(200):
+            try:
+                stats.p50_ms, stats.p99_ms  # noqa: B018 - exercised for races
+            except Exception as e:  # pragma: no cover - the regression
+                crashed.append(e)
+
+    threads = ([threading.Thread(target=recorder, args=(s,))
+                for s in range(n_threads)]
+               + [threading.Thread(target=reader)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not crashed
+    assert stats.requests == n_threads * n_each
+    assert stats.candidates == 4 * n_threads * n_each
+    assert len(stats._latencies_s) == 256  # bounded, newest-window
+    assert stats.p99_ms > 0
+
+
+def test_cliff_calibration_probe_runs_once_under_race(monkeypatch):
+    """N threads hitting their first gather concurrently must trigger
+    exactly one calibration probe and agree on the result."""
+    from repro.kernels.row_gather import ops as rg_ops
+
+    calls = []
+
+    def fake_probe():
+        calls.append(1)
+        time.sleep(0.02)  # widen the race window
+        return 12345
+
+    monkeypatch.setenv("REPRO_CLIFF_CALIBRATE", "1")
+    monkeypatch.setattr(rg_ops, "_calibrated", None)
+    monkeypatch.setattr(rg_ops, "calibrate_cliff_rows", fake_probe)
+    results = []
+    barrier = threading.Barrier(8)
+
+    def hit():
+        barrier.wait()
+        results.append(rg_ops.cliff_rows())
+
+    threads = [threading.Thread(target=hit) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1
+    assert results == [12345] * 8

@@ -188,3 +188,87 @@ def test_host_gather_dequant_matches_gather_rows():
             * qt["scale"][idx][..., None, None]
             + qt["zero"][idx][..., None, None])
     np.testing.assert_allclose(got, want, rtol=1e-7, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Fused bucket-scoring kernel (one Pallas call per microbatch, int8 pairs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,Fc,Fcand,K,N,block_n", [
+    (1, 4, 2, 2, 3, 4),     # single row, candidate pad (3 -> 4)
+    (4, 8, 4, 4, 10, 4),    # multi-tile candidate axis with ragged pad
+    (3, 6, 6, 8, 16, 16),   # tile == bucket (no pad)
+])
+def test_fused_logits_kernels_match_refs(R, Fc, Fcand, K, N, block_n):
+    """Both fused kernels (int8-pair and f32-rows) against their jnp refs:
+    logits and the readback ctx pair matrix, across tiling/padding shapes
+    and mixed cached-prefix depths."""
+    from repro.kernels.ffm_interaction.ffm_interaction import (
+        ffm_fused_logits_q8, ffm_fused_logits_rows)
+    from repro.kernels.ffm_interaction.ref import (
+        ffm_fused_logits_q8_ref, ffm_fused_logits_rows_ref)
+
+    F = Fc + Fcand
+    rng = np.random.default_rng(R * 100 + N)
+    ectx = rng.normal(0, 0.3, (R, Fc, F, K)).astype(np.float32)
+    vctx = rng.normal(1, 0.25, (R, Fc)).astype(np.float32)
+    depth = rng.integers(0, Fc + 1, R).astype(np.int32)
+    base = rng.normal(0, 0.5, (R, N)).astype(np.float32)
+    vcand = rng.normal(1, 0.25, (R, N, Fcand)).astype(np.float32)
+
+    qcx = rng.integers(-127, 128, (R, N, Fcand, Fc, K)).astype(np.int8)
+    qcc = rng.integers(-127, 128, (R, N, Fcand, Fcand, K)).astype(np.int8)
+    scale = rng.uniform(1e-3, 5e-3, (R, N, Fcand)).astype(np.float32)
+    zero = rng.normal(0, 0.05, (R, N, Fcand)).astype(np.float32)
+
+    got, got_d = ffm_fused_logits_q8(ectx, vctx, jnp.asarray(depth), base,
+                                     qcx, qcc, scale, zero, vcand,
+                                     block_n=block_n)
+    want, want_d = ffm_fused_logits_q8_ref(ectx, vctx, depth, base,
+                                           qcx, qcc, scale, zero, vcand)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+
+    ecx = rng.normal(0, 0.3, (R, N, Fcand, Fc, K)).astype(np.float32)
+    ecc = rng.normal(0, 0.3, (R, N, Fcand, Fcand, K)).astype(np.float32)
+    got, got_d = ffm_fused_logits_rows(ectx, vctx, jnp.asarray(depth), base,
+                                       ecx, ecc, vcand, block_n=block_n)
+    want, want_d = ffm_fused_logits_rows_ref(ectx, vctx, depth, base,
+                                             ecx, ecc, vcand)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_q8_padding_is_inert():
+    """Zero-padded candidate slots (s = z = v = 0) contribute exactly 0 and
+    real-slot logits are bit-identical whether or not the tile pads."""
+    from repro.kernels.ffm_interaction.ffm_interaction import ffm_fused_logits_q8
+
+    R, Fc, Fcand, K, N = 2, 4, 4, 4, 8
+    F = Fc + Fcand
+    rng = np.random.default_rng(3)
+    args = dict(
+        ectx=rng.normal(0, 0.3, (R, Fc, F, K)).astype(np.float32),
+        vctx=rng.normal(1, 0.25, (R, Fc)).astype(np.float32),
+        depth=jnp.asarray(rng.integers(0, Fc + 1, R).astype(np.int32)),
+        base=rng.normal(0, 0.5, (R, N)).astype(np.float32),
+        qcx=rng.integers(-127, 128, (R, N, Fcand, Fc, K)).astype(np.int8),
+        qcc=rng.integers(-127, 128, (R, N, Fcand, Fcand, K)).astype(np.int8),
+        scale=rng.uniform(1e-3, 5e-3, (R, N, Fcand)).astype(np.float32),
+        zero=rng.normal(0, 0.05, (R, N, Fcand)).astype(np.float32),
+        vcand=rng.normal(1, 0.25, (R, N, Fcand)).astype(np.float32),
+    )
+    full, _ = ffm_fused_logits_q8(args["ectx"], args["vctx"], args["depth"],
+                                  args["base"], args["qcx"], args["qcc"],
+                                  args["scale"], args["zero"], args["vcand"],
+                                  block_n=8)
+    # same first 5 candidates scored at N=5 (tile pads 5 -> 8 internally)
+    cut, _ = ffm_fused_logits_q8(
+        args["ectx"], args["vctx"], args["depth"], args["base"][:, :5],
+        args["qcx"][:, :5], args["qcc"][:, :5], args["scale"][:, :5],
+        args["zero"][:, :5], args["vcand"][:, :5], block_n=8)
+    np.testing.assert_array_equal(np.asarray(cut), np.asarray(full)[:, :5])
