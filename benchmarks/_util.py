@@ -12,7 +12,10 @@ from typing import Callable, List
 
 def bench_env() -> dict:
     """Provenance stamp for every ``BENCH_*.json``: without the sha/version/
-    platform a stored number can't be compared against a rerun."""
+    platform a stored number can't be compared against a rerun — and without
+    ``cpu_count``/``parallel_workers`` a parallel-scaling number can't be
+    judged at all (1.0x on a 1-core box is expected, on a 16-core box a
+    regression)."""
     try:
         # resolve against THIS repo, not the caller's cwd (which may be a
         # different checkout whose sha would claim a false provenance)
@@ -28,12 +31,20 @@ def bench_env() -> dict:
         jax_version, backend = jax.__version__, jax.default_backend()
     except Exception:
         jax_version, backend = "unknown", "unknown"
+    try:
+        from repro.serving.engine import auto_parallel_workers
+
+        workers = auto_parallel_workers()
+    except Exception:
+        workers = None
     return {
         "git_sha": sha,
         "jax_version": jax_version,
         "jax_backend": backend,
         "platform": platform.platform(),
         "python": sys.version.split()[0],
+        "cpu_count": os.cpu_count(),
+        "parallel_workers": workers,
     }
 
 

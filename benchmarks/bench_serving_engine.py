@@ -33,16 +33,28 @@ Four traffic shapes through one :class:`InferenceEngine` per configuration:
   per-shard resident bytes (~1/N), and the bit-invariance of scores across
   shard counts. Core-aware: the near-linear flag is only asserted on a
   multi-core box (``cpu_count`` is recorded).
+* ``parallel_scaling`` — the parallel scoring pipeline
+  (``InferenceEngine(parallel=N)``) at worker counts 1, 2, 4 on the
+  gather-heavy quantized fused scenario: predictions/s per worker count
+  and the **bit-parity assertion** (every worker count's scores must be
+  byte-identical to the single-stream engine's — the pipeline's core
+  contract). Core-aware acceptance: the >=1.5x speedup flag is only
+  asserted on a multi-core box (``null`` on 1-core CI, where the auto
+  policy disables splitting and 1.0x is correct behaviour).
 * ``roofline`` — the serving roofline grounded in the engine's *deployed*
   forward: per arm (staged q8 vs fused q8) the compiled candidate-forward
   HLO is lowered at the measured bucket shape and walked for bytes/flops
   (``launch.hlo_analysis``), the host pre-gather traffic is added
   (``InferenceEngine.host_gather_bytes``), and bytes/prediction vs the
   box's measured copy bandwidth gives the preds/s bound the achieved
-  throughput is situated against. Acceptance: the fused one-Pallas-call
-  path moves fewer bytes/prediction *and* achieves more preds/s than the
-  staged chain, while staying inside ``fused_logit_tolerance`` of the
-  staged oracle and ``pair_logit_tolerance`` of the f32 forward.
+  throughput is situated against — now both **per-stream** (one worker vs
+  single-thread copy bandwidth) and **aggregate** (the parallel engine at
+  the auto worker count vs the measured multi-stream bandwidth, which
+  grows sublinearly because concurrent streams share the memory
+  controller). Acceptance: the fused one-Pallas-call path moves fewer
+  bytes/prediction *and* achieves more preds/s than the staged chain,
+  while staying inside ``fused_logit_tolerance`` of the staged oracle and
+  ``pair_logit_tolerance`` of the f32 forward.
 
 Writes ``BENCH_serving.json`` (provenance-stamped via ``write_bench_json``).
 ``benchmarks/run.py --smoke`` checks every name in :data:`SCENARIOS` exists
@@ -50,6 +62,7 @@ in the written JSON.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -61,7 +74,8 @@ from repro.common.config import FFMConfig
 from repro.core import deepffm
 from repro.core import quantization as Q
 from repro.data.synthetic import CTRStream
-from repro.serving.engine import InferenceEngine, ServeStats
+from repro.serving.engine import (InferenceEngine, ServeStats,
+                                  auto_parallel_workers)
 
 CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
                 mlp_hidden=(64, 32))
@@ -70,7 +84,8 @@ CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
 # scenario silently stopped being written (the stale-artifact trap)
 BENCH_FILE = "BENCH_serving.json"
 SCENARIOS = ("results", "overlap_traffic", "quantized_serving",
-             "gather_cliff", "sharded_scaling", "roofline")
+             "gather_cliff", "sharded_scaling", "parallel_scaling",
+             "roofline")
 
 
 def _drive(engine: InferenceEngine, reqs, *, uncached: bool = False) -> dict:
@@ -298,17 +313,28 @@ def run(quick: bool = False):
             f"agg_speedup={r['speedup_vs_n1']:.2f}x "
             f"shard_mb={r['per_shard_weight_bytes'] / 1e6:.2f}"))
 
+    # -- parallel pipeline: preds/s vs worker count, bit-parity --------------
+    parallel = _parallel_scaling_scenario(quick)
+    for w, r in sorted(parallel["workers"].items(), key=lambda kv: int(kv[0])):
+        rows.append(row(
+            f"serving_engine/parallel_w{w}", r["us_per_batch"],
+            f"preds/s={r['predictions_per_s']:.0f} "
+            f"speedup={r['speedup_vs_w1']:.2f}x "
+            f"bit_identical={r['bit_identical_to_w1']}"))
+
     # -- roofline: staged vs fused q8, bytes/prediction vs preds/s bound -----
     roofline = _roofline_scenario(quick)
     for name in ("staged_q8", "fused_q8"):
         r = roofline[name]
         rf = r["roofline"]
+        agg = rf["aggregate_fraction_of_bound"]
         rows.append(row(
             f"serving_engine/roofline_{name}", r["us_per_batch"],
             f"preds/s={r['predictions_per_s']:.0f} "
             f"bytes/pred={rf['bytes_per_prediction']:.0f} "
             f"bound={rf['bound_preds_per_s']:.0f} "
-            f"frac={rf['fraction_of_bound']:.3f}"))
+            f"frac={rf['fraction_of_bound']:.3f} "
+            f"agg_frac={'n/a' if agg is None else f'{agg:.3f}'}"))
 
     write_bench_json(
         BENCH_FILE,
@@ -323,6 +349,7 @@ def run(quick: bool = False):
          "quantized_serving": quant,
          "gather_cliff": cliff,
          "sharded_scaling": sharded,
+         "parallel_scaling": parallel,
          "roofline": roofline})
     return rows
 
@@ -757,6 +784,106 @@ def _sharded_scaling_scenario(quick: bool) -> dict:
     }
 
 
+def _parallel_scaling_scenario(quick: bool) -> dict:
+    """Parallel scoring pipeline: preds/s vs worker count + bit-parity.
+
+    The gather-heavy quantized fused configuration (the regime the pipeline
+    targets: host ``np.take`` work to overlap with Pallas execution) scored
+    at ``parallel`` = 1, 2, 4 on identical traffic — one engine per worker
+    count, interleaved measurement passes. Every worker count's scores are
+    asserted **byte-identical** to the single-stream engine's (the pipeline
+    contract: bucket-aligned spans, fixed dispatch order, one context
+    snapshot per batch). The speedup flag is core-aware like
+    ``sharded_scaling``: ``None`` on a 1-core box — the auto policy turns
+    the pipeline off there, so 1.0x is correct, not a regression — and
+    >=1.5x for the best worker count on a multi-core one.
+    """
+    v = 2**15 if quick else 2**17
+    cfg = FFMConfig(n_fields=CFG.n_fields, context_fields=CFG.context_fields,
+                    hash_space=v, k=CFG.k)
+    rng = np.random.default_rng(47)
+    params = jax.tree_util.tree_map(
+        np.asarray, deepffm.init_params(cfg, jax.random.PRNGKey(37), "ffm"))
+    params["lr"]["w"] = rng.normal(0, 0.1, v).astype(np.float32)
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+    n_cand, batch_size = 64, 8
+    n_batches = 2 if quick else 4
+    passes = 2 if quick else 4
+    # one hot context per request slot: each request is its own dedup group
+    # and chunk, so a batch splits into batch_size chunks for the spans
+    ctxs = [(rng.integers(0, v, fc).astype(np.int32),
+             rng.normal(1, 0.25, fc).astype(np.float32))
+            for _ in range(batch_size)]
+
+    def make_batches(n):
+        out = []
+        for _ in range(n):
+            out.append([(ci, cv,
+                         rng.integers(0, v, (n_cand, fcand)).astype(np.int32),
+                         rng.normal(1, 0.25,
+                                    (n_cand, fcand)).astype(np.float32))
+                        for ci, cv in ctxs])
+        return out
+
+    warm, meas = make_batches(2), make_batches(n_batches)
+    candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
+    worker_counts = (1, 2, 4)
+    engines = {
+        w: InferenceEngine(cfg, "ffm", backend="pallas", params=params,
+                           prefix_stride=4, quantized=True, host_gather=True,
+                           fused=True, parallel=w,
+                           warmup_buckets=(batch_size, n_cand))
+        for w in worker_counts}
+    outs = {}
+    for w, eng in engines.items():
+        for reqs in warm:
+            eng.score_batch(reqs)
+        outs[w] = [np.concatenate([np.asarray(s) for s in
+                                   eng.score_batch(reqs)]) for reqs in meas]
+    times = {w: [] for w in worker_counts}
+    for _ in range(passes):  # interleaved: noise hits every arm equally
+        for w, eng in engines.items():
+            t0 = time.perf_counter()
+            for reqs in meas:
+                eng.score_batch(reqs)
+            times[w].append(time.perf_counter() - t0)
+    for eng in engines.values():
+        eng.close()
+
+    bit_identical = {
+        w: all(np.array_equal(a, b) for a, b in zip(outs[w], outs[1]))
+        for w in worker_counts}
+    pps = {w: candidates / float(np.median(times[w])) for w in worker_counts}
+    counts = {}
+    for w in worker_counts:
+        med = float(np.median(times[w]))
+        counts[str(w)] = {
+            "seconds_median_pass": med,
+            "us_per_batch": med / n_batches * 1e6,
+            "predictions_per_s": pps[w],
+            "speedup_vs_w1": pps[w] / pps[1],
+            "bit_identical_to_w1": bit_identical[w],
+        }
+    cores = os.cpu_count() or 1
+    multi_core = cores >= 2
+    best = max(pps.values())
+    speedup_ok = (bool(best >= 1.5 * pps[1]) if multi_core else None)
+    return {
+        "traffic": {"hash_space": v, "n_cand": n_cand,
+                    "batch_size": batch_size, "n_batches": n_batches,
+                    "passes": passes},
+        "cpu_count": cores,
+        "auto_parallel_workers": auto_parallel_workers(),
+        "workers": counts,
+        "acceptance": {
+            "parallel_output_bit_identical": all(bit_identical.values()),
+            # None on a single-core box: the auto policy disables the
+            # pipeline there, so a speedup is unobservable by design
+            "parallel_speedup_1_5x_on_multicore": speedup_ok,
+        },
+    }
+
+
 def _roofline_scenario(quick: bool) -> dict:
     """Serving roofline grounded in the engine's deployed forward (§5 x §6).
 
@@ -771,6 +898,13 @@ def _roofline_scenario(quick: bool) -> dict:
     checked against the staged oracle (``fused_logit_tolerance`` — the only
     new error is f32 reassociation plus the affine int8 decomposition) and
     against the direct f32 forward (``pair_logit_tolerance`` envelope).
+
+    Each arm is measured twice: pinned ``parallel=1`` (the per-stream
+    number, against single-thread copy bandwidth) and at the auto worker
+    count (the aggregate number, against the measured multi-stream
+    bandwidth — on a 1-core box both collapse to the same measurement).
+    ``host_gather_bytes`` is tightened with the traffic's actual unique-row
+    count (fresh slates: every padded slot is a unique deduped row here).
     """
     from repro.launch import roofline as RL
 
@@ -806,30 +940,47 @@ def _roofline_scenario(quick: bool) -> dict:
 
     warm, meas = make_batches(2), make_batches(n_batches)
     candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
-    engines = {
-        "staged_q8": InferenceEngine(cfg, "ffm", backend="pallas",
-                                     params=params, prefix_stride=4,
-                                     quantized=True, host_gather=True,
-                                     fused=False,
-                                     warmup_buckets=(batch_size, n_cand)),
-        "fused_q8": InferenceEngine(cfg, "ffm", backend="pallas",
-                                    params=params, prefix_stride=4,
-                                    quantized=True, host_gather=True,
-                                    fused=True,
-                                    warmup_buckets=(batch_size, n_cand)),
-    }
+    streams = auto_parallel_workers()
+
+    def make_engine(fused, parallel):
+        return InferenceEngine(cfg, "ffm", backend="pallas", params=params,
+                               prefix_stride=4, quantized=True,
+                               host_gather=True, fused=fused,
+                               parallel=parallel,
+                               warmup_buckets=(batch_size, n_cand))
+
+    # per-stream arms pinned parallel=1; aggregate arms at the auto worker
+    # count (same engine objects when the box has one core)
+    engines = {"staged_q8": make_engine(False, 1),
+               "fused_q8": make_engine(True, 1)}
+    if streams > 1:
+        agg_engines = {"staged_q8": make_engine(False, streams),
+                       "fused_q8": make_engine(True, streams)}
+    else:
+        agg_engines = engines
     outs = {}
     for name, eng in engines.items():
         for reqs in warm:  # cache fill; meas shapes already warmed
             eng.score_batch(reqs)
         outs[name] = eng.score_batch(meas[0])
+    if agg_engines is not engines:
+        for eng in agg_engines.values():
+            for reqs in warm:
+                eng.score_batch(reqs)
     times = {name: [] for name in engines}
-    for _ in range(passes):  # interleaved: noise hits both arms equally
+    agg_times = {name: [] for name in engines}
+    for _ in range(passes):  # interleaved: noise hits every arm equally
         for name, eng in engines.items():
             t0 = time.perf_counter()
             for reqs in meas:
                 eng.score_batch(reqs)
             times[name].append(time.perf_counter() - t0)
+        if agg_engines is not engines:
+            for name, eng in agg_engines.items():
+                t0 = time.perf_counter()
+                for reqs in meas:
+                    eng.score_batch(reqs)
+                agg_times[name].append(time.perf_counter() - t0)
 
     # parity, two layers: fused vs the staged chain on the *same* quantized
     # tables (the fused rewrite's own error budget), and both vs the direct
@@ -860,26 +1011,49 @@ def _roofline_scenario(quick: bool) -> dict:
     plan = engines["fused_q8"].plan
     rb, nb = plan.bucket(batch_size), plan.bucket(n_cand)
     bw = RL.measure_cpu_bandwidth()
+    agg_bw = (RL.measure_cpu_bandwidth(streams=streams)
+              if streams > 1 else bw)
+    # fresh slates, one context per slot: every padded slot is one unique
+    # deduped candidate row, so unique_rows == the unpadded row count
+    unique_rows = batch_size * n_cand
     results = {}
     for name, eng in engines.items():
         med = float(np.median(times[name]))
+        # 1-core box: the aggregate IS the per-stream measurement (the auto
+        # policy disables splitting), not an independent remeasure
+        agg_med = (med if agg_engines is engines
+                   else float(np.median(agg_times[name])))
         pps = candidates / med
-        roof = RL.serving_roofline(eng, rb=rb, nb=nb, scenario=name,
-                                   measured_preds_per_s=pps,
-                                   bandwidth_bytes_per_s=bw)
+        roof = RL.serving_roofline(
+            eng, rb=rb, nb=nb, scenario=name,
+            measured_preds_per_s=pps,
+            bandwidth_bytes_per_s=bw,
+            unique_rows=unique_rows,
+            streams=streams,
+            aggregate_measured_preds_per_s=candidates / agg_med,
+            aggregate_bandwidth_bytes_per_s=agg_bw)
         results[name] = {
             "seconds_median_pass": med,
             "us_per_batch": med / n_batches * 1e6,
             "predictions_per_s": pps,
+            "aggregate_predictions_per_s": candidates / agg_med,
             "roofline": roof.to_dict(),
         }
+    for eng in engines.values():
+        eng.close()
+    if agg_engines is not engines:
+        for eng in agg_engines.values():
+            eng.close()
     staged_bpp = results["staged_q8"]["roofline"]["bytes_per_prediction"]
     fused_bpp = results["fused_q8"]["roofline"]["bytes_per_prediction"]
     return {
         "traffic": {"hash_space": v, "n_cand": n_cand,
                     "batch_size": batch_size, "n_batches": n_batches,
-                    "passes": passes, "bucket": [rb, nb]},
+                    "passes": passes, "bucket": [rb, nb],
+                    "unique_rows": unique_rows},
         "bandwidth_bytes_per_s": bw,
+        "streams": streams,
+        "aggregate_bandwidth_bytes_per_s": agg_bw,
         **results,
         "fused_vs_staged_dev": dev_vs_staged,
         "fused_logit_tolerance": fused_tol,

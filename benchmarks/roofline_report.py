@@ -26,7 +26,11 @@ Arms:
 
 ``BENCH_serving.json``'s ``roofline`` scenario carries the larger
 gather-heavy sweep; this module is the quick always-runnable table
-(``benchmarks/run.py --smoke`` includes it).
+(``benchmarks/run.py --smoke`` includes it). The table carries a *workers*
+column and both fractions: per-stream (single-stream engine vs one copy
+thread's bandwidth) and aggregate (the parallel pipeline at the auto worker
+count vs the measured multi-stream bandwidth); on a 1-core box the two
+collapse and the aggregate mirrors the per-stream number.
 """
 from __future__ import annotations
 
@@ -40,7 +44,7 @@ from benchmarks._util import row
 from repro.common.config import FFMConfig
 from repro.core import deepffm
 from repro.launch import roofline as RL
-from repro.serving.engine import InferenceEngine
+from repro.serving.engine import InferenceEngine, auto_parallel_workers
 
 CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**15, k=8)
 
@@ -89,48 +93,71 @@ def build_serving_reports(quick: bool = False) -> List[RL.ServingRoofline]:
     meas = [make_batch() for _ in range(n_batches)]
     candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
     bw = RL.measure_cpu_bandwidth()
+    streams = auto_parallel_workers()
+    agg_bw = RL.measure_cpu_bandwidth(streams=streams) if streams > 1 else bw
     reports = []
     for arm in _ARMS:
+        # per-stream measurement: single-stream engine vs 1-thread bandwidth
         eng = _make_engine(arm, params)
+        eng.parallel = 1
         for reqs in warm:  # compile + cache fill
             eng.score_batch(reqs)
         t0 = time.perf_counter()
         for reqs in meas:
             eng.score_batch(reqs)
         pps = candidates / max(time.perf_counter() - t0, 1e-12)
+        agg_pps = pps
+        if streams > 1:  # aggregate: the parallel pipeline at auto workers
+            eng.parallel = streams
+            for reqs in warm:
+                eng.score_batch(reqs)
+            t0 = time.perf_counter()
+            for reqs in meas:
+                eng.score_batch(reqs)
+            agg_pps = candidates / max(time.perf_counter() - t0, 1e-12)
         rb = eng.plan.bucket(batch_size)
         nb = eng.plan.bucket(n_cand)
         reports.append(RL.serving_roofline(
             eng, rb=rb, nb=nb, scenario=arm, measured_preds_per_s=pps,
-            bandwidth_bytes_per_s=bw))
+            bandwidth_bytes_per_s=bw,
+            unique_rows=batch_size * n_cand,
+            streams=streams,
+            aggregate_measured_preds_per_s=agg_pps,
+            aggregate_bandwidth_bytes_per_s=agg_bw))
+        eng.close()
     return reports
 
 
 def format_table(reports: List[RL.ServingRoofline]) -> str:
     lines = [
-        "| arm | bytes/pred | HLO bytes/call | host bytes/call "
-        "| bound preds/s | measured preds/s | fraction |",
-        "|---|---|---|---|---|---|---|",
+        "| arm | workers | bytes/pred | HLO bytes/call | host bytes/call "
+        "| bound preds/s | measured preds/s | fraction | agg fraction |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in reports:
+        agg = r.aggregate_fraction_of_bound
         lines.append(
-            f"| {r.scenario} | {r.bytes_per_prediction:.0f} "
+            f"| {r.scenario} | {r.streams} | {r.bytes_per_prediction:.0f} "
             f"| {r.hlo_bytes_per_call:.0f} | {r.host_bytes_per_call:.0f} "
             f"| {r.bound_preds_per_s:.0f} | {r.measured_preds_per_s:.0f} "
-            f"| {r.fraction_of_bound:.3f} |")
+            f"| {r.fraction_of_bound:.3f} "
+            f"| {'n/a' if agg is None else f'{agg:.3f}'} |")
     return "\n".join(lines)
 
 
 def run(quick: bool = False):
     rows = []
     for r in build_serving_reports(quick=quick):
+        agg = r.aggregate_fraction_of_bound
         rows.append(row(
             f"roofline/serving_{r.scenario}",
             1e6 / max(r.measured_preds_per_s, 1e-12),
             f"bytes/pred={r.bytes_per_prediction:.0f} "
             f"bound={r.bound_preds_per_s:.0f} "
             f"measured={r.measured_preds_per_s:.0f} "
-            f"frac={r.fraction_of_bound:.3f}",
+            f"frac={r.fraction_of_bound:.3f} "
+            f"workers={r.streams} "
+            f"agg_frac={'n/a' if agg is None else f'{agg:.3f}'}",
         ))
     return rows
 

@@ -135,16 +135,53 @@ def _packed_view(flat: np.ndarray):
     return flat
 
 
-def gather_codes_np(table: np.ndarray, idx: np.ndarray) -> np.ndarray:
+def gather_codes_np(table: np.ndarray, idx: np.ndarray,
+                    out: Optional[np.ndarray] = None) -> np.ndarray:
     """Host packed row gather: ``table[idx]`` via ``np.take`` on the widest
     aligned word view. ``table``: (V, ...) any dtype; returns
-    ``idx.shape + table.shape[1:]`` in the table dtype."""
+    ``idx.shape + table.shape[1:]`` in the table dtype.
+
+    ``out`` (optional) is a caller-provided destination of exactly that
+    shape/dtype: the gather then writes straight into it (``np.take(...,
+    out=...)`` on the packed view) instead of allocating — the parallel
+    scoring pipeline double-buffers per-chunk gather output this way, so
+    a burst reuses two steady buffers per worker instead of allocating a
+    fresh block per chunk."""
     table = np.ascontiguousarray(table)
     idx = np.asarray(idx)
     flat = table.reshape(table.shape[0], -1)
     packed = _packed_view(flat)
-    g = np.take(packed, idx.reshape(-1), axis=0)
-    return g.view(table.dtype).reshape(idx.shape + table.shape[1:])
+    if out is None:
+        g = np.take(packed, idx.reshape(-1), axis=0)
+        return g.view(table.dtype).reshape(idx.shape + table.shape[1:])
+    want = idx.shape + table.shape[1:]
+    if out.shape != want or out.dtype != table.dtype:
+        raise ValueError(
+            f"out must be {want} {table.dtype}, got {out.shape} {out.dtype}")
+    if idx.size == 0:
+        return out
+    dst = np.ascontiguousarray(out)  # no-op for a well-formed buffer
+    np.take(packed, idx.reshape(-1), axis=0,
+            out=_packed_view(dst.reshape(idx.size, -1)))
+    if dst is not out:  # caller passed a non-contiguous view: copy back
+        out[...] = dst
+    return out
+
+
+def gather_codes_chunked(table: np.ndarray, idx: np.ndarray,
+                         out: np.ndarray, row_chunk: int = 8192) -> np.ndarray:
+    """Chunked variant of :func:`gather_codes_np` into a caller buffer:
+    gathers ``row_chunk`` index rows at a time so the transient packed view
+    never exceeds the chunk (keeps the working set cache-resident when one
+    worker's block is large). ``idx`` must be at least 1-D; ``out`` has
+    shape ``idx.shape + table.shape[1:]`` in the table dtype."""
+    idx = np.asarray(idx)
+    flat_idx = idx.reshape(-1)
+    flat_out = out.reshape((flat_idx.size,) + table.shape[1:])
+    for lo in range(0, flat_idx.size, max(1, row_chunk)):
+        hi = min(lo + row_chunk, flat_idx.size)
+        gather_codes_np(table, flat_idx[lo:hi], out=flat_out[lo:hi])
+    return out
 
 
 def gather_dequant_np(qtable, idx: np.ndarray) -> np.ndarray:

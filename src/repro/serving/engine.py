@@ -99,6 +99,29 @@ composition point; each component maps to a paper section:
   forward composes per-shard partial sums in a fixed order — fusing inside
   shards would break the bit-invariance-across-shard-counts contract).
 
+**Parallel scoring (multi-core microbatch execution).** The paper's 300M+
+predictions/s saturates *every* core of a CPU box; a single-stream
+``score_batch`` bounds one. ``InferenceEngine(parallel=N)`` splits each
+microbatch's deduped candidate chunks into contiguous per-worker spans,
+each padded to its own power-of-two row bucket (a subset of the buckets
+:meth:`InferenceEngine.warmup` already compiles, so the compiled shape set
+stays closed), and pipelines them through a persistent engine-owned
+:class:`ScoringPool`: pool threads run the numpy host pre-gather for span
+*k+1* (into recycled double buffers) while the caller thread executes the
+GIL-releasing Pallas/jit call for span *k*. **Bit-parity contract**: spans
+are dispatched and reassembled in fixed chunk order, every jitted
+forward's per-row output is invariant to the row-bucket size, and all
+spans score against the batch's one resolved ``(params, generation)``
+context snapshot — so the scattered scores are bit-identical to the
+single-stream path for every worker count. The auto policy
+(:func:`auto_parallel_workers`, ``parallel=None``) turns the pipeline off
+on 1-core boxes and otherwise uses one worker per core capped at 4. A
+:class:`~repro.serving.shard_router.ShardRouter` threads **one** shared
+pool through all its shards (``scoring_pool=``) instead of letting N
+shards spawn M pools whose host gathers contend on the GIL; shards and the
+router itself pin ``parallel=1`` — the router's parallelism *is* the shard
+fan-out.
+
 Request batching: candidate counts are padded to power-of-two buckets and
 multiple requests are stacked into one jitted call
 (:meth:`InferenceEngine.score_batch`), so the forward compiles once per
@@ -113,9 +136,11 @@ void view — no per-row Python hashing on the hot path.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import Counter, deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -174,6 +199,25 @@ class ServeStats:
         # batch wall time is each request's latency; maxlen evicts the oldest
         self._latencies_s.extend([seconds] * requests)
 
+    def merge(self, other: "ServeStats") -> None:
+        """Fold another accumulator into this one. The parallel scoring path
+        accumulates a batch's counters (including per-worker contributions)
+        into a private :class:`ServeStats` outside any lock and merges it here
+        **once per caller-visible batch** under the engine lock — chunk
+        sub-dispatches never touch the shared object, so splitting a batch
+        across workers adds no lock traffic and, critically, no extra
+        ``record`` calls: latency percentiles count requests, not padded
+        engine-internal chunks."""
+        self.requests += other.requests
+        self.candidates += other.candidates
+        self.rows_scored += other.rows_scored
+        self.seconds += other.seconds
+        self.updates_applied += other.updates_applied
+        self.update_bytes += other.update_bytes
+        self.ctx_partials_full += other.ctx_partials_full
+        self.ctx_tail_fields += other.ctx_tail_fields
+        self._latencies_s.extend(other._latencies_s)
+
     @property
     def dedup_saved(self) -> int:
         """Candidate rows the cross-request dedup avoided scoring."""
@@ -200,6 +244,93 @@ class ServeStats:
     @property
     def p99_ms(self) -> float:
         return self.latency_ms(99.0)
+
+
+# ---------------------------------------------------------------------------
+# Parallel scoring pool
+# ---------------------------------------------------------------------------
+
+def auto_parallel_workers(cpu_count: Optional[int] = None) -> int:
+    """Auto policy for the engine's ``parallel=`` knob: 1 (off) on a
+    single-core box — splitting a burst there only adds dispatch overhead
+    with no second core to overlap on — otherwise one worker per core capped
+    at 4 (the chunk counts real microbatches produce rarely reward more, and
+    XLA's own intra-op threads want the remaining cores)."""
+    n = (os.cpu_count() if cpu_count is None else cpu_count) or 1
+    return 1 if n < 2 else min(int(n), 4)
+
+
+class ScoringPool:
+    """Persistent worker pool + buffer recycler for the parallel pipeline.
+
+    One pool per engine (created lazily on the first split batch, reused for
+    every burst; a :class:`~repro.serving.shard_router.ShardRouter` instead
+    constructs its shards around one shared pool so N shards do not each spin
+    up M threads). Two jobs:
+
+    * :meth:`run` pipelines a burst's chunk spans: *prepare* callables (the
+      numpy host pre-gather + padding for span *k+1*) execute on pool threads
+      while the caller thread runs the *dispatch* (the Pallas/jit call) for
+      span *k* — the jit execution releases the GIL inside XLA, so host
+      ``np.take`` work genuinely overlaps kernel time. The look-ahead window
+      is ``workers + 1`` spans so prepares never run unboundedly ahead of the
+      buffers backing them. Dispatches always happen on the caller thread in
+      fixed span order — that ordering is half of the engine's bit-parity
+      contract (the other half is bucket-aligned span padding).
+    * :meth:`acquire`/:meth:`release` recycle packed gather buffers
+      (:func:`repro.kernels.row_gather.ops.gather_codes_np` ``out=``): the
+      free list keeps at most two buffers per worker per shape — the
+      double-buffer depth the pipeline needs — so a steady burst stops
+      allocating fresh multi-MB code blocks per chunk.
+    """
+
+    def __init__(self, workers: int):
+        self.workers = max(1, int(workers))
+        self._ex = ThreadPoolExecutor(max_workers=self.workers,
+                                      thread_name_prefix="scoring-pool")
+        self._buffers: Dict[tuple, list] = {}
+        self._buf_lock = threading.Lock()
+
+    def acquire(self, shape: tuple, dtype) -> np.ndarray:
+        """A recycled gather buffer of this shape/dtype (fresh if none free)."""
+        key = (tuple(shape), np.dtype(dtype).str)
+        with self._buf_lock:
+            free = self._buffers.get(key)
+            if free:
+                return free.pop()
+        return np.empty(shape, dtype)
+
+    def release(self, buf: np.ndarray) -> None:
+        """Return a buffer to the free list once its dispatch has completed
+        (``block_until_ready`` has run, so XLA holds no alias into it).
+        Extras beyond the double-buffer depth fall back to the allocator."""
+        key = (tuple(buf.shape), buf.dtype.str)
+        with self._buf_lock:
+            free = self._buffers.setdefault(key, [])
+            if len(free) < 2 * self.workers:
+                free.append(buf)
+
+    def submit(self, fn, *args):
+        """Raw executor submit — the ShardRouter's scatter-gather fan-out."""
+        return self._ex.submit(fn, *args)
+
+    def run(self, prepares: Sequence, dispatch) -> list:
+        """Pipeline ``prepares`` (pool threads, bounded look-ahead) against
+        ``dispatch`` (caller thread, fixed order); returns dispatch results
+        in prepare order."""
+        window = self.workers + 1
+        pending: deque = deque()
+        out = []
+        for prep in prepares:
+            pending.append(self._ex.submit(prep))
+            if len(pending) >= window:
+                out.append(dispatch(pending.popleft().result()))
+        while pending:
+            out.append(dispatch(pending.popleft().result()))
+        return out
+
+    def shutdown(self) -> None:
+        self._ex.shutdown(wait=True)
 
 
 # ---------------------------------------------------------------------------
@@ -528,6 +659,13 @@ class InferenceEngine:
       staged-path memory traffic. Engines with explicitly pinned
       ``host_gather`` keep the staged path unless ``fused=True`` is asked
       for, so bit-exactness expectations against in-trace engines survive.
+    * ``parallel`` — worker count for the parallel scoring pipeline (see the
+      module docstring's "Parallel scoring" section). ``None`` (default)
+      auto-resolves via :func:`auto_parallel_workers`: off (1) on 1-core
+      boxes, else one worker per core capped at 4. Any value keeps output
+      bit-identical to the single-stream path; ``scoring_pool`` optionally
+      injects a shared :class:`ScoringPool` (the ShardRouter threads one
+      pool through all its shards).
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -538,7 +676,9 @@ class InferenceEngine:
                  quantized: bool = False,
                  prefix_depths: Optional[Sequence[int]] = None,
                  host_gather: Optional[bool] = None,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 parallel: Optional[int] = None,
+                 scoring_pool: Optional[ScoringPool] = None):
         from repro.kernels.row_gather import ops as rg_ops
 
         host_auto = host_gather is None
@@ -564,6 +704,10 @@ class InferenceEngine:
         self.hits = 0
         self.misses = 0
         self.stats = ServeStats()
+        self.parallel = (auto_parallel_workers() if parallel is None
+                         else max(1, int(parallel)))
+        self._scoring_pool = scoring_pool
+        self._owns_pool = scoring_pool is None
         self._pipe: Optional[UpdatePipe] = None
         self._pipe_lock = threading.Lock()
         if warmup_buckets is not None and params is not None:
@@ -1074,46 +1218,187 @@ class InferenceEngine:
         row_of_u = chunk_base[u_group] + pos // nb
         slot_of_u = pos % nb
 
-        rb = self.plan.bucket(n_chunks, minimum=1)
-        ki_b = np.zeros((rb, nb, fcand), np.int32)
-        kv_b = np.zeros((rb, nb, fcand), np.float32)
-        ki_b[row_of_u, slot_of_u] = ki_all[first]
-        kv_b[row_of_u, slot_of_u] = kv_all[first]
+        # unpadded (n_chunks, nb, Fcand) candidate blocks, built once; the
+        # span scorer pads each contiguous chunk span to its own power-of-two
+        # row bucket (a single span of every chunk reproduces the padded
+        # single-stream call exactly)
+        ki_c = np.zeros((n_chunks, nb, fcand), np.int32)
+        kv_c = np.zeros((n_chunks, nb, fcand), np.float32)
+        ki_c[row_of_u, slot_of_u] = ki_all[first]
+        kv_c[row_of_u, slot_of_u] = kv_all[first]
+        grids_c = self._compact_grids(params, ki_all[first], row_of_u,
+                                      slot_of_u, n_chunks, nb, fcand)
 
         chunk_group = np.repeat(np.arange(n_groups), chunks_per_g)
         chunk_state = [group_state[g] for g in chunk_group]
-        stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *chunk_state)
-        if rb > n_chunks:
-            stacked = jax.tree_util.tree_map(
-                lambda x: np.concatenate(
-                    [x, np.zeros((rb - n_chunks,) + x.shape[1:], x.dtype)]),
-                stacked)
-        fwd = self._candidates_forward(params, stacked, ki_b, kv_b)
+        out, ctx_dots = self._score_spans(params, chunk_state, ki_c, kv_c,
+                                          grids_c, self._plan_spans(n_chunks))
         if self.fused:
-            out, ctx_dots = jax.block_until_ready(fwd)
             self._insert_fused_misses(u_ctxs, states, insert_info,
-                                      chunk_group, u_of, np.asarray(ctx_dots),
-                                      generation)
-            out = np.asarray(out)
-        else:
-            out = np.asarray(jax.block_until_ready(fwd))  # one transfer, then
+                                      chunk_group, u_of, ctx_dots, generation)
         # plain numpy scatter-back (no per-request device gathers)
         flat = out[row_of_u[inverse], slot_of_u[inverse]]
         offs = np.concatenate([[0], np.cumsum(counts)])
         results = [flat[offs[i]:offs[i + 1]] for i in range(len(reqs))]
+        # per-batch stats accumulate outside the lock and merge in one shot:
+        # one record per caller-visible batch no matter how many chunk spans
+        # the parallel pipeline dispatched (see ServeStats.merge)
+        batch_stats = ServeStats()
+        batch_stats.rows_scored = n_rows
+        batch_stats.record(time.perf_counter() - t0, total, requests=len(reqs))
         with self._lock:
-            self.stats.rows_scored += n_rows
-            self.stats.record(time.perf_counter() - t0, total,
-                              requests=len(reqs))
+            self.stats.merge(batch_stats)
         return results
 
-    def _forward_args(self, params, stacked, ki_b, kv_b):
+    # -- parallel scoring pipeline ------------------------------------------
+    def _get_pool(self) -> ScoringPool:
+        """The engine's scoring pool, created lazily on the first split batch
+        (or injected shared via ``scoring_pool=``)."""
+        if self._scoring_pool is None:
+            with self._lock:
+                if self._scoring_pool is None:
+                    self._scoring_pool = ScoringPool(self.parallel)
+        return self._scoring_pool
+
+    def close(self) -> None:
+        """Shut down the engine-owned scoring pool (a shared injected pool is
+        its owner's to close). Idempotent; the engine keeps serving — a later
+        split batch just lazily recreates the pool."""
+        pool, self._scoring_pool = self._scoring_pool, None
+        if pool is not None and self._owns_pool:
+            pool.shutdown()
+        self._owns_pool = True
+
+    def _plan_spans(self, n_chunks: int) -> List[Tuple[int, int]]:
+        """Split ``[0, n_chunks)`` into contiguous near-equal per-worker
+        spans. Each span pads to ``plan.bucket(span_len)`` — a power-of-two
+        no larger than the full batch's row bucket, so the compiled shape
+        set stays the closed one :meth:`warmup` enumerates."""
+        w = self.parallel
+        if w <= 1 or n_chunks <= 1:
+            return [(0, n_chunks)]
+        w = min(w, n_chunks)
+        base, rem = divmod(n_chunks, w)
+        spans, lo = [], 0
+        for i in range(w):
+            hi = lo + base + (1 if i < rem else 0)
+            spans.append((lo, hi))
+            lo = hi
+        return spans
+
+    def _compact_grids(self, params, ki_u, row_of_u, slot_of_u,
+                       n_chunks: int, nb: int, fcand: int):
+        """(scale, zero) dequant grids for the padded block, gathered **once
+        per unique deduped candidate row** and broadcast by the same
+        ``(row, slot)`` scatter the codes use — the staged/fused q8 forwards
+        previously re-gathered the f32 grids per padded row
+        (``scale[ki_b]``), the measured per-prediction byte waste ROADMAP
+        open item 2 names. Padded slots keep grid zeros (their dequantized
+        rows become exact zeros; per-slot logits are independent and padded
+        outputs are never read). ``None`` on engines whose forward takes no
+        host-side grids."""
+        if not self.host_gather:
+            return None
+        if not Q.is_row_quantized(params["ffm"]["emb"]):
+            return None
+        emb_h, _ = self._host_weights(params)
+        s_c = np.zeros((n_chunks, nb, fcand), np.float32)
+        z_c = np.zeros((n_chunks, nb, fcand), np.float32)
+        s_c[row_of_u, slot_of_u] = emb_h["scale"][ki_u]
+        z_c[row_of_u, slot_of_u] = emb_h["zero"][ki_u]
+        return s_c, z_c
+
+    def _score_spans(self, params, chunk_state, ki_c, kv_c, grids_c, spans):
+        """Score contiguous chunk spans and reassemble ``(logits (n_chunks,
+        nb), ctx_dots | None)`` in fixed chunk order — the parallel pipeline's
+        core. One span runs inline (exactly the single-stream path). Several
+        spans run through the :class:`ScoringPool`: the host pre-gather for
+        span *k+1* (on pool threads, into recycled double buffers) overlaps
+        the GIL-releasing jit/Pallas dispatch for span *k* (on this thread).
+        Because every span is padded to its own bucket, dispatched in order,
+        and sliced back to its true length, the reassembled block is
+        bit-identical for every worker count: per-row outputs of all the
+        jitted forwards are invariant to the row-bucket size, and all spans
+        share this batch's one resolved context snapshot."""
+        n_chunks = ki_c.shape[0]
+        pool = self._get_pool() if len(spans) > 1 else None
+        codes_tbl = None
+        if pool is not None and self.host_gather:
+            emb = params["ffm"]["emb"]
+            emb_h, _ = self._host_weights(params)
+            if Q.is_row_quantized(emb):
+                codes_tbl = emb_h["codes"]
+            elif not isinstance(emb, dict):
+                codes_tbl = emb_h
+
+        def pad_rows(x, rb_s, m):
+            if rb_s == m:
+                return x
+            return np.concatenate(
+                [x, np.zeros((rb_s - m,) + x.shape[1:], x.dtype)])
+
+        def prepare(lo, hi):
+            m = hi - lo
+            rb_s = self.plan.bucket(m, minimum=1)
+            ki_b = pad_rows(ki_c[lo:hi], rb_s, m)
+            kv_b = pad_rows(kv_c[lo:hi], rb_s, m)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs), *chunk_state[lo:hi])
+            if rb_s > m:
+                stacked = jax.tree_util.tree_map(
+                    lambda x: pad_rows(x, rb_s, m), stacked)
+            grids = None
+            if grids_c is not None:
+                grids = (pad_rows(grids_c[0][lo:hi], rb_s, m),
+                         pad_rows(grids_c[1][lo:hi], rb_s, m))
+            out_codes = None
+            if codes_tbl is not None:
+                out_codes = pool.acquire(
+                    ki_b.shape + codes_tbl.shape[1:], codes_tbl.dtype)
+            fn_args = self._forward_args(params, stacked, ki_b, kv_b,
+                                         grids=grids, out_codes=out_codes)
+            return fn_args, m, out_codes
+
+        def dispatch(prepared):
+            (fn, args), m, buf = prepared
+            fwd = jax.block_until_ready(fn(*args))
+            if buf is not None:
+                pool.release(buf)  # safe: the computation has completed
+            if self.fused:
+                out_s, dots_s = fwd
+                return np.asarray(out_s)[:m], np.asarray(dots_s)[:m]
+            return np.asarray(fwd)[:m], None
+
+        if pool is None:
+            lo, hi = spans[0]
+            parts = [dispatch(prepare(lo, hi))]
+        else:
+            parts = pool.run([partial(prepare, lo, hi) for lo, hi in spans],
+                             dispatch)
+        if len(parts) == 1:
+            out, dots = parts[0]
+        else:
+            out = np.concatenate([p[0] for p in parts])
+            dots = (np.concatenate([p[1] for p in parts])
+                    if self.fused else None)
+        assert out.shape[0] == n_chunks
+        return out, dots
+
+    def _forward_args(self, params, stacked, ki_b, kv_b, grids=None,
+                      out_codes=None):
         """Pick the jitted forward for one padded candidate block and build
         its argument tuple — the host pre-gather (candidate codes/rows + LR
         sums via packed numpy gather, immune to the XLA gather cliff)
         happens here. Shared by :meth:`_candidates_forward` (calls it) and
         :meth:`lower_candidates_forward` (lowers it for the roofline
-        report), so the analyzed HLO is exactly the deployed forward."""
+        report), so the analyzed HLO is exactly the deployed forward.
+
+        ``grids`` is the compact-gathered padded ``(scale, zero)`` pair
+        :meth:`score_batch` builds once per unique deduped row
+        (:meth:`_compact_grids`); ``None`` falls back to the per-padded-row
+        table gather (warmup dummies, ``score_uncached``). ``out_codes`` is
+        an optional caller-provided destination for the packed code/row
+        gather — the scoring pool's recycled double buffer."""
         emb = params["ffm"]["emb"]
         if self.host_gather:
             from repro.kernels.row_gather import ops as rg_ops
@@ -1121,30 +1406,32 @@ class InferenceEngine:
             emb_h, lr_h = self._host_weights(params)
             lr_cand = (ffm.gather_lr_np(lr_h, ki_b)
                        * kv_b).sum(-1).astype(np.float32)
-            if self.fused:
-                lr_b = np.float32(np.asarray(params["lr"]["b"], np.float32))
-                if Q.is_row_quantized(emb):
-                    qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
-                    return fused_candidates_forward_q8, (
-                        self.cfg, lr_b, stacked, qc, emb_h["scale"][ki_b],
-                        emb_h["zero"][ki_b], kv_b, lr_cand)
-                ec = rg_ops.gather_codes_np(emb_h, ki_b)
-                return fused_candidates_forward_rows, (
-                    self.cfg, lr_b, stacked,
-                    np.asarray(ec, np.float32), kv_b, lr_cand)
             if Q.is_row_quantized(emb):
-                qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b)
-                s = emb_h["scale"][ki_b]
-                z = emb_h["zero"][ki_b]
+                if grids is None:
+                    grids = (emb_h["scale"][ki_b], emb_h["zero"][ki_b])
+                s, z = grids
+                qc = rg_ops.gather_codes_np(emb_h["codes"], ki_b,
+                                            out=out_codes)
+                if self.fused:
+                    lr_b = np.float32(
+                        np.asarray(params["lr"]["b"], np.float32))
+                    return fused_candidates_forward_q8, (
+                        self.cfg, lr_b, stacked, qc, s, z, kv_b, lr_cand)
                 return batched_candidates_forward_q8, (
                     self.cfg, self.model, self.backend,
                     self._head_params(params), stacked, qc, s, z, kv_b,
                     lr_cand)
+            if self.fused:
+                lr_b = np.float32(np.asarray(params["lr"]["b"], np.float32))
+                ec = rg_ops.gather_codes_np(emb_h, ki_b, out=out_codes)
+                return fused_candidates_forward_rows, (
+                    self.cfg, lr_b, stacked,
+                    np.asarray(ec, np.float32), kv_b, lr_cand)
             if not isinstance(emb, dict):
                 # f32 table above the cliff: same packed pre-gather, whole
                 # rows instead of codes (the gather moves identical bytes;
                 # only the in-jit dequant disappears)
-                ec = rg_ops.gather_codes_np(emb_h, ki_b)
+                ec = rg_ops.gather_codes_np(emb_h, ki_b, out=out_codes)
                 return batched_candidates_forward_rows, (
                     self.cfg, self.model, self.backend,
                     self._head_params(params), stacked,
@@ -1152,11 +1439,12 @@ class InferenceEngine:
         return batched_candidates_forward, (
             self.cfg, self.model, self.backend, params, stacked, ki_b, kv_b)
 
-    def _candidates_forward(self, params, stacked, ki_b, kv_b):
+    def _candidates_forward(self, params, stacked, ki_b, kv_b, grids=None):
         """Route one padded candidate block through the right jitted forward
         (see :meth:`_forward_args`). Fused engines return ``(logits,
         ctx_dots)``; staged ones return logits."""
-        fn, args = self._forward_args(params, stacked, ki_b, kv_b)
+        fn, args = self._forward_args(params, stacked, ki_b, kv_b,
+                                      grids=grids)
         return fn(*args)
 
     def _warmup_dummies(self, rb: int, nb: int):
@@ -1197,14 +1485,22 @@ class InferenceEngine:
         fn, args = self._forward_args(params, cached, ki_b, kv_b)
         return fn.lower(*args)
 
-    def host_gather_bytes(self, rb: int, nb: int) -> int:
+    def host_gather_bytes(self, rb: int, nb: int,
+                          unique_rows: Optional[int] = None) -> int:
         """Analytic bytes the *host* pre-gather stage moves per forward call
         at one (rb, nb) bucket — the traffic the jit's HLO cannot see, added
         to the HLO byte count for the serving roofline. Counts read + write
         of every gathered block (numpy ``take`` copies): candidate embedding
-        rows (int8 codes + per-row grids on a quantized engine, f32 rows
-        otherwise), LR weights, and the index reads. An engineering
-        estimate of the dominant streams, not a hardware counter."""
+        rows (int8 codes, f32 rows otherwise), LR weights, and the index
+        reads. On a quantized engine the f32 ``(scale, zero)`` grids are
+        gathered once per **unique** deduped candidate row (``unique_rows``,
+        pre-padding; defaults to the padded count — the no-dedup bound) and
+        broadcast
+        into the padded block at scatter time, so they cost one read+write
+        per unique row plus one write per padded slot — the compact-grid
+        satellite's saving over the old per-padded-row grid gather. An
+        engineering estimate of the dominant streams, not a hardware
+        counter."""
         self._require_params()
         cfg = self.cfg
         fcand = cfg.n_fields - cfg.context_fields
@@ -1212,14 +1508,20 @@ class InferenceEngine:
         if not self.host_gather:
             return 0
         emb = self.params["ffm"]["emb"]
-        if Q.is_row_quantized(emb):
-            row_bytes = cfg.n_fields * cfg.k + 2 * 4   # codes + (scale, zero)
-        else:
-            row_bytes = cfg.n_fields * cfg.k * 4
         lr_w = self.params["lr"]["w"]
         lr_bytes = 1 + 2 * 4 if Q.is_block_quantized(lr_w) else 4
         idx_bytes = 4
-        return int(rows * (2 * (row_bytes + lr_bytes) + idx_bytes))
+        if Q.is_row_quantized(emb):
+            row_bytes = cfg.n_fields * cfg.k            # codes only
+            grid_bytes = 2 * 4                          # f32 (scale, zero)
+            u_rows = (rows if unique_rows is None
+                      else int(unique_rows) * fcand)
+            total = rows * (2 * (row_bytes + lr_bytes) + idx_bytes)
+            total += grid_bytes * (2 * u_rows + rows)   # compact R+W + scatter
+        else:
+            row_bytes = cfg.n_fields * cfg.k * 4
+            total = rows * (2 * (row_bytes + lr_bytes) + idx_bytes)
+        return int(total)
 
     _warmed_requests: Optional[int] = None  # set by warmup(); clamps prewarm
     _warmed_buckets: Optional[Tuple[int, int]] = None  # rotate() re-warms these
@@ -1281,7 +1583,8 @@ class InferenceEngine:
             cache_entries=self.cache_entries,
             min_bucket=self.plan.min_bucket, dedup=self.dedup,
             quantized=self.quantized, prefix_depths=depths,
-            host_gather=self.host_gather, fused=self.fused)
+            host_gather=self.host_gather, fused=self.fused,
+            parallel=self.parallel)
         succ.weights_version = self.weights_version
         # adopt the published pytree by reference (already-quantized tables
         # must not re-walk the quantizer) and keep the generation counter

@@ -68,7 +68,6 @@ contributions, ``degraded`` flips, and the request path never raises.
 from __future__ import annotations
 
 import threading
-from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
@@ -81,7 +80,8 @@ from repro.core import deepffm, ffm
 from repro.core import quantization as Q
 from repro.kernels.row_gather import ops as rg_ops
 from repro.launch.topology import ShardTopology
-from repro.serving.engine import InferenceEngine, _finish_candidates
+from repro.serving.engine import (InferenceEngine, ScoringPool,
+                                  _finish_candidates)
 
 
 # ---------------------------------------------------------------------------
@@ -222,10 +222,14 @@ class ShardRouter(InferenceEngine):
     cross-request dedup, bucketing, warmup, and stats are inherited and
     operate on the **assembled view** — virtual params whose gather-table
     leaves are :class:`ShardedRows`/:class:`ShardedLR` views over the live
-    shards. Only ``_candidates_forward`` is replaced: candidate entries are
-    compacted per owning shard, partial-scored on the worker pool, scattered,
-    and reduced (the per-shard engines hold the resident tables and ingest
-    update frames; their own scoring paths serve direct/debug traffic).
+    shards. Only the ``_forward_args`` hook is replaced: candidate entries
+    are compacted per owning shard, partial-scored on the fleet's one shared
+    :class:`~repro.serving.engine.ScoringPool`, scattered, and reduced (the
+    per-shard engines hold the resident tables and ingest update frames;
+    their own scoring paths serve direct/debug traffic). Router and shards
+    pin ``parallel=1``: the router's parallelism is the shard fan-out
+    itself, and nesting span-splitting inside it would only multiply GIL
+    contention.
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -237,18 +241,24 @@ class ShardRouter(InferenceEngine):
                  prefix_depths: Optional[Sequence[int]] = None,
                  max_workers: Optional[int] = None):
         self.topology = ShardTopology.build(cfg, model, n_shards)
+        # ONE pool for the whole fleet: the router's scatter-gather fan-out
+        # submits its per-shard partial tasks here, and every shard engine is
+        # constructed around the same pool with parallel=1 — N shards never
+        # spawn N thread pools whose host gathers contend on the GIL, and
+        # the router's parallelism *is* the shard fan-out (span-splitting the
+        # replaced forward would sit inside the compacted-entry-bucket bit
+        # contract for no extra concurrency)
+        self._pool = ScoringPool(max_workers or n_shards)
         self._shards: List[Optional[InferenceEngine]] = [
             InferenceEngine(self.topology.shard_cfg(s), model,
                             backend=backend, quantized=quantized,
                             cache_entries=64, prefix_stride=None,
-                            host_gather=False)
+                            host_gather=False, parallel=1,
+                            scoring_pool=self._pool)
             for s in range(n_shards)]
         self.degraded = False
         self._fleet_lock = threading.Lock()
         self._fleet_vector: Optional[Tuple] = None
-        self._pool = ThreadPoolExecutor(
-            max_workers=max_workers or n_shards,
-            thread_name_prefix="shard-router")
         # entry->pair-position map: xc pairs are (i ctx, j cand); the entry
         # (r, n, j) contributes one term per context field i, landing at the
         # xc position of pair (i, f0+j)
@@ -263,7 +273,8 @@ class ShardRouter(InferenceEngine):
                          cache_entries=cache_entries, min_bucket=min_bucket,
                          prefix_stride=prefix_stride, dedup=dedup,
                          quantized=False, prefix_depths=prefix_depths,
-                         host_gather=False)
+                         host_gather=False, parallel=1,
+                         scoring_pool=self._pool)
         if params is not None:
             self.install_params(params)
             if warmup_buckets is not None:
@@ -426,7 +437,17 @@ class ShardRouter(InferenceEngine):
                 for s in self._shards]
 
     # -- scoring: scatter partials / gather the reduction --------------------
-    def _candidates_forward(self, params, stacked, ki_b, kv_b):
+    def _forward_args(self, params, stacked, ki_b, kv_b, grids=None,
+                      out_codes=None):
+        """The router's forward *is* the scatter-gather fan-out, so the
+        engine's argument-builder hook returns it wholesale: compaction,
+        per-shard partial scoring on the shared pool, disjoint scatter, and
+        reduction all happen inside the returned callable. ``grids`` /
+        ``out_codes`` are unused — the router's own engine surface never
+        host-gathers (the shards hold the resident tables)."""
+        return self._scatter_gather_forward, (params, stacked, ki_b, kv_b)
+
+    def _scatter_gather_forward(self, params, stacked, ki_b, kv_b):
         cfg = self.cfg
         fc, fcand, k = cfg.context_fields, cfg.n_fields - cfg.context_fields, cfg.k
         rb, nb = ki_b.shape[:2]
@@ -527,6 +548,16 @@ class ShardRouter(InferenceEngine):
                     np.zeros((mb, cfg.n_fields, k), np.float32))
             calls += 1
         return calls
+
+    def close(self) -> None:
+        """Shut down the fleet's shared scoring pool (router + every shard
+        reference the same one). End-of-life: a closed router no longer
+        scores."""
+        self._scoring_pool = None
+        for shard in self._shards:
+            if shard is not None:
+                shard._scoring_pool = None
+        self._pool.shutdown()
 
     # -- oracle --------------------------------------------------------------
     def materialized_params(self):

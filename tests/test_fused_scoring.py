@@ -18,7 +18,13 @@ as the oracle; everything here pins the fused path to it:
 * scoring stays atomic while delta frames stream into the quantized tables;
 * the two hot-path bugfixes riding this PR: ``ServeStats`` latency
   recording is bounded + thread-safe, and the gather-cliff calibration
-  probe runs exactly once under a thread race.
+  probe runs exactly once under a thread race;
+* the parallel scoring pipeline (``parallel=N``): bit-parity with the
+  single-stream engine for every worker count and forward path, parity
+  held at every generation while concurrent callers race streaming delta
+  ingest (no torn ``(params, generation)`` snapshots), span planning /
+  buffer recycling mechanics, and stats recorded once per caller-visible
+  batch regardless of chunk splitting.
 """
 import threading
 import time
@@ -31,7 +37,7 @@ from repro.checkpoint import transfer
 from repro.common.config import FFMConfig
 from repro.core import deepffm
 from repro.core import quantization as Q
-from repro.serving.engine import InferenceEngine, ServeStats
+from repro.serving.engine import InferenceEngine, ScoringPool, ServeStats
 
 CFG = FFMConfig(n_fields=12, context_fields=8, hash_space=2**13, k=4,
                 mlp_hidden=(16,))
@@ -312,3 +318,185 @@ def test_cliff_calibration_probe_runs_once_under_race(monkeypatch):
         t.join()
     assert len(calls) == 1
     assert results == [12345] * 8
+
+
+@pytest.mark.parametrize("quantized,fused",
+                         [(True, True), (True, False), (False, False)])
+def test_parallel_bit_parity_across_worker_counts(quantized, fused):
+    """The parallel pipeline's contract: splitting a batch's chunks across
+    workers must be *bit-identical* to the single-stream engine — per-chunk
+    forwards are row-bucket-invariant and every span shares the batch's one
+    resolved context snapshot, so the only thing parallelism may change is
+    wall-clock. Ragged batches, shared contexts, and an empty slate all ride
+    along; caches evolve identically across arms (fresh engines, same
+    traffic)."""
+    params = _params(9)
+    outs = {}
+    for workers in (1, 2, 4):
+        eng = _engine(params, quantized=quantized, fused=fused,
+                      parallel=workers)
+        assert eng.parallel == workers
+        rng = np.random.default_rng(19)  # identical traffic per arm
+        hot = (rng.integers(0, CFG.hash_space, FC).astype(np.int32),
+               rng.normal(1, 0.25, FC).astype(np.float32))
+        batches = []
+        for n_req, n_cand in [(1, 3), (3, 17), (8, 32), (5, 9)]:
+            batches.append([_req(rng, n_cand, ctx=hot if s % 2 else None)
+                            for s in range(n_req)])
+        batches.append([_req(rng, 4),
+                        (hot[0], hot[1],
+                         np.zeros((0, FCAND), np.int32),
+                         np.zeros((0, FCAND), np.float32))])
+        outs[workers] = [np.asarray(o) for reqs in batches
+                         for o in eng.score_batch(reqs)]
+        eng.close()
+    for workers in (2, 4):
+        assert len(outs[workers]) == len(outs[1])
+        for got, want in zip(outs[workers], outs[1]):
+            np.testing.assert_array_equal(got, want)
+
+
+def test_parallel_scoring_concurrent_callers_while_deltas_stream():
+    """Concurrent ``score_batch`` callers x parallel workers x streaming
+    delta ingest: every batch through the 4-worker engine still scores from
+    exactly one published generation (no torn ``(params, generation)``
+    snapshots across spans — zero emb rows quantize exactly, so a valid
+    score is exactly v * n_fields), and at *every* generation the parallel
+    engine is bit-identical to a single-stream engine fed the same update
+    stream."""
+    versions = [float(3 ** i) for i in range(4)]
+
+    def params_v(v):
+        p = deepffm.init_params(CFG, jax.random.PRNGKey(0), "ffm")
+        p = jax.tree_util.tree_map(lambda x: np.zeros_like(x), p)
+        p["lr"]["w"] = np.full_like(p["lr"]["w"], v)
+        return p
+
+    def make(parallel):
+        eng = InferenceEngine(CFG, "ffm", quantized=True, fused=True,
+                              params=params_v(versions[0]),
+                              parallel=parallel, warmup_buckets=(4, 8))
+        snd = transfer.Sender(mode="raw")
+        updates = [snd.make_update(params_v(v)) for v in versions]
+        eng.update_pipe(snd.manifest, params_v(0.0))
+        return eng, updates
+
+    par, par_updates = make(4)
+    single, single_updates = make(1)
+    assert par.fused and par.parallel == 4 and single.parallel == 1
+    valid = {round(v * CFG.n_fields, 3) for v in versions}
+    errors, stop = [], threading.Event()
+    rng0 = np.random.default_rng(29)
+    parity_reqs = [  # big enough to split across all 4 workers
+        (rng0.integers(0, CFG.hash_space, FC).astype(np.int32),
+         np.ones(FC, np.float32),
+         rng0.integers(0, CFG.hash_space, (12, FCAND)).astype(np.int32),
+         np.ones((12, FCAND), np.float32))
+        for _ in range(6)]
+
+    def scorer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            reqs = []
+            for _ in range(rng.integers(2, 7)):
+                ci = rng.integers(0, CFG.hash_space, FC).astype(np.int32)
+                ki = rng.integers(0, CFG.hash_space,
+                                  (rng.integers(1, 9), FCAND)).astype(np.int32)
+                reqs.append((ci, np.ones(FC, np.float32), ki,
+                             np.ones(ki.shape, np.float32)))
+            outs = par.score_batch(reqs)
+            got = {round(float(x), 3) for o in outs for x in np.asarray(o)}
+            if not got <= valid:
+                errors.append(got - valid)
+            if len(got) > 1:  # one snapshot per batch -> one version per batch
+                errors.append(got)
+
+    threads = [threading.Thread(target=scorer, args=(s,)) for s in (1, 2)]
+    for t in threads:
+        t.start()
+    for gen, (up, us) in enumerate(zip(par_updates, single_updates)):
+        if gen:  # generation 0 is the construction-time params
+            par.submit_update(up)
+            single.submit_update(us)
+            par.update_pipe().flush()
+            single.update_pipe().flush()
+        assert par.generation == single.generation
+        # parity at this generation, while the scorer threads keep hammering
+        want = single.score_batch(parity_reqs)
+        got = par.score_batch(parity_reqs)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        time.sleep(0.02)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:5]
+    assert par.generation == len(versions) - 1
+    par.close()
+    single.close()
+
+
+def test_parallel_stats_record_once_per_caller_batch():
+    """Chunk splitting must not inflate the serving stats: one caller batch
+    of R requests records exactly R requests and R latency samples no matter
+    how many spans the workers scored, and ``ServeStats.merge`` folds the
+    per-batch accumulator without double counting."""
+    params = _params()
+    rng = np.random.default_rng(23)
+    sizes = (3, 9, 17, 5, 12, 2, 8, 1)
+    for workers in (1, 4):
+        eng = _engine(params, quantized=True, fused=True, parallel=workers)
+        reqs = [_req(rng, n) for n in sizes]
+        eng.score_batch(reqs)
+        assert eng.stats.requests == len(sizes)
+        assert len(eng.stats._latencies_s) == len(sizes)
+        assert eng.stats.candidates == sum(sizes)
+        eng.close()
+    a, b = ServeStats(), ServeStats()
+    a.record(0.1, 10, requests=2)
+    a.rows_scored = 7
+    b.record(0.2, 5)
+    b.rows_scored = 3
+    a.merge(b)
+    assert (a.requests, a.candidates, a.rows_scored) == (3, 15, 10)
+    assert a.seconds == pytest.approx(0.3)
+    assert list(a._latencies_s) == [0.1, 0.1, 0.2]
+
+
+def test_parallel_span_planning_and_pool_mechanics():
+    """The deterministic plumbing under the pipeline: near-equal contiguous
+    spans (single span when parallelism can't help), fixed dispatch order
+    from ``ScoringPool.run``, and gather-buffer recycling keyed by shape."""
+    eng = _engine(_params(), quantized=True, fused=True, parallel=4)
+    assert eng._plan_spans(1) == [(0, 1)]
+    assert eng._plan_spans(8) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+    assert eng._plan_spans(5) == [(0, 2), (2, 3), (3, 4), (4, 5)]
+    assert eng._plan_spans(3) == [(0, 1), (1, 2), (2, 3)]
+    eng.close()
+    single = _engine(_params(), quantized=True, fused=True, parallel=1)
+    assert single._plan_spans(8) == [(0, 8)]
+    single.close()
+
+    pool = ScoringPool(2)
+    buf = pool.acquire((4, 3), np.int8)
+    assert buf.shape == (4, 3) and buf.dtype == np.int8
+    pool.release(buf)
+    assert pool.acquire((4, 3), np.int8) is buf  # recycled
+    assert pool.acquire((4, 3), np.float32) is not buf  # keyed by dtype too
+    order = []
+
+    def prep(i):
+        def go():
+            time.sleep(0.002 * (5 - i))  # later preps finish *earlier*
+            order.append(("p", i))
+            return i
+        return go
+
+    def dispatch(i):
+        order.append(("d", i))
+        return i * 10
+
+    assert pool.run([prep(i) for i in range(5)], dispatch) == [
+        0, 10, 20, 30, 40]
+    assert [i for k, i in order if k == "d"] == [0, 1, 2, 3, 4]
+    pool.shutdown()
