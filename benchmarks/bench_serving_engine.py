@@ -41,6 +41,13 @@ Four traffic shapes through one :class:`InferenceEngine` per configuration:
   contract). Core-aware acceptance: the >=1.5x speedup flag is only
   asserted on a multi-core box (``null`` on 1-core CI, where the auto
   policy disables splitting and 1.0x is correct behaviour).
+* ``degraded_serving`` — the fault-tolerant fleet (PR 9): a replicas=2
+  :class:`ShardRouter` with one replica killed mid-traffic vs the same
+  healthy fleet and the replicas=1 baseline — preds/s and p99 per arm, the
+  zero-failed-requests + bit-identical-scores acceptance (promotion, not
+  degradation), the replication-overhead flag (no measurable no-fault
+  regression), and freshness across a forced NACK->resync on a corrupted
+  delta frame (seconds to byte-exact recovery).
 * ``roofline`` — the serving roofline grounded in the engine's *deployed*
   forward: per arm (staged q8 vs fused q8) the compiled candidate-forward
   HLO is lowered at the measured bucket shape and walked for bytes/flops
@@ -85,7 +92,7 @@ CFG = FFMConfig(n_fields=24, context_fields=16, hash_space=2**16, k=8,
 BENCH_FILE = "BENCH_serving.json"
 SCENARIOS = ("results", "overlap_traffic", "quantized_serving",
              "gather_cliff", "sharded_scaling", "parallel_scaling",
-             "roofline")
+             "roofline", "degraded_serving")
 
 
 def _drive(engine: InferenceEngine, reqs, *, uncached: bool = False) -> dict:
@@ -322,6 +329,22 @@ def run(quick: bool = False):
             f"speedup={r['speedup_vs_w1']:.2f}x "
             f"bit_identical={r['bit_identical_to_w1']}"))
 
+    # -- degraded serving: replica kill mid-traffic + forced resync ----------
+    degraded = _degraded_serving_scenario(quick)
+    for name in ("baseline_r1", "healthy_r2", "killed_r2"):
+        r = degraded[name]
+        rows.append(row(
+            f"serving_engine/degraded_{name}", r["us_per_batch"],
+            f"preds/s={r['predictions_per_s']:.0f} "
+            f"p99={r['p99_ms']:.2f}ms "
+            f"vs_baseline={r['pps_vs_baseline']:.2f}x"))
+    rs = degraded["resync"]
+    rows.append(row(
+        "serving_engine/degraded_resync", rs["seconds"] * 1e6,
+        f"secs={rs['seconds']:.3f} fanout={rs['frames_teed']} "
+        f"byte_exact={rs['byte_exact']} "
+        f"nack={'yes' if rs['nack_error'] else 'no'}"))
+
     # -- roofline: staged vs fused q8, bytes/prediction vs preds/s bound -----
     roofline = _roofline_scenario(quick)
     for name in ("staged_q8", "fused_q8"):
@@ -350,7 +373,8 @@ def run(quick: bool = False):
          "gather_cliff": cliff,
          "sharded_scaling": sharded,
          "parallel_scaling": parallel,
-         "roofline": roofline})
+         "roofline": roofline,
+         "degraded_serving": degraded})
     return rows
 
 
@@ -1066,6 +1090,192 @@ def _roofline_scenario(quick: bool) -> dict:
             "fused_fewer_bytes_per_prediction": fused_bpp < staged_bpp,
             "fused_within_staged_tolerance": dev_vs_staged <= fused_tol,
             "fused_within_f32_tolerance": dev_vs_f32 <= pair_tol + fused_tol,
+        },
+    }
+
+
+def _degraded_serving_scenario(quick: bool) -> dict:
+    """Fault-tolerant fleet under a mid-traffic replica kill + forced resync.
+
+    Three arms on identical gather-heavy traffic (the ``sharded_scaling``
+    shape) through quantized 2-shard routers: ``baseline_r1`` (replicas=1 —
+    the PR 8 no-fault configuration), ``healthy_r2`` (replicas=2, hedging
+    parked), and ``killed_r2`` (replicas=2 with a deterministic
+    :class:`FaultPlan` that kills shard 0's serving replica halfway through
+    the bit-identity capture). Acceptance: the kill costs **zero failed
+    requests** — no degraded responses, no failovers, scores bit-identical
+    across all three arms at every batch (promotion of the byte-identical
+    sibling, not degradation) — and replication itself costs no measurable
+    throughput (healthy replicas=2 preds/s within tolerance of the
+    replicas=1 baseline). The timed passes then report preds/s + p99 per
+    arm, with ``killed_r2`` measured *after* the kill (the promoted-sibling
+    steady state).
+
+    The ``resync`` section measures freshness across a forced recovery: a
+    faulted :class:`TrainingPipeline` bit-flips one shard's delta frame on
+    the wire, the slice NACKs (typed error latched, deltas refused on the
+    stale base), and ``resync_shard`` tees the sender's rebuilt full frame
+    to both replicas — recording seconds from NACK detection to the flush
+    completing, and the byte-exactness of the healed tables vs a clean-twin
+    fleet that never saw the fault.
+    """
+    from repro.launch import topology
+    from repro.serving.faults import FRAME_BITFLIP, FaultPlan
+    from repro.serving.shard_router import ShardRouter
+    from repro.train.pipeline import TrainingPipeline
+
+    v = 2**16
+    cfg = FFMConfig(n_fields=CFG.n_fields, context_fields=CFG.context_fields,
+                    hash_space=v, k=CFG.k, mlp_hidden=CFG.mlp_hidden)
+    rng = np.random.default_rng(53)
+    params = jax.tree_util.tree_map(
+        np.asarray, deepffm.init_params(cfg, jax.random.PRNGKey(43)))
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+    n_ctx, n_cand, batch_size = 4, 64, 8
+    n_batches = 2 if quick else 4
+    passes = 2 if quick else 4
+    ctxs = [(rng.integers(0, v, fc).astype(np.int32),
+             rng.normal(1, 0.25, fc).astype(np.float32))
+            for _ in range(n_ctx)]
+
+    def make_batches(n):
+        out = []
+        for _ in range(n):
+            reqs = []
+            for slot in range(batch_size):
+                ci, cv = ctxs[slot % n_ctx]  # fixed composition: stable shapes
+                ki = rng.integers(0, v, (n_cand, fcand)).astype(np.int32)
+                kv = rng.normal(1, 0.25, (n_cand, fcand)).astype(np.float32)
+                reqs.append((ci, cv, ki, kv))
+            out.append(reqs)
+        return out
+
+    warm, meas = make_batches(2), make_batches(n_batches)
+    candidates = sum(r[2].shape[0] for reqs in meas for r in reqs)
+    # the kill fires at a scoring-round boundary halfway through the
+    # bit-identity capture — after the warmup rounds, mid measured traffic
+    kill_round = len(warm) + n_batches // 2 + 1
+    plan = FaultPlan(kill_at={(0, 0): kill_round})
+    arms = {
+        "baseline_r1": ShardRouter(cfg, n_shards=2, params=params,
+                                   quantized=True, prefix_stride=4),
+        "healthy_r2": ShardRouter(cfg, n_shards=2, params=params,
+                                  quantized=True, prefix_stride=4,
+                                  replicas=2, hedge_ms=5000),
+        "killed_r2": ShardRouter(cfg, n_shards=2, params=params,
+                                 quantized=True, prefix_stride=4,
+                                 replicas=2, hedge_ms=5000, faults=plan),
+    }
+    outs = {}
+    for name, rt in arms.items():
+        for reqs in warm:  # compile every shape + fill the prefix cache
+            rt.score_batch(reqs)
+        outs[name] = np.concatenate(
+            [np.concatenate(rt.score_batch(reqs)) for reqs in meas])
+    killed = arms["killed_r2"]
+    kill = {
+        "kill_round": kill_round,
+        "kill_landed": killed.replica_generations()[0][0] is None,
+        "degraded_responses": killed.stats.degraded_responses,
+        "failovers": killed.stats.failovers,
+        "fleet_degraded": killed.degraded,
+    }
+    bit_identical = all(np.array_equal(outs[n], outs["baseline_r1"])
+                        for n in arms)
+
+    times = {name: [] for name in arms}
+    for rt in arms.values():  # drop capture latencies from the percentiles
+        rt.stats = ServeStats()
+    for _ in range(passes):  # interleaved: noise hits every arm equally
+        for name, rt in arms.items():
+            t0 = time.perf_counter()
+            for reqs in meas:
+                rt.score_batch(reqs)
+            times[name].append(time.perf_counter() - t0)
+    results = {}
+    base_pps = candidates / float(np.median(times["baseline_r1"]))
+    for name, rt in arms.items():
+        med = float(np.median(times[name]))
+        results[name] = {
+            "seconds_median_pass": med,
+            "us_per_batch": med / n_batches * 1e6,
+            "predictions_per_s": candidates / med,
+            "pps_vs_baseline": (candidates / med) / max(base_pps, 1e-12),
+            "p50_ms": rt.stats.latency_ms(50.0),
+            "p99_ms": rt.stats.latency_ms(99.0),
+        }
+        rt.close()
+
+    # -- freshness across a forced resync: bit-flip one delta frame --------
+    rv = 2**14 if quick else 2**16
+    rcfg = FFMConfig(n_fields=CFG.n_fields, context_fields=CFG.context_fields,
+                     hash_space=rv, k=CFG.k, mlp_hidden=CFG.mlp_hidden)
+    ranges = topology.shard_ranges(rv, 2)
+    pipe = TrainingPipeline(rcfg, lr=0.05, seed=7, shard_ranges=ranges)
+    clean = TrainingPipeline(rcfg, lr=0.05, seed=7, shard_ranges=ranges)
+    pipe.sender.faults = FaultPlan(seed=9, frame_faults={(0, 1): FRAME_BITFLIP})
+    victim = ShardRouter(rcfg, n_shards=2, quantized=True, replicas=2,
+                         hedge_ms=5000)
+    refr = ShardRouter(rcfg, n_shards=2, quantized=True)
+    like = jax.tree_util.tree_map(np.asarray, pipe.params)
+    victim.configure_fanout(pipe.sender.manifests, like)
+    refr.configure_fanout(clean.sender.manifests, like)
+    brng, crng = np.random.default_rng(11), np.random.default_rng(11)
+
+    def train_batch(r):
+        n = 64
+        return {"idx": r.integers(0, rv, (n, rcfg.n_fields)).astype(np.int32),
+                "val": r.standard_normal((n, rcfg.n_fields)).astype(np.float32),
+                "label": r.integers(0, 2, n).astype(np.float32)}
+
+    rounds = 3
+    for _ in range(rounds):
+        victim.submit_updates(pipe.run_round(iter([train_batch(brng)])))
+        refr.submit_updates(clean.run_round(iter([train_batch(crng)])))
+    victim.flush_updates()
+    refr.flush_updates()
+    nacked = victim.frame_errors()[0]
+    stuck = victim.fleet_generations()[0]
+    t0 = time.perf_counter()
+    frames_teed = victim.resync_shard(0, pipe.sender)
+    victim.flush_updates()
+    resync_s = time.perf_counter() - t0
+    byte_exact = victim.frame_errors() == [None, None]
+    want = refr.shards[0].params
+    for rep in range(2):  # both replicas of the healed slice, byte for byte
+        got = victim._fleet[0][rep].params
+        for key in ("codes", "scale", "zero"):
+            byte_exact = byte_exact and np.array_equal(
+                got["ffm"]["emb"][key], want["ffm"]["emb"][key])
+            byte_exact = byte_exact and np.array_equal(
+                got["lr"]["w"][key], want["lr"]["w"][key])
+    victim.close()
+    refr.close()
+
+    return {
+        "traffic": {"hash_space": v, "n_ctx": n_ctx, "n_cand": n_cand,
+                    "batch_size": batch_size, "n_batches": n_batches,
+                    "passes": passes},
+        **results,
+        "kill": kill,
+        "resync": {
+            "hash_space": rv,
+            "train_rounds": rounds,
+            "nack_error": nacked,
+            "stuck_generation": list(stuck) if stuck else None,
+            "frames_teed": frames_teed,
+            "seconds": resync_s,
+            "byte_exact": byte_exact,
+        },
+        "acceptance": {
+            "kill_mid_traffic_bit_identical": bit_identical,
+            "zero_failed_requests": kill["degraded_responses"] == 0
+            and kill["failovers"] == 0,
+            "promotion_not_degraded": kill["kill_landed"]
+            and not kill["fleet_degraded"],
+            "replication_no_throughput_regression":
+                results["healthy_r2"]["pps_vs_baseline"] >= 0.75,
+            "nack_then_resync_byte_exact": nacked is not None and byte_exact,
         },
     }
 

@@ -27,6 +27,15 @@ to full/patch frames.
 ``Sender`` keeps the last shipped byte-buffer; ``Receiver`` reconstructs the
 inference weights by applying patches/deltas ("serving layer on-the-fly
 reconstructs the final inference weights via a patching mechanism").
+
+Integrity (PR 9): every frame carries a CRC over header+mode+body, and
+patch/delta frames carry the version they chain from (``base_version``).
+Decode/apply failures raise a typed :class:`FrameError` taxonomy —
+:class:`TruncatedFrameError`, :class:`FrameChecksumError`,
+:class:`VersionRegressionError`, :class:`LayoutMismatchError` — and a
+rejected frame leaves the receiver's state untouched, so the NACK answer
+(:meth:`Sender.resync_frame`, a full frame rebuilt from the sender's
+retained ``_last``) lands on clean state and re-arms the XOR-delta chain.
 """
 from __future__ import annotations
 
@@ -44,6 +53,51 @@ MODES = ("raw", "quant", "patch", "patch+quant")
 
 KIND_FULL, KIND_PATCH, KIND_DELTA = 0, 1, 2
 
+_KIND_STR = {KIND_FULL: "full", KIND_PATCH: "patch", KIND_DELTA: "delta"}
+
+
+class FrameError(ValueError):
+    """A transfer frame could not be decoded or safely applied.
+
+    Subclasses distinguish *why* so callers can react (count, NACK, request
+    a resync) instead of treating a wire fault like a programming bug.
+    ``ValueError`` base keeps pre-taxonomy callers working.
+    """
+
+
+class TruncatedFrameError(FrameError):
+    """Frame bytes end before the header/sidecar/body they promise."""
+
+
+class FrameChecksumError(FrameError):
+    """Stored CRC does not match the received header+mode+body bytes."""
+
+
+class VersionRegressionError(FrameError):
+    """Frame is stale, replayed, or chains from a version the receiver
+    does not hold (a frame in between was lost) — NACK and resync."""
+
+
+class LayoutMismatchError(FrameError):
+    """Frame decodes but does not fit the receiver's weight buffer
+    (layout skew between trainer and server)."""
+
+
+# CRC implementation: prefer a real CRC32C (Castagnoli) extension when the
+# environment has one; otherwise fall back to zlib's C-speed CRC-32. Both are
+# 32-bit CRCs with the same error-detection class for our frame sizes — the
+# polynomial choice only matters for cross-implementation interop, and both
+# ends of this channel share this module.
+try:  # pragma: no cover - absent in the pinned environment
+    from crc32c import crc32c as _crc32
+except ImportError:
+    from zlib import crc32 as _crc32
+
+
+def frame_checksum(data: bytes, value: int = 0) -> int:
+    """Running 32-bit CRC over ``data``, seeded with ``value``."""
+    return _crc32(data, value) & 0xFFFFFFFF
+
 
 @dataclass(frozen=True)
 class UpdateFrame:
@@ -58,6 +112,11 @@ class UpdateFrame:
     mode: str        # one of MODES
     version: int     # trainer round stamp, monotonically increasing
     payload: bytes   # framed sidecar + diffable body
+    # version of the sender's previous frame — the state a patch/delta chains
+    # from. The receiver rejects a chained frame whose base is not the version
+    # it holds: that is exactly "a frame in between was lost/corrupted", and
+    # applying the XOR anyway would silently poison every later delta.
+    base_version: int = 0
 
     @property
     def is_patch(self) -> bool:
@@ -68,21 +127,53 @@ class UpdateFrame:
         return self.kind == KIND_DELTA
 
 
-_FRAME_MAGIC = 0xFB  # guards against version-skewed / foreign blobs
+_FRAME_MAGIC = 0xFC  # guards against version-skewed / foreign blobs
+
+# header: magic u8, kind u8, mode-length u8, version u32, base_version u32;
+# then the mode string, a u32 CRC over header+mode+body, then the body
+_FRAME_HDR = "<BBBII"
+_FRAME_HDR_SIZE = struct.calcsize(_FRAME_HDR)
 
 
-def _frame(kind: int, mode: str, body: bytes, version: int = 0) -> bytes:
+def _frame(kind: int, mode: str, body: bytes, version: int = 0,
+           base_version: int = 0) -> bytes:
     m = mode.encode()
-    return struct.pack("<BBBI", _FRAME_MAGIC, kind, len(m), version) + m + body
+    head = struct.pack(_FRAME_HDR, _FRAME_MAGIC, kind, len(m), version,
+                       base_version) + m
+    # running CRC (header first, then body) avoids concatenating a copy of
+    # the (potentially many-MB) body just to checksum it
+    crc = frame_checksum(body, frame_checksum(head))
+    return head + struct.pack("<I", crc) + body
 
 
 def unframe(update: bytes) -> UpdateFrame:
-    """Decode an update blob's header (public API — serving must not parse bytes)."""
-    magic, kind, mlen, version = struct.unpack_from("<BBBI", update, 0)
+    """Decode + integrity-check an update blob's header (public API — serving
+    must not parse bytes). Raises the :class:`FrameError` taxonomy on bad
+    bytes; never a raw ``struct.error``."""
+    try:
+        magic, kind, mlen, version, base_version = struct.unpack_from(
+            _FRAME_HDR, update, 0)
+    except struct.error as e:
+        raise TruncatedFrameError(
+            f"frame truncated inside the header ({len(update)} bytes)") from e
     if magic != _FRAME_MAGIC:
-        raise ValueError("not a transfer update frame (bad magic byte)")
-    mode = update[7 : 7 + mlen].decode()
-    return UpdateFrame(kind, mode, version, update[7 + mlen :])
+        raise FrameError("not a transfer update frame (bad magic byte)")
+    head_end = _FRAME_HDR_SIZE + mlen
+    if len(update) < head_end + 4:
+        raise TruncatedFrameError("frame truncated before the checksum")
+    try:
+        mode = bytes(update[_FRAME_HDR_SIZE:head_end]).decode()
+    except UnicodeDecodeError as e:
+        raise FrameError("corrupt mode string in frame header") from e
+    (want,) = struct.unpack_from("<I", update, head_end)
+    got = frame_checksum(update[head_end + 4:],
+                         frame_checksum(update[:head_end]))
+    if got != want:
+        raise FrameChecksumError(
+            f"frame checksum mismatch (stored {want:#010x}, "
+            f"computed {got:#010x})")
+    return UpdateFrame(kind, mode, version, update[head_end + 4:],
+                       base_version)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +250,7 @@ class Sender:
     version: int = 0
     delta_verify: bool = False  # debug: scan for changes outside a delta's rows
     _last: Optional[bytes] = None
+    _last_sidecar: bytes = b""
     _last_meta: Optional[Q.QuantMeta] = None
     manifest: Any = None
     _leaf_info: Optional[List[Tuple[str, int, int, int, int, tuple]]] = None
@@ -291,10 +383,25 @@ class Sender:
         else:
             # first round (or layout change) ships the full file
             body, kind = cur, KIND_FULL
-        self._last = cur
+        base = self.version  # the state a patch/delta chains from
+        self._last, self._last_sidecar = cur, sidecar
         self.version = self.version + 1 if version is None else version
         framed_side = struct.pack("<Q", len(sidecar)) + sidecar
-        return _frame(kind, self.mode, framed_side + body, version=self.version)
+        return _frame(kind, self.mode, framed_side + body,
+                      version=self.version, base_version=base)
+
+    def resync_frame(self) -> bytes:
+        """The NACK answer: a ``KIND_FULL`` frame of the *last shipped* state,
+        rebuilt from the retained ``_last`` buffer + sidecar at the current
+        version. State-preserving — ``_last`` and ``version`` are untouched,
+        so the next :meth:`make_update` delta chains off the resync'd state
+        exactly as it would have off the lost frame."""
+        if self._last is None:
+            raise RuntimeError(
+                "nothing shipped yet — no retained state to resync from")
+        framed_side = struct.pack("<Q", len(self._last_sidecar)) + self._last_sidecar
+        return _frame(KIND_FULL, self.mode, framed_side + self._last,
+                      version=self.version)
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +449,10 @@ class ShardedSender:
     beta: int = 2
     version: int = 0
     delta_verify: bool = False
+    # optional fault-injection hook (duck-typed serving.faults.FaultPlan):
+    # frames pass through plan.corrupt_frame(shard, frame) on the way out.
+    # None (the default) is zero overhead.
+    faults: Any = None
     _global: Optional[Sender] = None
     _shard_senders: Optional[List[Sender]] = None
 
@@ -505,7 +616,21 @@ class ShardedSender:
                 self._slice_sidecar(sidecar, lo, hi),
                 self._local_touched(touched, lo, hi), version))
         self.version = self.version + 1 if version is None else version
+        if self.faults is not None:
+            # a dropped frame becomes None in the list; truncation/bit-flips
+            # mangle the bytes. Each inner sender's chain state still advanced
+            # — exactly like a frame lost on the wire after send.
+            frames = [self.faults.corrupt_frame(s, f)
+                      for s, f in enumerate(frames)]
         return frames
+
+    def resync(self, shard: Optional[int] = None):
+        """Answer a shard's NACK with a full resync frame rebuilt from that
+        shard's retained last-shipped slice (see :meth:`Sender.resync_frame`).
+        With ``shard=None`` returns one resync frame per shard."""
+        if shard is not None:
+            return self._shard_senders[shard].resync_frame()
+        return [s.resync_frame() for s in self._shard_senders]
 
 
 @dataclass
@@ -542,24 +667,55 @@ class Receiver:
     _prev_sidecar_elems: Optional[np.ndarray] = None
 
     def apply_update(self, update: bytes) -> bytes:
+        """Apply one frame. Raises the :class:`FrameError` taxonomy on bad
+        bytes or a broken version chain, and a *rejected frame mutates
+        nothing* — the receiver stays on its current state so a resync (or
+        the retransmitted frame) applies cleanly afterwards."""
         frame = unframe(update)
         payload = frame.payload
-        (side_len,) = struct.unpack_from("<Q", payload, 0)
-        self._sidecar = payload[8 : 8 + side_len]
+        try:
+            (side_len,) = struct.unpack_from("<Q", payload, 0)
+        except struct.error as e:
+            raise TruncatedFrameError(
+                "frame payload truncated before the sidecar length") from e
+        if len(payload) < 8 + side_len:
+            raise TruncatedFrameError("frame sidecar truncated")
+        sidecar = payload[8 : 8 + side_len]
         body = payload[8 + side_len :]
-        if frame.is_patch:
+        kind = _KIND_STR.get(frame.kind, f"kind={frame.kind}")
+        if frame.is_patch or frame.is_delta:
             if self._current is None:
-                raise ValueError("patch received before any full weight file")
-            self._current = patcher.apply_patch(self._current, body)
+                raise FrameError(
+                    f"{kind} received before any full weight file")
+            if frame.base_version != self.version:
+                raise VersionRegressionError(
+                    f"{kind} frame v{frame.version} chains from "
+                    f"v{frame.base_version} but receiver holds v{self.version}"
+                    " — a frame was lost or replayed; resync required")
+        elif frame.version < self.version:
+            raise VersionRegressionError(
+                f"stale full frame v{frame.version} behind receiver "
+                f"v{self.version}")
+        if frame.is_patch:
+            try:
+                new_current = patcher.apply_patch(self._current, body)
+            except (struct.error, zlib.error, IndexError, ValueError) as e:
+                raise TruncatedFrameError(f"corrupt patch body: {e}") from e
+            self._current = new_current
             self._delta_ranges = None
         elif frame.is_delta:
-            if self._current is None:
-                raise ValueError("row delta received before any full weight file")
-            starts, lengths, xor = _decode_delta(body)
+            try:
+                starts, lengths, xor = _decode_delta(body)
+            except (struct.error, zlib.error, IndexError, ValueError) as e:
+                raise TruncatedFrameError(f"corrupt delta body: {e}") from e
             cur = np.frombuffer(self._current, np.uint8).copy()
             if starts.size and int(starts[-1] + lengths[-1]) > cur.size:
-                raise ValueError("row delta exceeds current weight buffer "
-                                 "(layout skew between trainer and server)")
+                raise LayoutMismatchError(
+                    "row delta exceeds current weight buffer "
+                    "(layout skew between trainer and server)")
+            if int(lengths.sum()) != xor.size:
+                raise TruncatedFrameError(
+                    "row delta XOR payload shorter than its ranges")
             pos = 0
             for s, n in zip(starts, lengths):
                 cur[s:s + n] ^= xor[pos:pos + n]
@@ -576,6 +732,7 @@ class Receiver:
         else:
             self._current = body
             self._delta_ranges = None
+        self._sidecar = sidecar
         self.version, self.mode = frame.version, frame.mode
         return self._current
 

@@ -125,17 +125,35 @@ class ShardTopology:
     model: str
     ranges: Tuple[Tuple[int, int], ...]
     row_paths: Tuple[str, ...]
+    # replication factor (PR 9): every hash-space slice is served by
+    # ``replicas`` engines holding byte-identical tables — a placement
+    # property, so it lives on the topology next to the ranges. Replicas
+    # share the slice's row range; they are failure domains, not owners.
+    replicas: int = 1
 
     @classmethod
     def build(cls, cfg, model: str = "deepffm", n_shards: int = 1,
-              align: int = Q.LR_BLOCK) -> "ShardTopology":
+              align: int = Q.LR_BLOCK, replicas: int = 1) -> "ShardTopology":
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         return cls(cfg, model,
                    tuple(shard_ranges(cfg.hash_space, n_shards, align)),
-                   row_sharded_paths(cfg, model))
+                   row_sharded_paths(cfg, model), int(replicas))
 
     @property
     def n_shards(self) -> int:
         return len(self.ranges)
+
+    @property
+    def n_engines(self) -> int:
+        """Total engines the fleet runs (slices x replicas)."""
+        return self.n_shards * self.replicas
+
+    def placement(self) -> List[Tuple[int, int]]:
+        """Every ``(shard, replica)`` slot in fixed enumeration order — the
+        fleet's launch/addressing manifest."""
+        return [(s, r) for s in range(self.n_shards)
+                for r in range(self.replicas)]
 
     def owner_of(self, idx) -> np.ndarray:
         return owner_of(self.ranges, idx)

@@ -122,6 +122,26 @@ shards spawn M pools whose host gathers contend on the GIL; shards and the
 router itself pin ``parallel=1`` — the router's parallelism *is* the shard
 fan-out.
 
+**Deadlines and the degraded-response contract (PR 9).**
+``score_batch(deadline_ms=)`` attaches a per-request wall-clock budget that
+the :class:`~repro.serving.shard_router.ShardRouter` plumbs through its
+scatter-gather: a shard call that exceeds the straggler threshold is hedged
+to a sibling replica (first response wins), and a slice that still has no
+answer at the deadline contributes **zero rows** instead of blocking the
+response. Any response assembled with at least one such zero-rows slice —
+whether from a blown deadline or a slice whose replicas are all dead — is
+*degraded*: scores are wrong-by-omission for candidates whose rows lived in
+the missing slice (the reduction simply lacks those partial sums; all other
+slices' contributions are exact and bit-stable). Degradation is surfaced,
+never silent: ``ServeStats.last_degraded`` flags the most recent response,
+``degraded_responses`` / ``deadline_misses`` / ``hedged_calls`` /
+``failovers`` count the window, and the router's ``degraded`` attribute
+latches once any slice has lost its last replica. Single engines (no
+router) never degrade: without a deadline they compute to completion, and
+with one they still run their single forward to completion — ``deadline_ms``
+only gates *fan-out* waits, it never truncates a computation already
+running.
+
 Request batching: candidate counts are padded to power-of-two buckets and
 multiple requests are stacked into one jitted call
 (:meth:`InferenceEngine.score_batch`), so the forward compiles once per
@@ -181,6 +201,12 @@ class ServeStats:
     update_bytes: int = 0
     ctx_partials_full: int = 0
     ctx_tail_fields: int = 0
+    # fault-tolerance counters (PR 9) — populated by the ShardRouter:
+    degraded_responses: int = 0  # responses with >=1 zero-rows slice
+    deadline_misses: int = 0     # responses that gave a slice up at deadline
+    hedged_calls: int = 0        # shard calls re-issued to a sibling replica
+    failovers: int = 0           # shard calls recovered on a sibling after failure
+    last_degraded: bool = False  # the most recent response's degraded flag
     latency_window: int = 4096
     _latencies_s: Optional[deque] = field(default=None, repr=False)
 
@@ -216,6 +242,11 @@ class ServeStats:
         self.update_bytes += other.update_bytes
         self.ctx_partials_full += other.ctx_partials_full
         self.ctx_tail_fields += other.ctx_tail_fields
+        self.degraded_responses += other.degraded_responses
+        self.deadline_misses += other.deadline_misses
+        self.hedged_calls += other.hedged_calls
+        self.failovers += other.failovers
+        self.last_degraded = self.last_degraded or other.last_degraded
         self._latencies_s.extend(other._latencies_s)
 
     @property
@@ -314,19 +345,41 @@ class ScoringPool:
         """Raw executor submit — the ShardRouter's scatter-gather fan-out."""
         return self._ex.submit(fn, *args)
 
-    def run(self, prepares: Sequence, dispatch) -> list:
+    def run(self, prepares: Sequence, dispatch, cleanup=None) -> list:
         """Pipeline ``prepares`` (pool threads, bounded look-ahead) against
         ``dispatch`` (caller thread, fixed order); returns dispatch results
-        in prepare order."""
+        in prepare order.
+
+        Exception safety: if any prepare or dispatch raises, the remaining
+        in-flight prepares are *drained* — each completed result is handed to
+        ``cleanup`` (best-effort; e.g. returning an acquired gather buffer to
+        the free list) — and the first error re-raises to the caller. Without
+        the drain, an aborted burst would strand its recycled buffers and
+        leave orphaned futures running into the next batch; with it, the pool
+        stays fully usable for the next batch."""
         window = self.workers + 1
         pending: deque = deque()
         out = []
-        for prep in prepares:
-            pending.append(self._ex.submit(prep))
-            if len(pending) >= window:
+        try:
+            for prep in prepares:
+                pending.append(self._ex.submit(prep))
+                if len(pending) >= window:
+                    out.append(dispatch(pending.popleft().result()))
+            while pending:
                 out.append(dispatch(pending.popleft().result()))
-        while pending:
-            out.append(dispatch(pending.popleft().result()))
+        except BaseException:
+            while pending:
+                fut = pending.popleft()
+                try:
+                    res = fut.result()
+                except Exception:
+                    continue  # the first error already propagates
+                if cleanup is not None:
+                    try:
+                        cleanup(res)
+                    except Exception:
+                        pass
+            raise
         return out
 
     def shutdown(self) -> None:
@@ -710,6 +763,10 @@ class InferenceEngine:
         self._owns_pool = scoring_pool is None
         self._pipe: Optional[UpdatePipe] = None
         self._pipe_lock = threading.Lock()
+        # per-request deadline (score_batch(deadline_ms=)): an absolute
+        # time.monotonic() budget, thread-local because concurrent scorer
+        # threads carry independent budgets through the same engine
+        self._deadline_tl = threading.local()
         if warmup_buckets is not None and params is not None:
             self.warmup(max_requests=warmup_buckets[0],
                         max_candidates=warmup_buckets[1])
@@ -1095,11 +1152,20 @@ class InferenceEngine:
         if self.params is None:
             raise RuntimeError("no weights yet — apply_update first")
 
-    def score(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:
+    def score(self, ctx_idx, ctx_val, cand_idx, cand_val, *,
+              deadline_ms: Optional[float] = None) -> np.ndarray:
         """Score one request's candidates against its context. Returns logits (N,)."""
-        return self.score_batch([(ctx_idx, ctx_val, cand_idx, cand_val)])[0]
+        return self.score_batch([(ctx_idx, ctx_val, cand_idx, cand_val)],
+                                deadline_ms=deadline_ms)[0]
 
-    def score_batch(self, requests: Sequence[Tuple]) -> List[np.ndarray]:
+    def _deadline(self) -> Optional[float]:
+        """The in-flight request's absolute ``time.monotonic()`` budget on
+        this thread (None = unbounded) — set by ``score_batch(deadline_ms=)``
+        and consumed by the ShardRouter's scatter-gather waits."""
+        return getattr(self._deadline_tl, "until", None)
+
+    def score_batch(self, requests: Sequence[Tuple], *,
+                    deadline_ms: Optional[float] = None) -> List[np.ndarray]:
         """Microbatch several (ctx_idx, ctx_val, cand_idx, cand_val) requests.
 
         Contexts are resolved through the prefix cache (tails batched per miss
@@ -1109,7 +1175,22 @@ class InferenceEngine:
         axis, so the whole batch is a single jitted call with a small, closed
         set of compiled shapes. Scores are computed against exactly one
         atomically published (params, generation) snapshot.
+
+        ``deadline_ms`` attaches a wall-clock budget to this batch (see the
+        module docstring's degraded-response contract): a plain engine's
+        single forward always runs to completion, but a fan-out engine
+        (ShardRouter) bounds its scatter-gather waits by it and zero-fills
+        slices that cannot answer in time, flagging the response degraded.
         """
+        if deadline_ms is None:
+            return self._score_batch(requests)
+        self._deadline_tl.until = time.monotonic() + deadline_ms / 1e3
+        try:
+            return self._score_batch(requests)
+        finally:
+            self._deadline_tl.until = None
+
+    def _score_batch(self, requests: Sequence[Tuple]) -> List[np.ndarray]:
         self._require_params()
         if not requests:
             return []
@@ -1361,20 +1442,32 @@ class InferenceEngine:
 
         def dispatch(prepared):
             (fn, args), m, buf = prepared
-            fwd = jax.block_until_ready(fn(*args))
-            if buf is not None:
-                pool.release(buf)  # safe: the computation has completed
+            try:
+                fwd = jax.block_until_ready(fn(*args))
+            finally:
+                if buf is not None:
+                    # on success the computation has completed (no XLA alias);
+                    # on error nothing holds the buffer either — either way it
+                    # must return to the free list or the burst leaks it
+                    pool.release(buf)
             if self.fused:
                 out_s, dots_s = fwd
                 return np.asarray(out_s)[:m], np.asarray(dots_s)[:m]
             return np.asarray(fwd)[:m], None
+
+        def span_cleanup(prepared):
+            # drain path (ScoringPool.run): a prepared-but-never-dispatched
+            # span still owns its acquired gather buffer
+            buf = prepared[2]
+            if buf is not None:
+                pool.release(buf)
 
         if pool is None:
             lo, hi = spans[0]
             parts = [dispatch(prepare(lo, hi))]
         else:
             parts = pool.run([partial(prepare, lo, hi) for lo, hi in spans],
-                             dispatch)
+                             dispatch, cleanup=span_cleanup)
         if len(parts) == 1:
             out, dots = parts[0]
         else:

@@ -80,8 +80,10 @@ class FFMServer:
         update-pipe thread, off the request path."""
         return self.engine.submit_update(update, manifest, like_params)
 
-    def flush_updates(self, timeout: float = 30.0) -> int:
-        """Wait for all submitted updates to publish; returns the generation."""
+    def flush_updates(self, timeout: float = 30.0) -> bool:
+        """Wait for all submitted updates to publish. ``True`` = drained
+        (read ``engine.generation`` for the result); ``False`` = timed out
+        or the pipe was killed."""
         return self.engine.update_pipe().flush(timeout)
 
     def serve(self, ctx_idx, ctx_val, cand_idx, cand_val) -> np.ndarray:

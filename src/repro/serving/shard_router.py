@@ -61,15 +61,49 @@ the vector changes. A scoring batch snapshots one assembled view, so it sees
 each shard at one coherent generation; while delta frames are in flight the
 vector can be *torn* (shards at different trainer versions), which is safe
 by the same argument as a single engine's hot swap — every row is internally
-consistent, and the mix resolves at ``flush_updates``. Killing a shard
-(:meth:`kill_shard`) degrades gracefully: its rows read as zero
-contributions, ``degraded`` flips, and the request path never raises.
+consistent, and the mix resolves at ``flush_updates``.
+
+Fault tolerance (PR 9)
+----------------------
+
+``ShardRouter(replicas=M)`` runs **M engine replicas per hash-space slice**,
+each with its own :class:`~repro.checkpoint.transfer.Receiver`/
+:class:`~repro.serving.update_pipe.UpdatePipe` state fed by the *same*
+per-slice frame stream (``submit_updates`` tees every frame to every
+replica), so siblings at the same generation hold **byte-identical
+tables** — which is why failing over or hedging between them cannot move a
+score: the per-replica bit-exactness contract is unchanged, replication
+just multiplies it. Reads load-balance round-robin across a slice's healthy
+replicas; a failed call fails over to an untried sibling; a straggling call
+past the hedge threshold (``hedge_ms``, default 3x the router's p99 with a
+50 ms floor) is **hedged** to a sibling, first response wins, and the
+loser's gather buffer recycles through the shared
+:class:`~repro.serving.engine.ScoringPool` free lists when its task
+finishes. Per-replica health is a breaker (:class:`ReplicaHealth`:
+healthy -> suspect -> dead -> probing) driven by call failures and hedge
+outcomes — consecutive strikes back a replica off exponentially, then mark
+it dead for the background prober to revive.
+
+:meth:`kill_shard` now means **replica promotion**: the slice's next live
+replica takes over and the response stays exact. Only when *every* replica
+of a slice is dead does the fleet fall back to degraded-zero-rows — the
+slice's rows score as zero contributions, and the response is flagged
+(``ServeStats.last_degraded`` / ``degraded_responses``; the router-level
+``degraded`` attribute latches) rather than silently wrong-by-omission. The
+request path never raises for fleet-health reasons; with
+``score_batch(deadline_ms=)`` a slice that cannot answer inside the budget
+is likewise given up as zero rows (``deadline_misses``). Deterministic
+failure drills plug in through :class:`repro.serving.faults.FaultPlan`
+hooks (replica death at round k, latency spikes, call failures) — zero
+overhead when unset.
 """
 from __future__ import annotations
 
 import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, wait as _futures_wait
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +116,7 @@ from repro.kernels.row_gather import ops as rg_ops
 from repro.launch.topology import ShardTopology
 from repro.serving.engine import (InferenceEngine, ScoringPool,
                                   _finish_candidates)
+from repro.serving.faults import FaultPlan
 
 
 # ---------------------------------------------------------------------------
@@ -97,9 +132,16 @@ class ShardedRows:
     single engine's context path runs, so assembled rows are bit-equal to
     full-table gathers), and scatters into one f32 block. Dead shards
     (``parts[s] is None``) contribute zero rows.
+
+    ``replica_parts`` (set by ``ShardRouter._refresh_fleet``) snapshots, per
+    slice, the ``(replica_index, emb_part)`` pairs of every live replica —
+    coherent with ``parts`` because both are captured under the fleet lock —
+    so the scatter-gather fan-out can load-balance, fail over, and hedge
+    across siblings of one view without re-reading mutable fleet state.
     """
 
     dtype = np.float32
+    replica_parts: Optional[List] = None  # per-slice [(replica, part), ...]
 
     def __init__(self, parts: Sequence, ranges: Sequence[Tuple[int, int]],
                  row_shape: Tuple[int, ...]):
@@ -210,6 +252,63 @@ def _reduce_forward(cfg: FFMConfig, model: str, head_params, cached,
 
 
 # ---------------------------------------------------------------------------
+# Replica health (circuit breaker)
+# ---------------------------------------------------------------------------
+
+class ReplicaHealth:
+    """Per-replica circuit breaker: ``healthy -> suspect -> dead`` on
+    consecutive strikes (call failures and lost hedges), with exponential
+    backoff between suspect retries. ``dead`` replicas leave the read
+    rotation until the router's background prober revives them
+    (``dead -> probing -> healthy`` on a successful probe). One small lock
+    per breaker: scorer threads and the prober never observe a half-applied
+    transition, and the router's fleet lock stays off the per-call path."""
+
+    HEALTHY, SUSPECT, DEAD, PROBING = "healthy", "suspect", "dead", "probing"
+
+    def __init__(self, max_strikes: int = 3, backoff_s: float = 0.05):
+        self.max_strikes = max_strikes
+        self.backoff_s = backoff_s
+        self.state = self.HEALTHY
+        self.strikes = 0
+        self.retry_at = 0.0
+        self._lock = threading.Lock()
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.state, self.strikes, self.retry_at = self.HEALTHY, 0, 0.0
+
+    def record_strike(self, now: float) -> None:
+        with self._lock:
+            self.strikes += 1
+            self.state = (self.DEAD if self.strikes >= self.max_strikes
+                          else self.SUSPECT)
+            self.retry_at = now + self.backoff_s * 2 ** min(self.strikes - 1, 6)
+
+    def begin_probe(self) -> bool:
+        with self._lock:
+            if self.state != self.DEAD:
+                return False
+            self.state = self.PROBING
+            return True
+
+    def fail_probe(self, now: float) -> None:
+        with self._lock:
+            self.state = self.DEAD
+            self.strikes += 1
+            self.retry_at = now + self.backoff_s * 2 ** min(self.strikes - 1, 6)
+
+    def available(self, now: float) -> bool:
+        """May this replica take request traffic right now? Healthy always;
+        suspect only past its backoff; dead/probing never (the prober owns
+        those)."""
+        with self._lock:
+            if self.state == self.HEALTHY:
+                return True
+            return self.state == self.SUSPECT and now >= self.retry_at
+
+
+# ---------------------------------------------------------------------------
 # The router
 # ---------------------------------------------------------------------------
 
@@ -230,6 +329,13 @@ class ShardRouter(InferenceEngine):
     pin ``parallel=1``: the router's parallelism is the shard fan-out
     itself, and nesting span-splitting inside it would only multiply GIL
     contention.
+
+    Fault-tolerance knobs (PR 9, see the module docstring): ``replicas=M``
+    runs M engines per slice; ``hedge_ms`` pins the straggler threshold
+    (default: 3x observed p99, floored at 50 ms); ``probe_interval_s`` paces
+    the background prober that revives breaker-dead replicas; ``faults``
+    accepts a :class:`repro.serving.faults.FaultPlan` for deterministic
+    failure drills.
     """
 
     def __init__(self, cfg: FFMConfig, model: str = "deepffm", *,
@@ -239,26 +345,43 @@ class ShardRouter(InferenceEngine):
                  dedup: bool = True,
                  warmup_buckets: Optional[Tuple[int, int]] = None,
                  prefix_depths: Optional[Sequence[int]] = None,
-                 max_workers: Optional[int] = None):
-        self.topology = ShardTopology.build(cfg, model, n_shards)
+                 max_workers: Optional[int] = None,
+                 replicas: int = 1, hedge_ms: Optional[float] = None,
+                 probe_interval_s: float = 0.2,
+                 faults: Optional[FaultPlan] = None):
+        self.topology = ShardTopology.build(cfg, model, n_shards,
+                                            replicas=replicas)
         # ONE pool for the whole fleet: the router's scatter-gather fan-out
-        # submits its per-shard partial tasks here, and every shard engine is
-        # constructed around the same pool with parallel=1 — N shards never
-        # spawn N thread pools whose host gathers contend on the GIL, and
-        # the router's parallelism *is* the shard fan-out (span-splitting the
-        # replaced forward would sit inside the compacted-entry-bucket bit
-        # contract for no extra concurrency)
-        self._pool = ScoringPool(max_workers or n_shards)
-        self._shards: List[Optional[InferenceEngine]] = [
-            InferenceEngine(self.topology.shard_cfg(s), model,
-                            backend=backend, quantized=quantized,
-                            cache_entries=64, prefix_stride=None,
-                            host_gather=False, parallel=1,
-                            scoring_pool=self._pool)
+        # submits its per-shard partial (and hedge) tasks here, and every
+        # replica engine is constructed around the same pool with parallel=1
+        # — N x M engines never spawn N x M thread pools whose host gathers
+        # contend on the GIL, and the router's parallelism *is* the shard
+        # fan-out (span-splitting the replaced forward would sit inside the
+        # compacted-entry-bucket bit contract for no extra concurrency)
+        self._pool = ScoringPool(max_workers or n_shards * replicas)
+        self._fleet: List[List[Optional[InferenceEngine]]] = [
+            [InferenceEngine(self.topology.shard_cfg(s), model,
+                             backend=backend, quantized=quantized,
+                             cache_entries=64, prefix_stride=None,
+                             host_gather=False, parallel=1,
+                             scoring_pool=self._pool)
+             for _ in range(replicas)]
             for s in range(n_shards)]
+        self._active: List[int] = [0] * n_shards  # serving replica (-1=none)
+        self._rr: List[int] = [0] * n_shards      # round-robin read cursor
+        self._health: List[List[ReplicaHealth]] = [
+            [ReplicaHealth() for _ in range(replicas)]
+            for _ in range(n_shards)]
+        self.faults = faults
+        self.hedge_ms = hedge_ms
+        self.probe_interval_s = probe_interval_s
         self.degraded = False
         self._fleet_lock = threading.Lock()
         self._fleet_vector: Optional[Tuple] = None
+        self._last_primary = None      # last live params: all-dead serving
+        self._call_tl = threading.local()  # per-batch fault-outcome flags
+        self._prober: Optional[threading.Thread] = None
+        self._prober_stop = threading.Event()
         # entry->pair-position map: xc pairs are (i ctx, j cand); the entry
         # (r, n, j) contributes one term per context field i, landing at the
         # xc position of pair (i, f0+j)
@@ -284,44 +407,89 @@ class ShardRouter(InferenceEngine):
     # -- fleet weight management -------------------------------------------
     @property
     def n_shards(self) -> int:
-        return len(self._shards)
+        return len(self._fleet)
+
+    @property
+    def replicas(self) -> int:
+        return self.topology.replicas
+
+    @property
+    def _shards(self) -> List[Optional[InferenceEngine]]:
+        """Active-replica view of the fleet: slice ``s``'s serving replica,
+        ``None`` when every replica of the slice is gone — the shape the
+        pre-replica router exposed, kept as the compatibility surface."""
+        return [None if a < 0 else row[a]
+                for row, a in zip(self._fleet, self._active)]
 
     @property
     def shards(self) -> List[Optional[InferenceEngine]]:
-        """Live view of the shard slots (``None`` = killed)."""
+        """Live view of the serving shard slots (``None`` = slice dead)."""
         return self._shards
 
     def fleet_generations(self) -> List[Optional[Tuple[int, int]]]:
-        """Per-shard ``(generation, weights_version)``; ``None`` for a dead
-        shard — the router-level view of the fleet's generation vector."""
+        """Per-shard ``(generation, weights_version)`` of the *serving*
+        replica; ``None`` for a dead slice — the router-level view of the
+        fleet's generation vector."""
         return [None if s is None else (s.generation, s.weights_version)
                 for s in self._shards]
 
+    def replica_generations(self) -> List[List[Optional[Tuple[int, int]]]]:
+        """Per-slice, per-replica ``(generation, weights_version)``
+        (``None`` = killed slot) — the full fleet health/freshness matrix."""
+        return [[None if e is None else (e.generation, e.weights_version)
+                 for e in row] for row in self._fleet]
+
+    def _fleet_vector_now(self) -> Tuple:
+        return tuple(tuple(None if e is None
+                           else (e.generation, e.weights_version)
+                           for e in row) for row in self._fleet)
+
     def install_params(self, params) -> None:
         """Shard a full-space f32 pytree across the fleet and republish the
-        assembled view. Each live shard quantizes its own slice (on a
-        quantized fleet) — byte-identical to slicing a full-space
-        quantization, per the topology's alignment invariant."""
-        for s, shard in enumerate(self._shards):
-            if shard is not None:
-                shard.install_params(self.topology.shard_params(params, s))
+        assembled view. Every live replica of slice ``s`` quantizes the same
+        slice (on a quantized fleet) — deterministic, so siblings start
+        byte-identical; byte-identical to slicing a full-space quantization,
+        per the topology's alignment invariant."""
+        for s, row in enumerate(self._fleet):
+            local = self.topology.shard_params(params, s)
+            for eng in row:
+                if eng is not None:
+                    eng.install_params(local)
         self._refresh_fleet(force=True)
 
-    def kill_shard(self, shard: int) -> None:
-        """Simulate (or administratively take) a shard down. Its rows score
-        as zero contributions from the next refresh on; the request path
-        keeps serving (``degraded`` flips for monitoring)."""
-        self._shards[shard] = None
-        self.degraded = True
+    def kill_shard(self, shard: int, replica: Optional[int] = None) -> None:
+        """Take one replica down — by default the slice's *serving* replica.
+        A sibling replica is promoted into the serving slot at the refresh
+        (scores stay exact: siblings hold byte-identical tables); only when
+        the slice's last replica dies do its rows start scoring as zero
+        contributions, with ``degraded`` latched for monitoring. The
+        victim's update pipe is killed (non-blocking — wakes any ``flush``
+        racing this call rather than deadlocking behind its pending frames).
+        Idempotent: killing an already-dead slot is a no-op."""
+        with self._fleet_lock:
+            r = self._active[shard] if replica is None else replica
+            victim = None if r < 0 else self._fleet[shard][r]
+            if victim is not None:
+                self._fleet[shard][r] = None
+        if victim is None:
+            if all(e is None for e in self._fleet[shard]):
+                self.degraded = True
+            return
+        pipe = victim._pipe
+        if pipe is not None:
+            pipe.kill()
+        victim.close()
         self._refresh_fleet(force=True)
 
     def rotate_shard(self, shard: int, **rotate_kw) -> InferenceEngine:
-        """Atomic shard rotation: build the shard's successor off the request
-        path (:meth:`InferenceEngine.rotate`), re-point the shard's update
-        pipe at it under the pipe's ingest lock (the receiver's byte chain —
-        and therefore the delta-frame sequence — continues unbroken), and
-        swap the serving slot. Returns the successor."""
-        old = self._shards[shard]
+        """Atomic shard rotation of the slice's serving replica: build the
+        successor off the request path (:meth:`InferenceEngine.rotate`),
+        re-point the replica's update pipe at it under the pipe's ingest
+        lock (the receiver's byte chain — and therefore the delta-frame
+        sequence — continues unbroken), and swap the serving slot. Returns
+        the successor."""
+        r = self._active[shard]
+        old = None if r < 0 else self._fleet[shard][r]
         if old is None:
             raise ValueError(f"shard {shard} is dead")
         succ = old.rotate(**rotate_kw)
@@ -331,30 +499,62 @@ class ShardRouter(InferenceEngine):
                 pipe._engine = succ
                 with succ._pipe_lock:
                     succ._pipe = pipe
-                self._shards[shard] = succ
+                self._fleet[shard][r] = succ
         else:
-            self._shards[shard] = succ
+            self._fleet[shard][r] = succ
         self._refresh_fleet(force=True)
         return succ
 
     def _refresh_fleet(self, force: bool = False) -> None:
         """Rebuild the assembled view iff the fleet generation vector moved;
-        publishing bumps the router generation (stamping the prefix cache)."""
-        vector = tuple(self.fleet_generations())
+        publishing bumps the router generation (stamping the prefix cache).
+
+        Replica promotion happens here too: every slice's serving slot is
+        re-pointed at a live replica (preferring one holding params) before
+        the view assembles, so a kill — or a publish landing on a sibling —
+        revives the slice at the next refresh. Once weights have been
+        installed the refresh *never raises* for fleet health: with every
+        replica of every slice dead it keeps serving the last-known head
+        leaves over all-zero tables (fully degraded), per the PR 9 contract
+        that the request path never raises."""
+        vector = self._fleet_vector_now()
         with self._fleet_lock:
             if not force and vector == self._fleet_vector:
                 return
-            parts = [None if s is None else s.params for s in self._shards]
+            for s, row in enumerate(self._fleet):
+                a = self._active[s]
+                if not (0 <= a < len(row) and row[a] is not None
+                        and row[a].params is not None):
+                    alive = [r for r, e in enumerate(row) if e is not None]
+                    armed = [r for r in alive if row[r].params is not None]
+                    self._active[s] = (armed or alive or [-1])[0]
+            if any(all(e is None for e in row) for row in self._fleet):
+                self.degraded = True
+            actives = self._shards
+            parts = [None if e is None else e.params for e in actives]
             live = [p for p in parts if p is not None]
-            if not live:
+            if live:
+                primary = live[0]
+                self._last_primary = primary
+            elif self._last_primary is not None:
+                primary = self._last_primary
+                self.degraded = True
+            else:
                 raise RuntimeError("every shard is dead or weightless")
-            primary = live[0]
             cfg = self.cfg
             virtual = {k: v for k, v in primary.items()
                        if k not in ("ffm", "lr")}
-            virtual["ffm"] = {"emb": ShardedRows(
+            emb = ShardedRows(
                 [None if p is None else p["ffm"]["emb"] for p in parts],
-                self.topology.ranges, (cfg.n_fields, cfg.k))}
+                self.topology.ranges, (cfg.n_fields, cfg.k))
+            # snapshot the live sibling tables coherently with the view:
+            # the scatter-gather fan-out reads only this (plus the breaker
+            # states) — never the mutable fleet lists — per batch
+            emb.replica_parts = [
+                [(r, e.params["ffm"]["emb"]) for r, e in enumerate(row)
+                 if e is not None and e.params is not None]
+                for row in self._fleet]
+            virtual["ffm"] = {"emb": emb}
             virtual["lr"] = {
                 "w": ShardedLR(
                     [None if p is None else p["lr"]["w"] for p in parts],
@@ -366,10 +566,11 @@ class ShardRouter(InferenceEngine):
             # getter re-enters _refresh_fleet, and _fleet_lock is held
             self._weights_raw = (virtual, self._weights_raw[1] + 1)
             self.weights_version = max(
-                (v[1] for v in vector if v is not None), default=0)
+                (e.weights_version for e in actives if e is not None),
+                default=self.weights_version)
 
     def _maybe_refresh(self) -> None:
-        if tuple(self.fleet_generations()) != self._fleet_vector:
+        if self._fleet_vector_now() != self._fleet_vector:
             self._refresh_fleet()
 
     # the engine's scoring path snapshots `self._weights`; route that read
@@ -400,41 +601,96 @@ class ShardRouter(InferenceEngine):
             raise ValueError(
                 f"no manifest for shard(s) {missing}: prime the ShardedSender "
                 "(or run a round) before configure_fanout")
-        for shard, manifest in zip(self._shards, manifests):
-            if shard is not None:
-                shard.update_pipe(manifest=manifest, like_params=like_params)
+        for row, manifest in zip(self._fleet, manifests):
+            for eng in row:
+                if eng is not None:
+                    eng.update_pipe(manifest=manifest,
+                                    like_params=like_params)
 
     def submit_updates(self, updates: Sequence[Optional[bytes]]) -> int:
-        """Fan one training round's per-shard frames out to the shards'
-        update pipes (async; backpressure per shard). Dead shards' frames are
-        dropped. Returns the number of frames accepted."""
+        """Fan one training round's per-shard frames out to the fleet's
+        update pipes (async; backpressure per pipe), tee'ing each slice's
+        frame to **every** live replica — each replica runs its own receiver
+        byte chain over the same frame sequence, which is what keeps
+        siblings byte-identical (and failover exact). Dead slots' copies are
+        dropped; a killed pipe counts as dead. Returns the number of slices
+        that accepted the frame on at least one replica."""
         n = 0
-        for shard, frame in zip(self._shards, updates):
-            if shard is not None and frame is not None:
-                n += bool(shard.submit_update(frame))
+        for row, frame in zip(self._fleet, updates):
+            if frame is None:
+                continue
+            ok = False
+            for eng in row:
+                if eng is None:
+                    continue
+                try:
+                    ok |= bool(eng.submit_update(frame))
+                except RuntimeError:  # killed/closed pipe == dead slot
+                    continue
+            n += ok
         return n
 
     def flush_updates(self, timeout: Optional[float] = 30.0) -> List[
             Optional[Tuple[int, int]]]:
-        """Wait until every live shard has published its pending frames,
+        """Wait until every live replica has published its pending frames,
         refresh the assembled view, and return the generation vector."""
-        for shard in self._shards:
-            if shard is not None and shard._pipe is not None:
-                shard._pipe.flush(timeout)
+        for row in self._fleet:
+            for eng in row:
+                if eng is not None and eng._pipe is not None:
+                    eng._pipe.flush(timeout)
         self._maybe_refresh()
         return self.fleet_generations()
+
+    def frame_errors(self) -> List[Optional[str]]:
+        """Per-slice NACK latch: the first replica-reported frame error
+        (``UpdatePipeStats.last_frame_error``), ``None`` for a clean slice —
+        what a fleet supervisor polls to decide a :meth:`resync_shard`."""
+        out: List[Optional[str]] = []
+        for row in self._fleet:
+            err = None
+            for eng in row:
+                pipe = None if eng is None else eng._pipe
+                if pipe is not None and pipe.stats.last_frame_error:
+                    err = pipe.stats.last_frame_error
+                    break
+            out.append(err)
+        return out
+
+    def resync_shard(self, shard: int, sender) -> int:
+        """Answer a NACK: have the trainer side rebuild the slice's full
+        state (``transfer.ShardedSender.resync``) and tee the resync frame
+        to every live replica, clearing their NACK latches — one lost or
+        mangled delta no longer poisons the slice's XOR chain. Returns the
+        number of replicas the frame was accepted on (flush to observe the
+        republished tables)."""
+        frame = sender.resync(shard)
+        n = 0
+        for eng in self._fleet[shard]:
+            if eng is None:
+                continue
+            try:
+                accepted = bool(eng.submit_update(frame))
+            except RuntimeError:
+                continue
+            if accepted:
+                pipe = eng._pipe
+                if pipe is not None:
+                    pipe.stats.last_frame_error = None
+                n += 1
+        return n
 
     # -- resource accounting -------------------------------------------------
     @property
     def resident_weight_bytes(self) -> int:
-        """Sum of the live shards' resident bytes (the head leaves replicate
-        per shard; the tables split)."""
-        return sum(s.resident_weight_bytes
-                   for s in self._shards if s is not None)
+        """Sum of every live replica's resident bytes (the head leaves
+        replicate per engine; the tables split per slice and multiply by the
+        replication factor)."""
+        return sum(e.resident_weight_bytes
+                   for row in self._fleet for e in row if e is not None)
 
     def shard_resident_bytes(self) -> List[int]:
-        return [0 if s is None else s.resident_weight_bytes
-                for s in self._shards]
+        return [sum(e.resident_weight_bytes for e in row if e is not None)
+                for row in self._fleet]
 
     # -- scoring: scatter partials / gather the reduction --------------------
     def _forward_args(self, params, stacked, ki_b, kv_b, grids=None,
@@ -446,6 +702,52 @@ class ShardRouter(InferenceEngine):
         ``out_codes`` are unused — the router's own engine surface never
         host-gathers (the shards hold the resident tables)."""
         return self._scatter_gather_forward, (params, stacked, ki_b, kv_b)
+
+    def _tl_flags(self):
+        """This thread's per-batch fault-outcome flags (lazily initialized —
+        warmup drives the forward without going through ``score_batch``)."""
+        tl = self._call_tl
+        if not hasattr(tl, "degraded"):
+            tl.degraded = False
+            tl.hedged = 0
+            tl.failovers = 0
+            tl.deadline_missed = False
+        return tl
+
+    def _hedge_threshold_s(self) -> float:
+        """Straggler threshold before a slice call is hedged to a sibling:
+        explicit ``hedge_ms`` if pinned, else 3x the router's observed p99
+        floored at 50 ms (cold stats hedge almost never — the floor keeps
+        warmup/compile jitter from triggering spurious hedges)."""
+        if self.hedge_ms is not None:
+            return self.hedge_ms / 1e3
+        return max(0.05, 3.0 * self.stats.latency_ms(99.0) / 1e3)
+
+    def score_batch(self, requests: Sequence[Tuple], *,
+                    deadline_ms: Optional[float] = None) -> List[np.ndarray]:
+        """Engine surface plus the fleet's fault semantics: due fault-plan
+        replica kills fire at the batch boundary (deterministic rounds), and
+        the batch's degraded/hedge/failover/deadline outcomes fold into
+        ``stats`` (``last_degraded`` reflects exactly this response)."""
+        if self.faults is not None:
+            for s, r in self.faults.next_round():
+                self.kill_shard(s, r)
+        tl = self._tl_flags()
+        tl.degraded = False
+        tl.hedged = 0
+        tl.failovers = 0
+        tl.deadline_missed = False
+        out = super().score_batch(requests, deadline_ms=deadline_ms)
+        with self._lock:
+            st = self.stats
+            st.last_degraded = bool(tl.degraded)
+            if tl.degraded:
+                st.degraded_responses += 1
+            if tl.deadline_missed:
+                st.deadline_misses += 1
+            st.hedged_calls += tl.hedged
+            st.failovers += tl.failovers
+        return out
 
     def _scatter_gather_forward(self, params, stacked, ki_b, kv_b):
         cfg = self.cfg
@@ -459,12 +761,23 @@ class ShardRouter(InferenceEngine):
         owner = emb_view.owner_of(ki_b.reshape(-1)).reshape(ki_b.shape)
         stacked_emb = np.asarray(stacked["emb"], np.float32)
         stacked_val = np.asarray(stacked["val"], np.float32)
+        tl = self._tl_flags()
+        deadline = self._deadline()
+        hedge_s = self._hedge_threshold_s()
+        replica_rows = emb_view.replica_parts
+        if replica_rows is None:  # a view built outside _refresh_fleet
+            replica_rows = [[] if p is None else [(0, p)]
+                            for p in emb_view.parts]
 
-        def shard_task(s: int):
-            part = emb_view.parts[s]
+        def shard_task(s: int, replica: int, part):
+            # one replica's partial-sum "call": fault hooks first (latency
+            # spike / injected hard failure), then the local gather + fixed
+            # contraction over this replica's tables. Siblings hold
+            # byte-identical tables, so whichever replica answers, the bits
+            # are the same — failover and hedging cannot move a score.
+            if self.faults is not None:
+                self.faults.on_replica_call(s, replica)
             sel = np.flatnonzero((owner == s).reshape(-1))
-            if part is None or sel.size == 0:
-                return None
             r_m, rem = np.divmod(sel, nb * fcand)
             n_m, j_m = np.divmod(rem, fcand)
             local = ki_b[r_m, n_m, j_m] - emb_view.ranges[s][0]
@@ -481,29 +794,122 @@ class ShardRouter(InferenceEngine):
                     [x, np.zeros((mb - x.shape[0],) + x.shape[1:], x.dtype)])
 
             a_ctx, vc, vm = pad(a_ctx), pad(vc), pad(vm)
-            if Q.is_row_quantized(part):
-                qc = pad(rg_ops.gather_codes_np(part["codes"], local))
-                sc = pad(np.asarray(part["scale"])[local])
-                ze = pad(np.asarray(part["zero"])[local])
-                terms, aa_rows = _shard_partial_q8(cfg, a_ctx, vc, vm,
-                                                   qc, sc, ze)
-            else:
-                rows = pad(rg_ops.gather_codes_np(
-                    np.asarray(part), local).astype(np.float32, copy=False))
-                terms, aa_rows = _shard_partial_rows(cfg, a_ctx, vc, vm, rows)
-            return (r_m, n_m, j_m,
-                    np.asarray(terms)[:m], np.asarray(aa_rows)[:m])
+            # the row gather lands in a pool-recycled buffer; the finally
+            # returns it to the free list on *every* exit — including a
+            # hedge loser whose result the collector already discarded and
+            # a call the fault plan blows up mid-flight — so abandoned
+            # calls never strand buffers into the next batch
+            quant = Q.is_row_quantized(part)
+            table = part["codes"] if quant else np.asarray(part)
+            buf = self._pool.acquire((mb,) + table.shape[1:], table.dtype)
+            try:
+                rg_ops.gather_codes_np(table, local, out=buf[:m])
+                buf[m:] = 0
+                if quant:
+                    sc = pad(np.asarray(part["scale"])[local])
+                    ze = pad(np.asarray(part["zero"])[local])
+                    terms, aa_rows = _shard_partial_q8(cfg, a_ctx, vc, vm,
+                                                       buf, sc, ze)
+                else:
+                    terms, aa_rows = _shard_partial_rows(
+                        cfg, a_ctx, vc, vm, buf.astype(np.float32,
+                                                       copy=False))
+                terms = np.asarray(jax.block_until_ready(terms))
+                aa_rows = np.asarray(jax.block_until_ready(aa_rows))
+            finally:
+                self._pool.release(buf)
+            return (r_m, n_m, j_m, terms[:m], aa_rows[:m])
 
-        futures = [self._pool.submit(shard_task, s)
-                   for s in range(len(emb_view.parts))]
+        # launch one call per owning slice (round-robin over available
+        # replicas); collection below hedges/fails over per slice
+        now0 = time.monotonic()
+        inflight: List[Optional[dict]] = []
+        for s in range(len(emb_view.parts)):
+            if not np.any(owner == s):
+                inflight.append(None)
+                continue
+            cands = [(r, p) for r, p in replica_rows[s]
+                     if self._replica_available(s, r, now0)]
+            if not cands:
+                cands = list(replica_rows[s])  # all breakered: still try
+            if not cands:
+                # slice owns entries but has no live replica at all: its
+                # rows contribute zeros and the response is flagged
+                tl.degraded = True
+                inflight.append(None)
+                continue
+            rot = self._rr[s] % len(cands)
+            self._rr[s] += 1
+            cands = cands[rot:] + cands[:rot]
+            fut = self._pool.submit(shard_task, s, cands[0][0], cands[0][1])
+            inflight.append({"s": s, "cands": cands, "next": 1,
+                             "pending": {fut: cands[0][0]},
+                             "start": time.monotonic(), "hedged": False})
+
+        def collect(st):
+            """First-success-wins collection for one slice: failed calls
+            fail over to the next untried replica, a straggler past the
+            hedge threshold is raced against a sibling (once), and a blown
+            deadline abandons the slice (stragglers finish on pool threads
+            and recycle their own buffers). Returns the partial result or
+            None (slice contributes zeros, response degraded)."""
+            s = st["s"]
+            while st["pending"]:
+                now = time.monotonic()
+                timeout = None
+                if deadline is not None:
+                    timeout = deadline - now
+                    if timeout <= 0:
+                        tl.deadline_missed = True
+                        tl.degraded = True
+                        return None
+                if not st["hedged"] and st["next"] < len(st["cands"]):
+                    until_hedge = st["start"] + hedge_s - now
+                    timeout = (until_hedge if timeout is None
+                               else min(timeout, until_hedge))
+                done, _ = _futures_wait(
+                    list(st["pending"]),
+                    timeout=None if timeout is None else max(timeout, 0.0),
+                    return_when=FIRST_COMPLETED)
+                now = time.monotonic()
+                for fut in done:
+                    replica = st["pending"].pop(fut)
+                    if fut.exception() is None:
+                        self._health[s][replica].record_success()
+                        return fut.result()
+                    self._health[s][replica].record_strike(now)
+                    self._ensure_prober()
+                    if st["next"] < len(st["cands"]):
+                        r2, p2 = st["cands"][st["next"]]
+                        st["next"] += 1
+                        tl.failovers += 1
+                        st["pending"][self._pool.submit(
+                            shard_task, s, r2, p2)] = r2
+                if (not done and not st["hedged"]
+                        and st["next"] < len(st["cands"])
+                        and now - st["start"] >= hedge_s):
+                    # straggler: strike it (breaker food) and race a sibling
+                    for straggler in st["pending"].values():
+                        self._health[s][straggler].record_strike(now)
+                    self._ensure_prober()
+                    r2, p2 = st["cands"][st["next"]]
+                    st["next"] += 1
+                    tl.hedged += 1
+                    st["hedged"] = True
+                    st["pending"][self._pool.submit(
+                        shard_task, s, r2, p2)] = r2
+            tl.degraded = True  # every attempted replica failed
+            return None
 
         (pi, pj), _, xc, _ = ffm.pair_split(cfg)
         pairs_xc = np.zeros((rb, nb, xc.size), np.float32)
         aa_block = np.zeros((rb, nb, fcand, fcand, k), np.float32)
-        # fixed shard order; every entry's positions are written by exactly
-        # one shard, so the scatter targets are disjoint by construction
-        for fut in futures:
-            res = fut.result()
+        # fixed slice order; every entry's positions are written by exactly
+        # one slice, so the scatter targets are disjoint by construction —
+        # and whichever *replica* of the slice answered, the written bits
+        # are identical (byte-identical sibling tables)
+        for st in inflight:
+            res = None if st is None else collect(st)
             if res is None:
                 continue
             r_m, n_m, j_m, terms, aa_rows = res
@@ -512,6 +918,49 @@ class ShardRouter(InferenceEngine):
             aa_block[r_m, n_m, j_m] = aa_rows
         return _reduce_forward(cfg, self.model, self._head_params(params),
                                stacked, pairs_xc, aa_block, kv_b, lr_cand)
+
+    # -- replica health / background prober ----------------------------------
+    def _replica_available(self, shard: int, replica: int,
+                           now: float) -> bool:
+        try:
+            return self._health[shard][replica].available(now)
+        except IndexError:  # pragma: no cover - defensive
+            return True
+
+    def _ensure_prober(self) -> None:
+        """Lazily start the daemon prober the first time a replica breaker
+        opens (idle fleets never pay for the thread)."""
+        if self._prober is not None and self._prober.is_alive():
+            return
+        with self._fleet_lock:
+            if ((self._prober is not None and self._prober.is_alive())
+                    or self._prober_stop.is_set()):
+                return
+            self._prober = threading.Thread(
+                target=self._probe_loop, name="shard-prober", daemon=True)
+            self._prober.start()
+
+    def _probe_loop(self) -> None:
+        """Background breaker recovery: periodically probe DEAD replicas
+        (through the fault hook, so injected failures keep them dead until
+        the plan exhausts) and return survivors to the read rotation."""
+        while not self._prober_stop.wait(self.probe_interval_s):
+            now = time.monotonic()
+            for s, row in enumerate(self._fleet):
+                for r, eng in enumerate(row):
+                    h = self._health[s][r]
+                    if (h.state != ReplicaHealth.DEAD or now < h.retry_at
+                            or eng is None or eng.params is None):
+                        continue
+                    if not h.begin_probe():
+                        continue
+                    try:
+                        if self.faults is not None:
+                            self.faults.on_replica_call(s, r)
+                        np.asarray(eng.params["lr"]["b"])  # touch the tables
+                        h.record_success()
+                    except Exception:
+                        h.fail_probe(time.monotonic())
 
     def warmup(self, *, max_requests: int = 8, max_candidates: int = 64) -> int:
         """Pre-compile the router's full shape set: every (row-bucket,
@@ -550,13 +999,22 @@ class ShardRouter(InferenceEngine):
         return calls
 
     def close(self) -> None:
-        """Shut down the fleet's shared scoring pool (router + every shard
-        reference the same one). End-of-life: a closed router no longer
-        scores."""
+        """Shut down the fleet: stop the prober, kill every replica's update
+        pipe (non-blocking; wakes any flusher mid-wait), drop the scoring
+        pool references (router + every replica share one), and shut the
+        pool down. End-of-life: a closed router no longer scores."""
+        self._prober_stop.set()
+        prober = self._prober
+        if prober is not None:
+            prober.join(timeout=5.0)
         self._scoring_pool = None
-        for shard in self._shards:
-            if shard is not None:
-                shard._scoring_pool = None
+        for row in self._fleet:
+            for eng in row:
+                if eng is None:
+                    continue
+                eng._scoring_pool = None
+                if eng._pipe is not None:
+                    eng._pipe.kill()
         self._pool.shutdown()
 
     # -- oracle --------------------------------------------------------------

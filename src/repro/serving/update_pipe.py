@@ -70,6 +70,12 @@ class UpdatePipeStats:
     rows_requantized: int = 0
     blocks_requantized: int = 0
     quantize_seconds: float = 0.0
+    # frame-integrity NACK state (PR 9): frames rejected by the transfer
+    # layer's typed FrameError taxonomy (corrupt bytes, broken version
+    # chain), and the last such error — the receiver's NACK, which the
+    # fleet answers with a ShardedSender resync frame.
+    frames_rejected: int = 0
+    last_frame_error: Optional[str] = None
 
 
 class UpdatePipe:
@@ -108,6 +114,10 @@ class UpdatePipe:
         self._thread: Optional[threading.Thread] = None
         self._thread_lock = threading.Lock()
         self._closed = False
+        self._dead = False  # kill(): aborted, queued frames dropped
+        # optional fault-injection hook (serving.faults.FaultPlan);
+        # None = zero overhead
+        self.faults = None
         # quantize-on-ingest: the last qparams THIS pipe published (the
         # engine's current params in the normal flow — no extra copy); the
         # incremental-requantize base tied to the receiver's wire state
@@ -153,7 +163,8 @@ class UpdatePipe:
             # nothing is pending (checked under _pending_cv, which submit
             # increments before enqueueing).
             while True:
-                self.flush()
+                if not self.flush() and self._dead:
+                    raise RuntimeError("update pipe was killed")
                 self._ingest_lock.acquire()
                 with self._pending_cv:
                     drained = self._pending == 0
@@ -170,11 +181,23 @@ class UpdatePipe:
     def _ingest_locked(self, update: bytes, manifest=None, like_params=None):
         """Decode + publish one frame; caller holds ``_ingest_lock``."""
         t0 = time.perf_counter()
+        if self._dead:
+            raise RuntimeError("update pipe was killed")
         if manifest is not None or like_params is not None:
             self.configure(manifest, like_params)
         on_ingest_thread = (self._thread is not None
                             and threading.current_thread() is self._thread)
-        self._receiver.apply_update(update)
+        if self.faults is not None:
+            self.faults.on_ingest(len(update))
+        try:
+            self._receiver.apply_update(update)
+        except transfer.FrameError as e:
+            # typed wire fault: count it, remember the NACK, and leave the
+            # receiver state untouched (apply_update guarantees no partial
+            # mutation) so a resync frame lands cleanly afterwards
+            self.stats.frames_rejected += 1
+            self.stats.last_frame_error = f"{type(e).__name__}: {e}"
+            raise
         # pacing applies only to background decodes, and only while no
         # flush() is waiting on the drain (the hurry contract — see flush)
         paced = on_ingest_thread and not self._hurried()
@@ -279,9 +302,14 @@ class UpdatePipe:
             self.stats.rejected += 1
             return False
 
-    def flush(self, timeout: Optional[float] = 30.0) -> int:
-        """Wait until every submitted frame has been published (or dropped);
-        returns the engine generation.
+    def flush(self, timeout: Optional[float] = 30.0) -> bool:
+        """Wait until every submitted frame has been published (or dropped).
+
+        Returns ``True`` when the pipe drained, ``False`` when the wait
+        timed out or the pipe was :meth:`kill`-ed mid-wait — one boolean
+        contract on every path, never raise-or-hang depending on how the
+        frames arrived. Callers wanting the resulting generation read
+        ``engine.generation`` after a ``True`` return.
 
         While any flusher waits, the background ingest thread is *hurried*:
         promoted back to normal scheduling and excused from pacing sleeps.
@@ -294,31 +322,54 @@ class UpdatePipe:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._pending_cv:
             if self._pending == 0:
-                return self._engine.generation
+                return not self._dead
+            if self._dead:
+                return False
             self._hurry += 1
             promote = self._hurry == 1
         if promote:
             self._set_ingest_priority(idle=False)
         try:
             with self._pending_cv:
-                while self._pending > 0:
+                while self._pending > 0 and not self._dead:
                     remaining = (None if deadline is None
                                  else deadline - time.monotonic())
                     if remaining is not None and remaining <= 0:
-                        raise TimeoutError(
-                            f"{self._pending} update frame(s) still pending")
+                        return False
                     self._pending_cv.wait(remaining)
+                return not self._dead
         finally:
             with self._pending_cv:
                 self._hurry -= 1
                 demote = self._hurry == 0
             if demote:
                 self._set_ingest_priority(idle=True)
-        return self._engine.generation
 
     def _hurried(self) -> bool:
         with self._pending_cv:
             return self._hurry > 0
+
+    def kill(self) -> None:
+        """Abort the pipe without draining: drop queued frames, wake every
+        :meth:`flush` waiter (they return ``False``), and stop the ingest
+        thread. Non-blocking and idempotent — the failover path
+        (``ShardRouter.kill_shard``) must never deadlock behind a dead
+        shard's pending frames. The in-flight frame (if any) finishes on its
+        own; everything still queued is discarded."""
+        with self._pending_cv:
+            already = self._dead
+            self._closed = True
+            self._dead = True
+            if not already:
+                try:
+                    while True:
+                        if self._q.get_nowait() is not None:
+                            self._pending -= 1
+                except queue.Empty:
+                    pass
+            self._pending_cv.notify_all()
+        if not already and self._thread is not None:
+            self._q.put(None)  # queue just drained: cannot block
 
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Drain the queue and stop the ingest thread. ``_closed`` flips
@@ -331,12 +382,13 @@ class UpdatePipe:
             # loop: a submit that won the race against _closed may still be
             # adding frames while the first flush drains
             while True:
-                self.flush(timeout)
+                drained = self.flush(timeout)
                 with self._pending_cv:
-                    if self._pending == 0:
+                    if not drained or self._pending == 0 or self._dead:
                         self._closed = True
                         break
-            self._q.put(None)
+            if not self._dead:
+                self._q.put(None)
             self._thread.join(timeout)
         else:
             with self._pending_cv:
@@ -392,6 +444,15 @@ class UpdatePipe:
                 return
             try:
                 self.ingest(update)
+            except transfer.FrameError:
+                # corrupt/out-of-chain frame: already counted as a NACK in
+                # stats (frames_rejected / last_frame_error); the thread
+                # keeps serving later frames and awaits a resync
+                import logging
+
+                logging.getLogger(__name__).warning(
+                    "corrupt update frame rejected during background "
+                    "ingest: %s", self.stats.last_frame_error)
             except Exception:  # a bad frame must not kill the ingest thread
                 import logging
 

@@ -544,8 +544,18 @@ class TrainingPipeline:
             # all; run_round returns the List[bytes] in shard order
             update = self.sender.make_updates(self.params, version=version,
                                               touched=touched or None)
-            update_bytes = sum(len(u) for u in update)
-            kind = _KIND_NAMES[transfer.unframe(update[0]).kind]
+            # a fault-injected sender may drop or mangle a shard's frame on
+            # the wire; the round still reports the surviving frames' bytes
+            # and the kind of the first frame that decodes
+            shipped = [u for u in update if u is not None]
+            update_bytes = sum(len(u) for u in shipped)
+            kind = "dropped"
+            for u in shipped:
+                try:
+                    kind = _KIND_NAMES[transfer.unframe(u).kind]
+                    break
+                except transfer.FrameError:
+                    kind = "corrupt"
         else:
             update = self.sender.make_update(self.params, version=version,
                                              touched=touched or None)

@@ -1,6 +1,8 @@
 # Intentionally does NOT set --xla_force_host_platform_device_count: smoke
 # tests and benches must see the real single device. Multi-device integration
 # tests spawn subprocesses (see tests/_subproc.py).
+import threading
+
 import numpy as np
 import pytest
 
@@ -11,6 +13,26 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.tier1)
+
+
+@pytest.fixture(autouse=True)
+def no_leaked_threads():
+    """Fail any test that leaks a *non-daemon* thread (PR 9 hygiene): a
+    leaked worker would outlive the test, serialize the suite behind joins
+    at interpreter exit, and hide close()/kill() bugs. Daemon threads
+    (update-pipe ingest, the shard prober) are exempt — they are designed
+    to be abandoned — but anything non-daemon (notably ScoringPool's
+    executor workers) must be joined by the test closing its engines and
+    routers (or the fixture's short grace join) before it ends."""
+    before = {t.ident for t in threading.enumerate()}
+    yield
+    leaked = [t for t in threading.enumerate()
+              if t.ident not in before and not t.daemon and t.is_alive()]
+    for t in leaked:  # grace: threads mid-shutdown get a moment to finish
+        t.join(timeout=5.0)
+    leaked = [t for t in leaked if t.is_alive()]
+    assert not leaked, (
+        f"test leaked non-daemon thread(s): {[t.name for t in leaked]}")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,395 @@
+"""Fault-tolerant fleet (PR 9): replica failover, hedging, deadlines,
+frame integrity + resync, and the deterministic fault-injection harness.
+
+The contracts under test (see ``serving/shard_router.py`` module docstring):
+
+* **Replica exactness** — replicas of a slice ingest the same tee'd frame
+  stream, so siblings hold byte-identical tables and failover / hedging /
+  round-robin can never move a score: a replicas=2 fleet with one replica
+  killed mid-traffic stays *bit-identical* to a healthy fleet at every
+  generation, with zero failed requests.
+* **Breaker + prober** — injected hard failures fail over to a sibling
+  (scores exact), strike the replica to ``dead``, and the background prober
+  revives it once the fault plan exhausts.
+* **Hedging** — a straggler past ``hedge_ms`` races a sibling; first
+  response wins; the loser's buffers recycle through the pool.
+* **Deadlines** — a slice that cannot answer inside ``deadline_ms`` is
+  given up as zero rows and *flagged* (``deadline_misses``, ``degraded``),
+  never raised.
+* **Frame integrity** — a dropped / truncated / bit-flipped frame NACKs
+  (typed ``FrameError`` latched, pipe thread survives) instead of
+  poisoning the XOR-delta chain; ``resync_shard`` rebuilds the slice
+  byte-exact from the sender's retained state.
+* **Request path never raises** — double kills, dead-slice rotation, and
+  an all-dead fleet degrade (flagged zero-rows responses), they do not
+  throw; ``flush`` cannot deadlock behind a kill.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import transfer
+from repro.common.config import FFMConfig
+from repro.core import deepffm
+from repro.launch import topology
+from repro.serving.engine import InferenceEngine
+from repro.serving.faults import (FRAME_BITFLIP, FRAME_DROP, FRAME_TRUNCATE,
+                                  FaultPlan)
+from repro.serving.shard_router import ReplicaHealth, ShardRouter
+from repro.train.pipeline import TrainingPipeline
+
+pytestmark = pytest.mark.faults
+
+CFG = FFMConfig(n_fields=8, context_fields=5, hash_space=1024, k=4,
+                mlp_hidden=(16,))
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = deepffm.init_params(CFG, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(np.asarray, p)
+
+
+def _requests(rng, n_req=5, n_cand=7, cfg=CFG):
+    fc, fcand = cfg.context_fields, cfg.n_fields - cfg.context_fields
+    return [(rng.integers(0, cfg.hash_space, fc).astype(np.int32),
+             rng.standard_normal(fc).astype(np.float32),
+             rng.integers(0, cfg.hash_space, (n_cand, fcand)).astype(np.int32),
+             rng.standard_normal((n_cand, fcand)).astype(np.float32))
+            for _ in range(n_req)]
+
+
+def _mk_batch(rng, cfg=CFG, n=64):
+    return {"idx": rng.integers(0, cfg.hash_space,
+                                (n, cfg.n_fields)).astype(np.int32),
+            "val": rng.standard_normal((n, cfg.n_fields)).astype(np.float32),
+            "label": rng.integers(0, 2, n).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Replicated shards: kill-mid-traffic bit identity
+# ---------------------------------------------------------------------------
+
+def test_replica_kill_mid_traffic_is_bit_exact_vs_healthy_fleet():
+    """The acceptance drill: replicas=2 fleet streaming delta frames, one
+    replica killed mid-traffic by the fault plan — zero failed requests and
+    scores bit-identical to a healthy single-replica fleet at *every*
+    generation (the tee'd frame streams keep siblings byte-identical, so
+    promotion cannot move a score)."""
+    rng = np.random.default_rng(21)
+    ranges = topology.shard_ranges(CFG.hash_space, 2)
+    pipe = TrainingPipeline(CFG, lr=0.05, seed=21, shard_ranges=ranges)
+    plan = FaultPlan(kill_at={(0, 0): 2})  # shard 0 replica 0 dies, round 2
+    router = ShardRouter(CFG, n_shards=2, quantized=True, replicas=2,
+                         hedge_ms=5000, faults=plan)
+    ref = ShardRouter(CFG, n_shards=2, quantized=True, hedge_ms=5000)
+    like = jax.tree_util.tree_map(np.asarray, pipe.params)
+    router.configure_fanout(pipe.sender.manifests, like)
+    ref.configure_fanout(pipe.sender.manifests, like)
+    reqs = _requests(np.random.default_rng(22))
+    for rnd in range(1, 5):
+        frames = pipe.run_round(iter([_mk_batch(rng)]))
+        assert router.submit_updates(frames) == 2  # the slice still accepts
+        ref.submit_updates(frames)
+        router.flush_updates()
+        ref.flush_updates()
+        got = np.concatenate(router.score_batch(reqs))
+        want = np.concatenate(ref.score_batch(reqs))
+        assert np.array_equal(got, want), f"round {rnd} bits moved"
+        assert not router.stats.last_degraded
+    assert plan.round == 4
+    assert router.replica_generations()[0][0] is None  # the killed slot
+    assert router.replica_generations()[0][1] == (4, 4)  # promoted sibling
+    assert router.fleet_generations() == [(4, 4), (4, 4)]
+    assert router.stats.degraded_responses == 0
+    assert router.stats.failovers == 0  # promotion, not failover
+    assert not router.degraded  # the slice never lost its last replica
+    router.close()
+    ref.close()
+
+
+def test_injected_failures_fail_over_exactly_and_open_the_breaker(params):
+    """A black-holed replica (every call raises): reads fail over to the
+    sibling with bit-exact scores, each attempt strikes the breaker, and
+    three strikes mark the replica dead — out of the read rotation."""
+    plan = FaultPlan(fail_calls={(0, 0): -1})
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                         replicas=2, hedge_ms=5000, probe_interval_s=60.0,
+                         faults=plan)
+    ref = ShardRouter(CFG, n_shards=2, params=params, quantized=True)
+    reqs = _requests(np.random.default_rng(23))
+    want = np.concatenate(ref.score_batch(reqs))
+    health = router._health[0][0]
+    for _ in range(12):
+        got = np.concatenate(router.score_batch(reqs))
+        assert np.array_equal(got, want)
+        if health.state == ReplicaHealth.DEAD:
+            break
+        time.sleep(0.12)  # let the suspect backoff lapse so it gets retried
+    assert health.state == ReplicaHealth.DEAD
+    assert router.stats.failovers >= health.max_strikes
+    assert router.stats.degraded_responses == 0  # the sibling always answered
+    router.close()
+    ref.close()
+
+
+def test_straggler_is_hedged_to_sibling_first_response_wins(params):
+    """A latency-spiked replica past ``hedge_ms`` races its sibling: the
+    batch returns the sibling's (bit-identical) answer fast, ``hedged_calls``
+    counts it, and the straggler's buffers recycle when it finishes."""
+    plan = FaultPlan(latency_s={(0, 0): 0.3})
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                         replicas=2, hedge_ms=10_000, faults=plan)
+    ref = ShardRouter(CFG, n_shards=2, params=params, quantized=True)
+    # default threshold: 3x p99 floored at 50 ms; cold stats sit on the floor
+    assert ref._hedge_threshold_s() == pytest.approx(0.05)
+    reqs = _requests(np.random.default_rng(24))
+    want = np.concatenate(ref.score_batch(reqs))
+    # warm every compile path with hedging effectively off, then aim the
+    # round-robin cursor back at the slow replica and arm the hedge
+    assert np.array_equal(np.concatenate(router.score_batch(reqs)), want)
+    router._rr = [0] * router.n_shards
+    router.hedge_ms = 40.0
+    t0 = time.monotonic()
+    got = np.concatenate(router.score_batch(reqs))
+    elapsed = time.monotonic() - t0
+    assert np.array_equal(got, want)
+    assert router.stats.hedged_calls >= 1
+    assert elapsed < 0.3  # did not wait out the straggler's spike
+    assert not router.stats.last_degraded
+    time.sleep(0.35)  # the loser finishes and releases its pool buffer
+    assert np.array_equal(np.concatenate(router.score_batch(reqs)), want)
+    router.close()
+    ref.close()
+
+
+def test_deadline_gives_slices_up_as_flagged_zero_rows(params):
+    """``score_batch(deadline_ms=)`` with every replica straggling: the
+    response arrives inside (about) the budget with the slices' rows scored
+    as zero contributions, flagged via ``deadline_misses`` + ``degraded`` —
+    and the next un-deadlined batch is exact again (the abandoned calls
+    finished on pool threads and recycled their own buffers)."""
+    plan = FaultPlan(latency_s={(0, 0): 0.3, (1, 0): 0.3})
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                         faults=plan)
+    ref = ShardRouter(CFG, n_shards=2, params=params, quantized=True)
+    reqs = _requests(np.random.default_rng(25))
+    want = np.concatenate(ref.score_batch(reqs))
+    assert np.array_equal(  # warm the compile set (slow but successful)
+        np.concatenate(router.score_batch(reqs)), want)
+    outs = router.score_batch(reqs, deadline_ms=40.0)
+    assert all(np.isfinite(np.asarray(o)).all() for o in outs)
+    assert router.stats.deadline_misses == 1
+    assert router.stats.degraded_responses == 1
+    assert router.stats.last_degraded
+    got = np.concatenate(router.score_batch(reqs))  # no deadline: exact again
+    assert np.array_equal(got, want)
+    assert not router.stats.last_degraded
+    router.close()
+    ref.close()
+
+
+def test_prober_revives_dead_replica_once_the_fault_plan_exhausts(params):
+    """dead -> probing -> healthy: the background prober retries a
+    breaker-dead replica through the fault hook, stays dead while the plan
+    keeps failing it, and returns it to the rotation when probes succeed."""
+    plan = FaultPlan(fail_calls={(0, 0): 2})  # first two calls fail, then ok
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                         replicas=2, hedge_ms=5000, probe_interval_s=0.02,
+                         faults=plan)
+    health = router._health[0][0]
+    health.backoff_s = 0.01  # fast retry lane for the test
+    now = time.monotonic()
+    for _ in range(health.max_strikes):
+        health.record_strike(now)
+    assert health.state == ReplicaHealth.DEAD
+    router._ensure_prober()
+    deadline = time.monotonic() + 10.0
+    while health.state != ReplicaHealth.HEALTHY:
+        assert time.monotonic() < deadline, health.state
+        time.sleep(0.01)
+    ref = ShardRouter(CFG, n_shards=2, params=params, quantized=True)
+    reqs = _requests(np.random.default_rng(26))
+    want = np.concatenate(ref.score_batch(reqs))
+    for _ in range(2):  # both rotation slots: the revived replica serves
+        assert np.array_equal(np.concatenate(router.score_batch(reqs)), want)
+    router.close()
+    ref.close()
+
+
+# ---------------------------------------------------------------------------
+# Frame integrity: NACK + resync
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("action", [FRAME_DROP, FRAME_TRUNCATE, FRAME_BITFLIP])
+def test_frame_fault_nacks_then_resync_restores_byte_exact_tables(action):
+    """One wire fault on a slice's delta stream: the replicas NACK (typed
+    error latched; a *dropped* frame surfaces at the next delta's broken
+    version chain) and refuse every subsequent delta rather than apply on a
+    stale base — then ``resync_shard`` tees the sender's rebuilt full frame
+    to both replicas and the slice comes back **byte-exact** vs a fleet that
+    never saw the fault."""
+    rng = np.random.default_rng(31)
+    ranges = topology.shard_ranges(CFG.hash_space, 2)
+    pipe = TrainingPipeline(CFG, lr=0.05, seed=31, shard_ranges=ranges)
+    clean = TrainingPipeline(CFG, lr=0.05, seed=31, shard_ranges=ranges)
+    plan = FaultPlan(seed=5, frame_faults={(0, 1): action})  # 2nd frame out
+    pipe.sender.faults = plan
+    router = ShardRouter(CFG, n_shards=2, quantized=True, replicas=2,
+                         hedge_ms=5000)
+    ref = ShardRouter(CFG, n_shards=2, quantized=True)
+    like = jax.tree_util.tree_map(np.asarray, pipe.params)
+    router.configure_fanout(pipe.sender.manifests, like)
+    ref.configure_fanout(clean.sender.manifests, like)
+    batch_rng = np.random.default_rng(32)
+    clean_rng = np.random.default_rng(32)  # same batches for both trainers
+    for _ in range(3):
+        router.submit_updates(pipe.run_round(iter([_mk_batch(batch_rng)])))
+        ref.submit_updates(clean.run_round(iter([_mk_batch(clean_rng)])))
+    router.flush_updates()
+    ref.flush_updates()
+    # the faulted slice is stuck at generation 1; its NACK latch is set
+    # (for a *drop* the round-3 delta's broken version chain reports it)
+    assert router.fleet_generations()[0][0] == 1
+    assert router.fleet_generations()[1][0] == 3
+    errs = router.frame_errors()
+    assert errs[0] is not None and errs[1] is None
+    if action != FRAME_DROP:
+        pipe0 = router._fleet[0][0]._pipe
+        assert pipe0.stats.frames_rejected >= 1
+        assert any(name in errs[0] for name in
+                   ("TruncatedFrameError", "FrameChecksumError",
+                    "VersionRegressionError", "FrameError"))
+    # torn-but-serving in the meantime, then the NACK answer: full resync
+    assert np.isfinite(
+        np.concatenate(router.score_batch(_requests(rng)))).all()
+    assert router.resync_shard(0, pipe.sender) == 2  # tee'd to both replicas
+    router.flush_updates()
+    assert router.frame_errors() == [None, None]
+    assert all(g == (v, 3) for g, v in
+               zip(router.fleet_generations(), (2, 3)))
+    for rep in (0, 1):  # every replica of the slice healed byte-exact
+        got = router._fleet[0][rep].params
+        want = ref.shards[0].params
+        for key in ("codes", "scale", "zero"):
+            assert np.array_equal(got["ffm"]["emb"][key],
+                                  want["ffm"]["emb"][key])
+            assert np.array_equal(got["lr"]["w"][key], want["lr"]["w"][key])
+    reqs = _requests(np.random.default_rng(33))
+    assert np.array_equal(np.concatenate(router.score_batch(reqs)),
+                          np.concatenate(ref.score_batch(reqs)))
+    router.close()
+    ref.close()
+
+
+def test_poison_frame_does_not_kill_pipe_and_next_good_frame_applies(params):
+    """Satellite (a): garbage bytes through the async pipe are rejected on
+    the ingest thread (typed error recorded) without killing it — the next
+    well-formed frame still publishes."""
+    snd = transfer.Sender(mode="raw")
+    u1 = snd.make_update(params)
+    p2 = jax.tree_util.tree_map(lambda x: x * 1.5, params)
+    u2 = snd.make_update(p2)
+    eng = InferenceEngine(CFG, quantized=True)
+    like = jax.tree_util.tree_map(np.asarray, params)
+    pipe = eng.update_pipe(snd.manifest, like)
+    eng.submit_update(u1)
+    assert pipe.flush() and eng.generation == 1
+    eng.submit_update(u2[:len(u2) // 2])  # truncated mid-payload
+    assert pipe.flush()  # drains: rejection is not a stall
+    assert eng.generation == 1
+    assert pipe.stats.frames_rejected == 1
+    assert pipe.stats.last_frame_error.split(":")[0] in (
+        "TruncatedFrameError", "FrameChecksumError", "FrameError")
+    assert pipe._thread is not None and pipe._thread.is_alive()
+    eng.submit_update(u2)  # base_version still matches: chain intact
+    assert pipe.flush() and eng.generation == 2
+
+
+# ---------------------------------------------------------------------------
+# Pool exception safety / flush + kill / kill_shard edge cases
+# ---------------------------------------------------------------------------
+
+def test_all_replicas_failing_degrades_and_pool_stays_usable(params):
+    """Satellite (b) under injected faults: every replica of a slice
+    black-holed — each response is flagged degraded (zero rows for the
+    slice), repeated batches are deterministic, and the shared pool keeps
+    serving (no stranded buffers, no wedged workers)."""
+    plan = FaultPlan(fail_calls={(0, 0): -1})
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                         probe_interval_s=60.0, faults=plan)
+    reqs = _requests(np.random.default_rng(41))
+    out1 = np.concatenate(router.score_batch(reqs))
+    out2 = np.concatenate(router.score_batch(reqs))
+    assert np.isfinite(out1).all()
+    assert np.array_equal(out1, out2)  # deterministic degraded responses
+    assert router.stats.degraded_responses == 2
+    assert router.stats.last_degraded
+    # free lists stay bounded: abandoned/failed calls returned their buffers
+    n_cached = sum(len(v) for v in router._pool._buffers.values())
+    assert n_cached <= 2 * router._pool.workers * len(router._pool._buffers)
+    router.close()
+
+
+def test_kill_shard_racing_flush_does_not_deadlock(params):
+    """Satellite (c): a flusher blocked behind a slow-ingest backlog is
+    woken by ``kill_shard`` (the victim pipe's non-blocking kill) instead of
+    deadlocking behind frames that will never apply."""
+    ranges = topology.shard_ranges(CFG.hash_space, 2)
+    pipe = TrainingPipeline(CFG, lr=0.05, seed=51, shard_ranges=ranges)
+    router = ShardRouter(CFG, n_shards=2, quantized=True)
+    like = jax.tree_util.tree_map(np.asarray, pipe.params)
+    router.configure_fanout(pipe.sender.manifests, like)
+    frames = [pipe.run_round(iter([_mk_batch(np.random.default_rng(52))]))
+              for _ in range(4)]
+    router.submit_updates(frames[0])
+    router.flush_updates()
+    router.shards[0]._pipe.faults = FaultPlan(ingest_sleep_s=0.25)
+    for f in frames[1:]:
+        router.submit_updates(f)
+    # a bounded flush on the backlogged pipe times out (False), cleanly
+    assert router.shards[0]._pipe.flush(timeout=0.05) is False
+    results = []
+    flusher = threading.Thread(
+        target=lambda: results.append(router.flush_updates(timeout=30.0)))
+    flusher.start()
+    time.sleep(0.1)
+    router.kill_shard(0)  # kills the victim's pipe; must wake the flusher
+    flusher.join(timeout=5.0)
+    assert not flusher.is_alive(), "flush deadlocked behind kill_shard"
+    assert len(results) == 1 and results[0][0] is None  # dead slice in vector
+    router.close()
+
+
+def test_kill_shard_edge_cases_and_all_dead_degraded_serving(params):
+    """Satellite (d): double-kill is idempotent; with replicas a second kill
+    of the same slot changes nothing; ``rotate_shard`` on a dead slice
+    raises; and killing the last replica of *every* slice still serves —
+    flagged degraded zero-rows responses, never an exception."""
+    dup = ShardRouter(CFG, n_shards=2, params=params, quantized=True,
+                      replicas=2, hedge_ms=5000)
+    dup.kill_shard(0, 0)
+    dup.kill_shard(0, 0)  # idempotent no-op
+    assert not dup.degraded  # the sibling still holds the slice
+    assert dup.replica_generations()[0][0] is None
+    dup.close()
+
+    router = ShardRouter(CFG, n_shards=2, params=params, quantized=True)
+    reqs = _requests(np.random.default_rng(61))
+    before = np.concatenate(router.score_batch(reqs))
+    router.kill_shard(0)
+    router.kill_shard(0)  # double-kill: no-op, stays latched degraded
+    assert router.degraded
+    with pytest.raises(ValueError, match="dead"):
+        router.rotate_shard(0)
+    router.kill_shard(1)  # the *last* live replica of the last live slice
+    out = np.concatenate(router.score_batch(reqs))  # must not raise
+    assert np.isfinite(out).all()
+    assert not np.array_equal(out, before)  # the rows really zeroed
+    assert router.stats.last_degraded and router.stats.degraded_responses >= 1
+    assert router.fleet_generations() == [None, None]
+    router.close()

@@ -191,6 +191,8 @@ def test_fused_single_engine_vs_shard_router():
     # the fleet re-sums xc pair terms across shards in its own fixed order;
     # give the cross-arm comparison that reassociation headroom on top
     assert float(np.max(np.abs(got - outs[1]))) <= tol + 1e-5
+    for r in routers.values():
+        r.close()
 
 
 def test_fused_scoring_while_deltas_stream():

@@ -558,10 +558,15 @@ def test_submit_after_close_raises_and_close_never_strands_frames():
     for t in threads:
         t.join()
     # every submit either completed or saw the closed pipe — and every
-    # accepted frame was published before the sentinel (nothing stranded)
+    # accepted frame was *processed* before the sentinel (nothing stranded):
+    # published, or NACKed by the integrity check — the racing submitters
+    # scramble frame order, and a full frame arriving behind a newer version
+    # is a replay under the PR 9 contract, rejected rather than applied
     assert len(results) == n_sent
     assert pipe._pending == 0
-    assert pipe.stats.published == results.count("ok")
+    assert (pipe.stats.published + pipe.stats.frames_rejected
+            == results.count("ok"))
+    assert pipe.stats.published >= 1
     with pytest.raises(RuntimeError):
         pipe.submit(frames[0])
 

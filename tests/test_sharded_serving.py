@@ -96,6 +96,7 @@ def test_materialized_params_roundtrip(params):
     router = ShardRouter(CFG, n_shards=3, params=params, quantized=True)
     full_q = Q.quantize_params_rows(params)
     mat = router.materialized_params()
+    router.close()
     for key in ("codes", "scale", "zero"):
         assert np.array_equal(mat["ffm"]["emb"][key], full_q["ffm"]["emb"][key])
         assert np.array_equal(mat["lr"]["w"][key], full_q["lr"]["w"][key])
@@ -114,6 +115,7 @@ def test_scores_bit_identical_across_shard_counts(params, quantized):
         router = ShardRouter(CFG, n_shards=n, params=params,
                              quantized=quantized)
         outs[n] = np.concatenate(router.score_batch(reqs))
+        router.close()
     for n in (2, 3, 4):
         assert np.array_equal(outs[n], outs[1]), f"N={n} bits != N=1"
 
@@ -126,6 +128,7 @@ def test_router_within_tolerance_of_forward_oracle(params):
     want = np.concatenate([
         np.asarray(router.score_uncached(ci, cv, ki, kv))
         for ci, cv, ki, kv in reqs])
+    router.close()
     np.testing.assert_allclose(got, want, atol=1e-5)
 
 
@@ -136,6 +139,7 @@ def test_quantized_router_matches_single_quantized_engine(params):
     single = InferenceEngine(CFG, params=params, quantized=True)
     got = np.concatenate(router.score_batch(reqs))
     want = np.concatenate(single.score_batch(reqs))
+    router.close()
     np.testing.assert_allclose(got, want, atol=1e-5)
 
 
@@ -146,6 +150,7 @@ def test_resident_bytes_split_across_shards(params):
     # tables split ~1/N; the small replicated head rides along per shard
     assert max(per_shard) < single.resident_weight_bytes / 2
     assert sum(per_shard) == router.resident_weight_bytes
+    router.close()
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +238,7 @@ def test_streamed_fleet_matches_single_engine_ingest(params):
     reqs = _requests(rng)
     got = np.concatenate(router.score_batch(reqs))
     want = np.concatenate(single.score_batch(reqs))
+    router.close()
     np.testing.assert_allclose(got, want, atol=1e-5)
 
 
@@ -256,6 +262,7 @@ def test_streamed_bits_invariant_across_shard_counts():
         router.flush_updates()
         req_rng = np.random.default_rng(11)
         outs[n] = np.concatenate(router.score_batch(_requests(req_rng)))
+        router.close()
     assert np.array_equal(outs[2], outs[1])
 
 
@@ -277,6 +284,7 @@ def test_kill_shard_degrades_gracefully(params):
     # oracle path still works against the zero-filled materialized tables
     o = router.score_uncached(*reqs[0])
     assert np.isfinite(np.asarray(o)).all()
+    router.close()
 
 
 def test_torn_generation_vector_serves(params):
@@ -312,6 +320,8 @@ def test_torn_generation_vector_serves(params):
     other.flush_updates()
     assert np.array_equal(healed,
                           np.concatenate(other.score_batch(reqs)))
+    router.close()
+    other.close()
 
 
 def test_rotate_shard_swaps_successor_and_keeps_delta_chain(params):
@@ -338,6 +348,7 @@ def test_rotate_shard_swaps_successor_and_keeps_delta_chain(params):
     router.flush_updates()
     assert succ.weights_version == 2
     assert np.isfinite(np.concatenate(router.score_batch(reqs))).all()
+    router.close()
 
 
 def test_engine_rotate_adopts_params_and_version(params):

@@ -275,8 +275,8 @@ def test_async_update_pipe_publishes_in_order():
     updates = [pl.run_round(stream.batches(64, 2)) for _ in range(4)]
     for u in updates:
         assert engine.submit_update(u, pl.sender.manifest, pl.params)
-    gen = engine.update_pipe().flush()
-    assert gen == 4 and engine.generation == 4
+    assert engine.update_pipe().flush()  # True: drained, not killed
+    assert engine.generation == 4
     assert engine.weights_version == 4  # frames applied FIFO
     assert engine.update_pipe().stats.published == 4
     ci, cv, ki, kv = stream.request(5)
