@@ -56,6 +56,18 @@ def main() -> None:
 
     failures = 0
     print("name,us_per_call,derived")
+    if args.smoke:
+        # PR 10 gate: the invariant linter (lock discipline, trace purity,
+        # thread hygiene, jit-cache hygiene) must be clean before the bench
+        # numbers mean anything — a silently-broken contract can produce
+        # fast-but-wrong results (e.g. a device array re-keying a jit cache)
+        from repro.analysis import run_lint
+
+        violations = run_lint()
+        for v in violations:
+            print(f"analysis,0,FAILED: {v}")
+        if violations:
+            failures += 1
     for name, module in BENCHES:
         if args.smoke and name not in SMOKE:
             continue

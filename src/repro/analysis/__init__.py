@@ -1,0 +1,13 @@
+"""Machine-checked invariants for the serving stack.
+
+``python -m repro.analysis`` lints ``src/repro`` against the contracts
+that previously lived as docstring prose: the declared lock partial order
+(:mod:`repro.analysis.lock_order`), ``guarded-by`` attribute annotations,
+trace/host purity, thread hygiene, and jit-cache hygiene.  The runtime
+companion (:mod:`repro.analysis.lock_witness`) checks real acquisition
+orders during the concurrency test suites.  See ``README.md`` in this
+package for the rule set and pragma syntax.
+"""
+from repro.analysis.lint import Violation, run_lint
+
+__all__ = ["Violation", "run_lint"]

@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 when clean, 1 when violations were found.  Violations print
+as ``file:line rule message`` — the format the tier-1 test and the
+benchmark smoke gate both consume.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import DEFAULT_TARGET, run_lint
+from repro.analysis.rules import ALL_RULES, rule_ids
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant linter for src/repro (lock discipline, "
+                    "trace purity, thread hygiene, jit-cache hygiene)")
+    p.add_argument("paths", nargs="*", default=None,
+                   help=f"files/directories to lint (default: "
+                        f"{DEFAULT_TARGET})")
+    p.add_argument("--rules", help="comma-separated rule ids to run "
+                                   "(default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the registered rule ids and exit")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        for rid in rule_ids():
+            print(rid)
+        return 0
+
+    rules = None
+    if args.rules:
+        wanted = {s.strip() for s in args.rules.split(",") if s.strip()}
+        unknown = wanted - set(rule_ids())
+        if unknown:
+            p.error(f"unknown rule id(s): {sorted(unknown)}")
+        rules = [r() for r in ALL_RULES if r.id in wanted]
+
+    violations = run_lint(args.paths or None, rules=rules)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"{len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

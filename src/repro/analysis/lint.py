@@ -1,0 +1,171 @@
+"""AST lint framework for the repo's machine-checked invariants.
+
+The rules (:mod:`repro.analysis.rules`) encode contracts that used to live
+as docstring prose — lock discipline, trace purity, thread hygiene,
+jit-cache hygiene.  ``python -m repro.analysis`` runs the full pass over
+``src/repro``; ``tests/test_static_analysis.py`` asserts it stays clean.
+
+Suppression: a ``# lint: ignore[rule-id] <reason>`` comment on the
+offending line (or alone on the line above) silences that rule for that
+line.  The reason is mandatory — a pragma without one is itself a
+violation (``bad-pragma``), so every suppression carries its
+justification in the diff.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+SRC_ROOT = Path(__file__).resolve().parents[2]       # .../src
+DEFAULT_TARGET = SRC_ROOT / "repro"
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*ignore\[([a-z0-9_,\- ]+)\]\s*(.*)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str          # repo-relative when possible
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+@dataclass
+class Module:
+    """One parsed source file plus the token-level facts rules need."""
+
+    path: Path
+    rel: str
+    source: str
+    tree: ast.Module
+    comments: Dict[int, str] = field(default_factory=dict)  # line -> text
+
+    def comment_on(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+
+@dataclass
+class LintContext:
+    """Cross-file state built in pass 1, read by rules in pass 2."""
+
+    modules: List[Module] = field(default_factory=list)
+    # guarded attr name -> list of (owner class, lock attr name, decl site)
+    guarded_attrs: Dict[str, List] = field(default_factory=dict)
+    # class name -> tuple of base class names (by simple name)
+    class_bases: Dict[str, tuple] = field(default_factory=dict)
+
+    def ancestors(self, cls: str) -> Set[str]:
+        out: Set[str] = set()
+        todo = list(self.class_bases.get(cls, ()))
+        while todo:
+            b = todo.pop()
+            if b in out:
+                continue
+            out.add(b)
+            todo.extend(self.class_bases.get(b, ()))
+        return out
+
+
+def _collect_comments(source: str) -> Dict[int, str]:
+    comments: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+    except tokenize.TokenError:
+        pass
+    return comments
+
+
+def parse_module(path: Path, root: Optional[Path] = None) -> Module:
+    source = path.read_text()
+    try:
+        rel = str(path.relative_to(root if root is not None
+                                   else SRC_ROOT.parent))
+    except ValueError:
+        rel = str(path)
+    tree = ast.parse(source, filename=str(path))
+    return Module(path=path, rel=rel, source=source, tree=tree,
+                  comments=_collect_comments(source))
+
+
+def _iter_py_files(paths: Iterable[Path]) -> Iterable[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts)
+        elif p.suffix == ".py":
+            yield p
+
+
+def _pragmas(mod: Module) -> Dict[int, Set[str]]:
+    """line -> set of suppressed rule ids ('*' wildcard allowed)."""
+    out: Dict[int, Set[str]] = {}
+    src_lines = mod.source.splitlines()
+    for line, text in mod.comments.items():
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        target = line
+        stripped = (src_lines[line - 1].strip()
+                    if line - 1 < len(src_lines) else "")
+        if stripped.startswith("#"):  # pragma alone on its line: next line
+            target = line + 1
+        out.setdefault(target, set()).update(ids)
+    return out
+
+
+def _pragma_violations(mod: Module) -> List[Violation]:
+    out = []
+    for line, text in sorted(mod.comments.items()):
+        m = _PRAGMA_RE.search(text)
+        if m and not m.group(2).strip():
+            out.append(Violation(mod.rel, line, "bad-pragma",
+                                 "lint: ignore pragma without a reason"))
+    return out
+
+
+def build_context(files: Sequence[Path],
+                  root: Optional[Path] = None) -> LintContext:
+    from repro.analysis.rules import collect_global
+
+    ctx = LintContext()
+    for f in files:
+        mod = parse_module(f, root=root)
+        ctx.modules.append(mod)
+        collect_global(mod, ctx)
+    return ctx
+
+
+def run_lint(paths: Optional[Sequence[Path]] = None,
+             rules: Optional[Sequence] = None,
+             root: Optional[Path] = None) -> List[Violation]:
+    """Run ``rules`` (default: all registered) over ``paths`` (default:
+    ``src/repro``) and return unsuppressed violations, sorted."""
+    from repro.analysis.rules import ALL_RULES
+
+    files = list(_iter_py_files(paths if paths is not None
+                                else [DEFAULT_TARGET]))
+    active = list(rules) if rules is not None else [r() for r in ALL_RULES]
+    ctx = build_context(files, root=root)
+    out: List[Violation] = []
+    for mod in ctx.modules:
+        suppressed = _pragmas(mod)
+        out.extend(_pragma_violations(mod))
+        for rule in active:
+            for v in rule.check(mod, ctx):
+                if rule.id in suppressed.get(v.line, ()) \
+                        or "*" in suppressed.get(v.line, ()):
+                    continue
+                out.append(v)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))

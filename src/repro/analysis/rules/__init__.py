@@ -1,0 +1,35 @@
+"""Rule registry for :mod:`repro.analysis.lint`.
+
+Each rule is a class with an ``id`` and a ``check(module, ctx)`` method
+yielding :class:`~repro.analysis.lint.Violation`.  ``collect_global`` is
+the pass-1 hook: it registers cross-file facts (guarded-by annotations,
+class bases) on the :class:`~repro.analysis.lint.LintContext` before any
+rule runs.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules.jit_cache import JitCacheRule
+from repro.analysis.rules.lock_discipline import (GuardedByRule,
+                                                  LockOrderRule,
+                                                  collect_guards)
+from repro.analysis.rules.thread_hygiene import (SilentExceptRule,
+                                                 ThreadDaemonRule)
+from repro.analysis.rules.trace_purity import NpPurityRule, TracePurityRule
+
+ALL_RULES = (
+    LockOrderRule,
+    GuardedByRule,
+    TracePurityRule,
+    NpPurityRule,
+    ThreadDaemonRule,
+    SilentExceptRule,
+    JitCacheRule,
+)
+
+
+def collect_global(mod, ctx) -> None:
+    collect_guards(mod, ctx)
+
+
+def rule_ids():
+    return [r.id for r in ALL_RULES]

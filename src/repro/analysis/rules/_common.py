@@ -1,0 +1,223 @@
+"""Shared AST plumbing for the lint rules.
+
+The load-bearing piece is :class:`LockTracker`: a statement-ordered walk of
+one function body that maintains the set of named locks held at each point.
+It understands three acquisition idioms —
+
+* ``with <lock>:`` blocks (including multi-item ``with a, b:``),
+* the explicit ``<lock>.acquire()`` … ``try/finally: <lock>.release()``
+  pattern (flow-insensitively: held from the ``acquire()`` statement to the
+  matching ``release()`` or the end of the enclosing block),
+* a ``# requires-lock: <attr>`` comment on (or directly above) a ``def``
+  line, declaring that every caller holds that lock — the static analogue
+  of "caller holds X"; the runtime witness checks the callers actually do.
+
+Nested ``def``s drop the enclosing held-set: a closure defined under a lock
+does not run under it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.analysis import lock_order
+
+GUARD_RE = re.compile(
+    r"#\s*guarded-by(\(calls\))?:\s*([A-Za-z_][A-Za-z0-9_]*)")
+REQUIRES_RE = re.compile(r"#\s*requires-lock:\s*([A-Za-z_][A-Za-z0-9_, ]*)")
+
+# Names that look like locks when they appear as a `with` item / .acquire()
+# receiver.  Bare-name entries cover module/function-local locks.
+LOCK_ATTRS = frozenset(lock_order.ATTR_LOCKS) | {"_lock"}
+
+
+@dataclass(frozen=True)
+class HeldLock:
+    attr: str                 # attribute / bare name, e.g. "_ingest_lock"
+    qual: Optional[str]       # qualified name when resolved, else None
+    line: int
+    via: str                  # "with" | "acquire" | "requires-lock"
+
+
+def expr_text(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"
+
+
+def lock_expr(node: ast.AST) -> Optional[Tuple[str, bool]]:
+    """``(attr name, receiver is self)`` when ``node`` names a known lock."""
+    if isinstance(node, ast.Attribute) and node.attr in LOCK_ATTRS:
+        is_self = isinstance(node.value, ast.Name) and node.value.id == "self"
+        return node.attr, is_self
+    if isinstance(node, ast.Name) and node.id in LOCK_ATTRS:
+        return node.id, False
+    return None
+
+
+def resolve_lock(attr: str, is_self: bool,
+                 class_name: Optional[str]) -> Optional[str]:
+    return lock_order.resolve(attr, class_name if is_self else None)
+
+
+def functions_with_classes(tree: ast.Module) -> Iterator[
+        Tuple[ast.FunctionDef, Optional[str]]]:
+    """Every function def (incl. nested) with its nearest enclosing class."""
+    def walk(node: ast.AST, cls: Optional[str]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, cls
+                yield from walk(child, cls)
+            else:
+                yield from walk(child, cls)
+    yield from walk(tree, None)
+
+
+def required_locks(fn: ast.AST, comments: Dict[int, str]) -> List[str]:
+    """Locks declared held by callers via ``# requires-lock:`` on the def
+    line or the line directly above it."""
+    out: List[str] = []
+    for line in (fn.lineno, fn.lineno - 1):
+        m = REQUIRES_RE.search(comments.get(line, ""))
+        if m:
+            out.extend(s.strip() for s in m.group(1).split(",") if s.strip())
+    return out
+
+
+def _acquire_call(stmt: ast.stmt, method: str) -> Optional[ast.AST]:
+    """The lock expression of a plain ``<lock>.acquire()`` /
+    ``<lock>.release()`` statement, else None."""
+    if not isinstance(stmt, ast.Expr):
+        return None
+    call = stmt.value
+    if (isinstance(call, ast.Call) and isinstance(call.func, ast.Attribute)
+            and call.func.attr == method
+            and lock_expr(call.func.value) is not None):
+        return call.func.value
+    return None
+
+
+def shallow_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """The expression children of a statement, excluding nested statement
+    bodies (those are walked with their own held-set)."""
+    body_fields = ("body", "orelse", "finalbody", "handlers")
+    out: List[ast.AST] = []
+    for name, value in ast.iter_fields(stmt):
+        if name in body_fields:
+            continue
+        if isinstance(value, ast.AST):
+            out.append(value)
+        elif isinstance(value, list):
+            out.extend(v for v in value if isinstance(v, ast.AST))
+    return out
+
+
+class LockTracker:
+    """Walk one function body, reporting held locks at each event.
+
+    ``on_acquire(attr, qual, node, held)`` fires when a tracked lock is
+    taken (before it is pushed).  ``on_expr(node, held)`` fires for every
+    expression subtree with the held-set in scope.  ``on_nested(fn)`` fires
+    for nested function defs (processed separately by the caller)."""
+
+    def __init__(self, class_name: Optional[str],
+                 on_acquire: Optional[Callable] = None,
+                 on_expr: Optional[Callable] = None,
+                 on_nested: Optional[Callable] = None):
+        self.class_name = class_name
+        self.on_acquire = on_acquire
+        self.on_expr = on_expr
+        self.on_nested = on_nested
+
+    def run(self, fn: ast.AST, initial: Sequence[HeldLock] = ()) -> None:
+        self._visit_block(list(fn.body), list(initial))
+
+    def _make_held(self, node: ast.AST, via: str) -> Optional[HeldLock]:
+        m = lock_expr(node)
+        if m is None:
+            return None
+        attr, is_self = m
+        qual = resolve_lock(attr, is_self, self.class_name)
+        return HeldLock(attr=attr, qual=qual, line=node.lineno, via=via)
+
+    def _visit_block(self, stmts: List[ast.stmt],
+                     held: List[HeldLock]) -> None:
+        held = list(held)
+        for stmt in stmts:
+            acq = _acquire_call(stmt, "acquire")
+            if acq is not None:
+                h = self._make_held(acq, "acquire")
+                if h is not None:
+                    if self.on_acquire:
+                        self.on_acquire(h, acq, list(held))
+                    held.append(h)
+                continue
+            rel = _acquire_call(stmt, "release")
+            if rel is not None:
+                m = lock_expr(rel)
+                for i in range(len(held) - 1, -1, -1):
+                    if held[i].attr == m[0]:
+                        del held[i]
+                        break
+                continue
+            self._visit_stmt(stmt, held)
+
+    def _visit_stmt(self, stmt: ast.stmt, held: List[HeldLock]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if self.on_nested:
+                self.on_nested(stmt)
+            return
+        if isinstance(stmt, ast.With):
+            inner = list(held)
+            for item in stmt.items:
+                h = self._make_held(item.context_expr, "with")
+                if h is not None:
+                    if self.on_acquire:
+                        self.on_acquire(h, item.context_expr, list(inner))
+                    inner.append(h)
+                elif self.on_expr:
+                    self.on_expr(item.context_expr, list(inner))
+            self._visit_block(stmt.body, inner)
+            return
+        if self.on_expr:
+            compound = any(getattr(stmt, f, None)
+                           for f in ("body", "orelse", "finalbody",
+                                     "handlers"))
+            if compound:
+                for e in shallow_exprs(stmt):
+                    self.on_expr(e, list(held))
+            else:
+                self.on_expr(stmt, list(held))
+        for name in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, name, None)
+            if sub:
+                self._visit_block(sub, held)
+        for handler in getattr(stmt, "handlers", []) or []:
+            self._visit_block(handler.body, held)
+
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[ast.AST, List[str]]]:
+    """Decompose ``base.a.b[i].c`` into ``(base expr, ["a", "b", "c"])``."""
+    attrs: List[str] = []
+    cur = node
+    while True:
+        if isinstance(cur, ast.Attribute):
+            attrs.append(cur.attr)
+            cur = cur.value
+        elif isinstance(cur, ast.Subscript):
+            cur = cur.value
+        else:
+            break
+    if not attrs:
+        return None
+    attrs.reverse()
+    return cur, attrs
+
+
+def is_self(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id == "self"

@@ -1,0 +1,71 @@
+"""jit-cache hygiene: numpy-keyed hot paths stay numpy.
+
+jax's jit cache keys on the argument *container* type: warming with device
+arrays leaves the numpy-argument entries cold, and building device arrays
+on the request path re-traces on first hit and adds a device transfer per
+call (the ROADMAP PR 1/2 invariant: "hot path and warmup both use host
+numpy arrays").  This rule walks the serving hot-path functions — a fixed
+name set plus anything annotated ``# jit-cache: numpy-keyed`` on its
+``def`` line — and flags device-array construction inside them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.lint import LintContext, Module, Violation
+
+# serving functions on the request/warmup path that feed jitted entry
+# points and must pass host numpy arrays
+HOT_PATH_FUNCS = {
+    "warmup", "_warmup_dummies", "_forward_args", "_candidates_forward",
+    "_score_batch", "_score_spans", "_plan_spans", "_compact_grids",
+    "_resolve_contexts", "_resolve_contexts_fused", "_insert_fused_misses",
+    "_scatter_gather_forward", "prewarm_contexts", "score_batch",
+}
+
+_JNP_CONSTRUCTORS = {
+    "asarray", "array", "zeros", "ones", "full", "empty", "arange",
+    "concatenate", "stack", "broadcast_to", "take",
+}
+
+_MARK = "# jit-cache: numpy-keyed"
+
+
+class JitCacheRule:
+    id = "jit-cache"
+
+    def _is_hot(self, fn: ast.FunctionDef, mod: Module) -> bool:
+        if fn.name in HOT_PATH_FUNCS:
+            return True
+        for line in (fn.lineno, fn.lineno - 1):
+            if _MARK in mod.comment_on(line):
+                return True
+        return False
+
+    def check(self, mod: Module, ctx: LintContext) -> Iterator[Violation]:
+        if "serving" not in mod.rel.replace("\\", "/").split("/"):
+            return iter(())
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and self._is_hot(node, mod)):
+                continue
+            for sub in ast.walk(node):
+                bad = None
+                if isinstance(sub, ast.Attribute) and \
+                        isinstance(sub.value, ast.Name):
+                    if sub.value.id == "jnp" and \
+                            sub.attr in _JNP_CONSTRUCTORS:
+                        bad = f"jnp.{sub.attr}"
+                    elif sub.value.id == "jax" and \
+                            sub.attr == "device_put":
+                        bad = "jax.device_put"
+                if bad is not None:
+                    out.append(Violation(
+                        mod.rel, sub.lineno, self.id,
+                        f"{bad} on the numpy-keyed hot path "
+                        f"('{node.name}') — device arrays re-key the jit "
+                        f"cache and leave warmup entries cold; keep host "
+                        f"numpy until the jit boundary"))
+        return iter(out)

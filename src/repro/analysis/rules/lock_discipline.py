@@ -1,0 +1,193 @@
+"""Lock discipline: the declared partial order + ``guarded-by`` writes.
+
+``lock-order``
+    A ``with``-nesting (or ``.acquire()`` nesting) that takes a lock whose
+    declared rank is <= the rank of a lock already held contradicts
+    :mod:`repro.analysis.lock_order` — the static half of the runtime
+    witness.
+
+``guarded-by``
+    An attribute annotated ``# guarded-by: <lock>`` at its declaration
+    (``__init__`` assignment or dataclass field) must only be written — or
+    have methods invoked on it, which is how receiver state mutates — while
+    that lock is held.  ``__init__``/``__post_init__`` are exempt (the
+    object is still private), as are functions annotated
+    ``# requires-lock: <lock>`` (callers hold it; the witness verifies).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis import lock_order
+from repro.analysis.lint import LintContext, Module, Violation
+from repro.analysis.rules import _common as C
+
+_EXEMPT_FUNCS = {"__init__", "__post_init__"}
+
+# Generic attribute names whose guarded-by contract only binds writes
+# through ``self`` — applying them to arbitrary receivers would tie
+# unrelated classes' same-named attributes to the wrong lock (e.g. the
+# single-threaded pipeline Metrics shares field names with HogwildStats).
+_SELF_ONLY_ATTRS = {"stats", "state", "strikes", "retry_at",
+                    "examples", "losses", "labels", "scores", "col_alive"}
+
+
+def collect_guards(mod: Module, ctx: LintContext) -> None:
+    """Pass 1: register ``# guarded-by:`` annotations and class bases."""
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        bases = tuple(
+            b.id if isinstance(b, ast.Name) else getattr(b, "attr", "")
+            for b in node.bases)
+        ctx.class_bases[node.name] = bases
+        for stmt in node.body:
+            # dataclass / class-level fields
+            target = None
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                target = stmt.target.id
+            elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                target = stmt.targets[0].id
+            if target is not None:
+                m = C.GUARD_RE.search(mod.comment_on(stmt.lineno))
+                if m:
+                    ctx.guarded_attrs.setdefault(target, []).append(
+                        (node.name, m.group(2), bool(m.group(1)),
+                         f"{mod.rel}:{stmt.lineno}"))
+            if isinstance(stmt, ast.FunctionDef) and \
+                    stmt.name in _EXEMPT_FUNCS:
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                        continue
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        if isinstance(t, ast.Attribute) and \
+                                C.is_self(t.value):
+                            m = C.GUARD_RE.search(
+                                mod.comment_on(sub.lineno))
+                            if m:
+                                ctx.guarded_attrs.setdefault(
+                                    t.attr, []).append(
+                                    (node.name, m.group(2),
+                                     bool(m.group(1)),
+                                     f"{mod.rel}:{sub.lineno}"))
+
+
+class LockOrderRule:
+    id = "lock-order"
+
+    def check(self, mod: Module,
+              ctx: LintContext) -> Iterator[Violation]:
+        out: List[Violation] = []
+
+        def on_acquire(h: C.HeldLock, node: ast.AST,
+                       held: List[C.HeldLock]) -> None:
+            if h.qual is None:
+                return
+            r_new = lock_order.rank_of(h.qual)
+            if r_new is None:
+                return
+            for prev in held:
+                if prev.qual is None:
+                    continue
+                r_prev = lock_order.rank_of(prev.qual)
+                if r_prev is None:
+                    continue
+                if r_prev > r_new:
+                    out.append(Violation(
+                        mod.rel, node.lineno, self.id,
+                        f"acquires {h.qual} (rank {r_new}) while holding "
+                        f"{prev.qual} (rank {r_prev}, line {prev.line}) — "
+                        f"contradicts the declared order in "
+                        f"analysis/lock_order.py"))
+                elif r_prev == r_new:
+                    out.append(Violation(
+                        mod.rel, node.lineno, self.id,
+                        f"nests {h.qual} inside another {prev.qual} "
+                        f"(line {prev.line}) — equal-rank locks have no "
+                        f"declared order"))
+
+        for fn, cls in C.functions_with_classes(mod.tree):
+            initial = [
+                C.HeldLock(attr=a,
+                           qual=lock_order.resolve(a, cls),
+                           line=fn.lineno, via="requires-lock")
+                for a in C.required_locks(fn, mod.comments)]
+            C.LockTracker(cls, on_acquire=on_acquire).run(fn, initial)
+        return iter(out)
+
+
+class GuardedByRule:
+    id = "guarded-by"
+
+    def check(self, mod: Module,
+              ctx: LintContext) -> Iterator[Violation]:
+        if not ctx.guarded_attrs:
+            return iter(())
+        out: List[Violation] = []
+
+        def applicable_guard(attr: str, base: ast.AST,
+                             cls: Optional[str]) -> Optional[tuple]:
+            entries = ctx.guarded_attrs.get(attr)
+            if not entries:
+                return None
+            if C.is_self(base):
+                for owner, lock, calls, site in entries:
+                    if cls is not None and (
+                            owner == cls or owner in ctx.ancestors(cls)):
+                        return owner, lock, calls, site
+                return None
+            if attr in _SELF_ONLY_ATTRS:
+                return None
+            return entries[0]
+
+        def check_chain(node: ast.AST, held: List[C.HeldLock],
+                        cls: Optional[str], what: str,
+                        is_call: bool = False) -> None:
+            chain = C.attr_chain(node)
+            if chain is None:
+                return
+            base, attrs = chain
+            for attr in attrs:
+                guard = applicable_guard(attr, base, cls)
+                if guard is None:
+                    continue
+                owner, lock, calls, site = guard
+                if is_call and not calls:
+                    continue  # plain guarded-by: binds writes only
+                if any(h.attr == lock for h in held):
+                    continue
+                out.append(Violation(
+                    mod.rel, node.lineno, self.id,
+                    f"{what} {owner}.{attr} (guarded-by {lock}, declared "
+                    f"at {site}) outside a 'with {lock}' block"))
+
+        def make_on_expr(cls: Optional[str]):
+            def on_expr(node: ast.AST, held: List[C.HeldLock]) -> None:
+                for sub in ast.walk(node):
+                    if isinstance(sub, (ast.Assign, ast.AugAssign,
+                                        ast.AnnAssign)):
+                        targets = (sub.targets
+                                   if isinstance(sub, ast.Assign)
+                                   else [sub.target])
+                        for t in targets:
+                            check_chain(t, held, cls, "write to")
+                    elif isinstance(sub, ast.Call) and \
+                            isinstance(sub.func, ast.Attribute):
+                        check_chain(sub.func.value, held, cls,
+                                    f"call to .{sub.func.attr}() on",
+                                    is_call=True)
+            return on_expr
+
+        for fn, cls in C.functions_with_classes(mod.tree):
+            if fn.name in _EXEMPT_FUNCS:
+                continue
+            initial = [C.HeldLock(attr=a, qual=lock_order.resolve(a, cls),
+                                  line=fn.lineno, via="requires-lock")
+                       for a in C.required_locks(fn, mod.comments)]
+            C.LockTracker(cls, on_expr=make_on_expr(cls)).run(fn, initial)
+        return iter(out)

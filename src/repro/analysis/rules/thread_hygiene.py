@@ -1,0 +1,124 @@
+"""Thread hygiene: no orphan threads, no silently swallowed exceptions.
+
+``thread-daemon``
+    Every ``threading.Thread`` is either ``daemon=True`` (designed to be
+    abandoned — update-pipe ingest, the shard prober) or joined: a
+    ``.join(`` in the constructing function, or — when stored on ``self``
+    — anywhere in the owning class (``close()``).  ``ThreadPoolExecutor``
+    likewise needs a ``.shutdown(`` in scope.
+
+``silent-except``
+    A bare ``except:`` anywhere, or a broad ``except Exception/
+    BaseException:`` whose body is only ``pass``/``continue``, swallows
+    background-thread failures with nothing latched anywhere observable.
+    Handlers that latch state, log, re-raise, or fall back do something —
+    only the do-nothing form is flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis.lint import LintContext, Module, Violation
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _enclosing_maps(tree: ast.Module):
+    """node -> nearest enclosing (function, class) def nodes."""
+    fn_of, cls_of = {}, {}
+
+    def walk(node, fn, cls):
+        for child in ast.iter_child_nodes(node):
+            f, c = fn, cls
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                f = child
+            elif isinstance(child, ast.ClassDef):
+                c = child
+            fn_of[child] = fn
+            cls_of[child] = cls
+            walk(child, f, c)
+    walk(tree, None, None)
+    return fn_of, cls_of
+
+
+def _contains_method_call(scope: Optional[ast.AST], method: str) -> bool:
+    if scope is None:
+        return False
+    return any(isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+               and n.func.attr == method for n in ast.walk(scope))
+
+
+class ThreadDaemonRule:
+    id = "thread-daemon"
+
+    def check(self, mod: Module, ctx: LintContext) -> Iterator[Violation]:
+        out: List[Violation] = []
+        fn_of, cls_of = _enclosing_maps(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            is_thread = (isinstance(f, ast.Attribute) and f.attr == "Thread"
+                         and isinstance(f.value, ast.Name)
+                         and f.value.id == "threading")
+            is_pool = ((isinstance(f, ast.Name)
+                        and f.id == "ThreadPoolExecutor")
+                       or (isinstance(f, ast.Attribute)
+                           and f.attr == "ThreadPoolExecutor"))
+            if not (is_thread or is_pool):
+                continue
+            if is_thread and any(
+                    kw.arg == "daemon"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True for kw in node.keywords):
+                continue
+            reclaim = "join" if is_thread else "shutdown"
+            if _contains_method_call(fn_of.get(node), reclaim):
+                continue
+            if _contains_method_call(cls_of.get(node), reclaim):
+                continue
+            kind = "threading.Thread" if is_thread else "ThreadPoolExecutor"
+            out.append(Violation(
+                mod.rel, node.lineno, self.id,
+                f"{kind} is neither daemon nor reclaimed — add "
+                f"daemon=True or a .{reclaim}() in the owning "
+                f"function/class (close())"))
+        return iter(out)
+
+
+class SilentExceptRule:
+    id = "silent-except"
+
+    def check(self, mod: Module, ctx: LintContext) -> Iterator[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(Violation(
+                    mod.rel, node.lineno, self.id,
+                    "bare 'except:' — catches SystemExit/KeyboardInterrupt "
+                    "and hides the failure; name the exception"))
+                continue
+            names = []
+            t = node.type
+            elts = t.elts if isinstance(t, ast.Tuple) else [t]
+            for e in elts:
+                if isinstance(e, ast.Name):
+                    names.append(e.id)
+                elif isinstance(e, ast.Attribute):
+                    names.append(e.attr)
+            if not any(n in _BROAD for n in names):
+                continue
+            body = [s for s in node.body
+                    if not (isinstance(s, ast.Expr)
+                            and isinstance(s.value, ast.Constant))]
+            if all(isinstance(s, (ast.Pass, ast.Continue, ast.Break))
+                   for s in body):
+                out.append(Violation(
+                    mod.rel, node.lineno, self.id,
+                    "broad except swallows the error with nothing latched "
+                    "— record it somewhere observable (the pipe "
+                    "last_frame_error idiom), log it, or narrow the type"))
+        return iter(out)

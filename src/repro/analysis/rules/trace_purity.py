@@ -1,0 +1,142 @@
+"""Trace purity: traced code stays device-pure, ``*_np`` code stays host-pure.
+
+``trace-purity``
+    Functions reachable from ``jax.jit`` / ``pl.pallas_call`` sites run at
+    *trace* time: touching ``time``, ``threading``, or IO there executes
+    once during tracing and silently never again, and ``numpy`` values
+    become baked-in constants.  Reachability is module-local: a def is a
+    root when it is decorated with jit (directly or via
+    ``partial(jax.jit, ...)``), or its name appears inside a
+    ``jax.jit(...)`` / ``pl.pallas_call(...)`` call; roots pull in the
+    module-local functions they call by bare name.
+
+``np-purity``
+    ``*_np`` functions are the host half of the hot path (packed numpy
+    gathers, prefix extension) — they must never touch ``jnp``: a stray
+    device op would put XLA dispatch on the ingest thread or re-key a jit
+    cache with device arrays.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set
+
+from repro.analysis.lint import LintContext, Module, Violation
+
+_HOST_MODULES = {"time", "threading"}
+_IO_CALLS = {"open", "print", "input"}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """``jax.jit`` / bare ``jit`` / ``partial(jax.jit, ...)``."""
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+            isinstance(node.value, ast.Name) and node.value.id == "jax":
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id == "partial":
+            return any(_is_jit_expr(a) for a in node.args)
+        return _is_jit_expr(f)
+    return False
+
+
+def _is_trace_entry_call(node: ast.Call) -> bool:
+    """``jax.jit(...)`` or ``pl.pallas_call(...)`` / ``pallas_call(...)``."""
+    f = node.func
+    if _is_jit_expr(f):
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "pallas_call":
+        return True
+    if isinstance(f, ast.Name) and f.id == "pallas_call":
+        return True
+    return False
+
+
+def _local_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def traced_functions(mod: Module) -> List[ast.FunctionDef]:
+    defs = _local_defs(mod.tree)
+    roots: Set[str] = set()
+    for name, fn in defs.items():
+        if any(_is_jit_expr(d) for d in fn.decorator_list):
+            roots.add(name)
+    # names referenced inside jax.jit(...) / pl.pallas_call(...) arguments
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and _is_trace_entry_call(node):
+            for arg in node.args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id in defs:
+                        roots.add(sub.id)
+    # module-local closure: traced functions pull in the local defs they
+    # call by bare name (methods and cross-module calls are out of scope)
+    todo, seen = list(roots), set()
+    while todo:
+        name = todo.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for node in ast.walk(defs[name]):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in defs and node.func.id not in seen:
+                todo.append(node.func.id)
+    return [defs[n] for n in sorted(seen)]
+
+
+class TracePurityRule:
+    id = "trace-purity"
+
+    def check(self, mod: Module, ctx: LintContext) -> Iterator[Violation]:
+        out: List[Violation] = []
+        for fn in traced_functions(mod):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Attribute) and \
+                        isinstance(node.value, ast.Name):
+                    base = node.value.id
+                    if base in ("np", "numpy"):
+                        out.append(Violation(
+                            mod.rel, node.lineno, self.id,
+                            f"traced function '{fn.name}' references "
+                            f"numpy ({base}.{node.attr}) — host values "
+                            f"bake into the trace as constants"))
+                    elif base in _HOST_MODULES:
+                        out.append(Violation(
+                            mod.rel, node.lineno, self.id,
+                            f"traced function '{fn.name}' touches "
+                            f"{base}.{node.attr} — runs once at trace "
+                            f"time, never per call"))
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in _IO_CALLS:
+                    out.append(Violation(
+                        mod.rel, node.lineno, self.id,
+                        f"traced function '{fn.name}' performs IO "
+                        f"({node.func.id}) — silently skipped after "
+                        f"tracing"))
+        return iter(out)
+
+
+class NpPurityRule:
+    id = "np-purity"
+
+    def check(self, mod: Module, ctx: LintContext) -> Iterator[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name.endswith("_np")):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Attribute) and \
+                        isinstance(sub.value, ast.Name) and \
+                        sub.value.id == "jnp":
+                    out.append(Violation(
+                        mod.rel, sub.lineno, self.id,
+                        f"host-path function '{node.name}' calls "
+                        f"jnp.{sub.attr} — *_np functions must stay "
+                        f"numpy-only (no XLA dispatch on host paths)"))
+        return iter(out)

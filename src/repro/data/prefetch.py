@@ -30,6 +30,10 @@ class Prefetcher:
     def __init__(self, it: Iterable[Any], depth: int = 4):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self.stats = PrefetchStats()
+        # producer-side failure, latched for the consumer: without it a
+        # raising source iterator would kill the daemon thread silently and
+        # leave __next__ blocked on an empty queue forever
+        self.error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run, args=(iter(it),), daemon=True)
         self._thread.start()
 
@@ -42,6 +46,9 @@ class Prefetcher:
                 self._q.put(item)
         except StopIteration:
             self._q.put(self._SENTINEL)
+        except Exception as e:
+            self.error = e
+            self._q.put(self._SENTINEL)
 
     def __iter__(self):
         return self
@@ -51,6 +58,10 @@ class Prefetcher:
         item = self._q.get()
         self.stats.consumer_wait_s += time.perf_counter() - t0
         if item is self._SENTINEL:
+            self._q.put(self._SENTINEL)  # keep later callers unblocked too
+            if self.error is not None:
+                raise RuntimeError(
+                    "prefetch source iterator failed") from self.error
             raise StopIteration
         self.stats.batches += 1
         return item

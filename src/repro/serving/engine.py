@@ -153,6 +153,16 @@ tracked per request with p50/p95/p99 percentiles in :class:`ServeStats`.
 Cross-request candidate dedup packs the microbatch's ``(group, idx, val)``
 rows into one contiguous int32 matrix and dedups with ``np.unique`` on a
 void view — no per-row Python hashing on the hot path.
+
+**Machine-checked invariants (PR 10).** The concurrency and purity
+contracts this module leans on — the lock partial order (`_pipe_lock` and
+`_lock` sit *under* the pipe's `_ingest_lock`; see
+``repro.analysis.lock_order``), the ``# guarded-by:`` attribute
+annotations, numpy-keyed hot paths, trace purity of the jitted forwards —
+are enforced by the invariant linter (``python -m repro.analysis``) and the
+runtime lock-order witness on the concurrency suites. See
+``src/repro/analysis/README.md`` and "Static invariants (PR 10)" in
+ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -319,8 +329,12 @@ class ScoringPool:
         self.workers = max(1, int(workers))
         self._ex = ThreadPoolExecutor(max_workers=self.workers,
                                       thread_name_prefix="scoring-pool")
-        self._buffers: Dict[tuple, list] = {}
+        self._buffers: Dict[tuple, list] = {}  # guarded-by: _buf_lock
         self._buf_lock = threading.Lock()
+        # secondary failures discarded by run()'s drain (the first error
+        # re-raises) — latched so an aborted burst can't hide errors entirely
+        self.drain_errors = 0
+        self.last_drain_error: Optional[BaseException] = None
 
     def acquire(self, shape: tuple, dtype) -> np.ndarray:
         """A recycled gather buffer of this shape/dtype (fresh if none free)."""
@@ -372,13 +386,17 @@ class ScoringPool:
                 fut = pending.popleft()
                 try:
                     res = fut.result()
-                except Exception:
-                    continue  # the first error already propagates
+                except Exception as e:
+                    # the first error already propagates; count the rest
+                    self.drain_errors += 1
+                    self.last_drain_error = e
+                    continue
                 if cleanup is not None:
                     try:
                         cleanup(res)
-                    except Exception:
-                        pass
+                    except Exception as e:
+                        self.drain_errors += 1
+                        self.last_drain_error = e
             raise
         return out
 
@@ -749,19 +767,20 @@ class InferenceEngine:
         self.quantized = quantized
         self.host_gather = resolved_host
         self.weights_version = 0     # trainer's stamp from the update frame
-        self._weights: Tuple[Optional[Dict], int] = (
+        self._weights: Tuple[Optional[Dict], int] = (  # guarded-by: _lock
             self._maybe_quantize(params), 0)
-        self._cache = PrefixCache(cfg.context_fields, cache_entries,
-                                  stride=prefix_stride, depths=prefix_depths)
+        self._cache = PrefixCache(  # guarded-by(calls): _lock
+            cfg.context_fields, cache_entries,
+            stride=prefix_stride, depths=prefix_depths)
         self._lock = threading.Lock()  # cache structure + counters + weights
-        self.hits = 0
-        self.misses = 0
-        self.stats = ServeStats()
+        self.hits = 0    # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.stats = ServeStats()  # guarded-by: _lock
         self.parallel = (auto_parallel_workers() if parallel is None
                          else max(1, int(parallel)))
-        self._scoring_pool = scoring_pool
+        self._scoring_pool = scoring_pool  # guarded-by: _lock
         self._owns_pool = scoring_pool is None
-        self._pipe: Optional[UpdatePipe] = None
+        self._pipe: Optional[UpdatePipe] = None  # guarded-by: _pipe_lock
         self._pipe_lock = threading.Lock()
         # per-request deadline (score_batch(deadline_ms=)): an absolute
         # time.monotonic() budget, thread-local because concurrent scorer
@@ -833,10 +852,11 @@ class InferenceEngine:
         fc = self.cfg.context_fields
         with self._lock:  # scorer threads insert histogram keys under it
             hist = dict(self._cache.hit_depths)
+            current = self._cache.checkpoint_depths()
         inter = {d: c for d, c in hist.items() if 0 < d < fc and c > 0}
         total = sum(inter.values())
         if not total:  # no observed intermediate reuse: keep the current set
-            return self._cache.checkpoint_depths()
+            return current
         ranked = sorted(inter.items(), key=lambda dc: (-dc[1], dc[0]))
         keep = [d for d, c in ranked if c / total >= min_share][:max_depths]
         return sorted(set(keep) | {fc})
@@ -877,12 +897,17 @@ class InferenceEngine:
     def update_pipe(self, manifest=None, like_params=None) -> UpdatePipe:
         """The engine's (lazily created) trainer-update ingestion pipe."""
         with self._pipe_lock:
-            if self._pipe is None:
-                self._pipe = UpdatePipe(self, manifest=manifest,
-                                        like_params=like_params)
-            elif manifest is not None or like_params is not None:
-                self._pipe.configure(manifest, like_params)
-            return self._pipe
+            pipe, created = self._pipe, False
+            if pipe is None:
+                pipe = self._pipe = UpdatePipe(self, manifest=manifest,
+                                               like_params=like_params)
+                created = True
+        # reconfigure outside _pipe_lock: configure serializes behind the
+        # pipe's _ingest_lock, which ranks *below* _pipe_lock in the
+        # declared order (rotate_shard takes ingest -> pipe)
+        if not created and (manifest is not None or like_params is not None):
+            pipe.configure(manifest, like_params)
+        return pipe
 
     def apply_update(self, update: bytes, manifest=None, like_params=None) -> None:
         """Ingest one trainer update (full file, patch, or row delta) and
@@ -1000,7 +1025,9 @@ class InferenceEngine:
         computation batched.
         """
         fc = self.cfg.context_fields
-        checkpoints = [d for d in self._cache.checkpoint_depths() if d < fc]
+        with self._lock:
+            checkpoints = [d for d in self._cache.checkpoint_depths()
+                           if d < fc]
         states: List[Optional[Dict]] = [None] * len(ctxs)
         full_hit: List[bool] = [False] * len(ctxs)
         emb_dt = ffm.table_dtype(params["ffm"]["emb"])
@@ -1682,8 +1709,11 @@ class InferenceEngine:
         # adopt the published pytree by reference (already-quantized tables
         # must not re-walk the quantizer) and keep the generation counter
         # monotonic across the swap: scorers comparing generations must
-        # never see it move backwards
-        succ._weights = (self.params, self.generation)
+        # never see it move backwards. The successor is still private, but
+        # it gets published to other threads later — write under its lock
+        # so the adoption happens-before any post-publish read.
+        with succ._lock:
+            succ._weights = (self.params, self.generation)
         buckets = warmup_buckets or self._warmed_buckets
         if buckets is not None:
             succ.warmup(max_requests=buckets[0], max_candidates=buckets[1])

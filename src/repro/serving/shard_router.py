@@ -269,9 +269,9 @@ class ReplicaHealth:
     def __init__(self, max_strikes: int = 3, backoff_s: float = 0.05):
         self.max_strikes = max_strikes
         self.backoff_s = backoff_s
-        self.state = self.HEALTHY
-        self.strikes = 0
-        self.retry_at = 0.0
+        self.state = self.HEALTHY  # guarded-by: _lock
+        self.strikes = 0           # guarded-by: _lock
+        self.retry_at = 0.0        # guarded-by: _lock
         self._lock = threading.Lock()
 
     def record_success(self) -> None:
@@ -359,7 +359,7 @@ class ShardRouter(InferenceEngine):
         # fan-out (span-splitting the replaced forward would sit inside the
         # compacted-entry-bucket bit contract for no extra concurrency)
         self._pool = ScoringPool(max_workers or n_shards * replicas)
-        self._fleet: List[List[Optional[InferenceEngine]]] = [
+        self._fleet: List[List[Optional[InferenceEngine]]] = [  # guarded-by: _fleet_lock
             [InferenceEngine(self.topology.shard_cfg(s), model,
                              backend=backend, quantized=quantized,
                              cache_entries=64, prefix_stride=None,
@@ -367,7 +367,7 @@ class ShardRouter(InferenceEngine):
                              scoring_pool=self._pool)
              for _ in range(replicas)]
             for s in range(n_shards)]
-        self._active: List[int] = [0] * n_shards  # serving replica (-1=none)
+        self._active: List[int] = [0] * n_shards  # guarded-by: _fleet_lock
         self._rr: List[int] = [0] * n_shards      # round-robin read cursor
         self._health: List[List[ReplicaHealth]] = [
             [ReplicaHealth() for _ in range(replicas)]
@@ -377,10 +377,10 @@ class ShardRouter(InferenceEngine):
         self.probe_interval_s = probe_interval_s
         self.degraded = False
         self._fleet_lock = threading.Lock()
-        self._fleet_vector: Optional[Tuple] = None
-        self._last_primary = None      # last live params: all-dead serving
+        self._fleet_vector: Optional[Tuple] = None  # guarded-by: _fleet_lock
+        self._last_primary = None  # last live params; guarded-by: _fleet_lock
         self._call_tl = threading.local()  # per-batch fault-outcome flags
-        self._prober: Optional[threading.Thread] = None
+        self._prober: Optional[threading.Thread] = None  # guarded-by: _fleet_lock
         self._prober_stop = threading.Event()
         # entry->pair-position map: xc pairs are (i ctx, j cand); the entry
         # (r, n, j) contributes one term per context field i, landing at the
@@ -487,7 +487,18 @@ class ShardRouter(InferenceEngine):
         re-point the replica's update pipe at it under the pipe's ingest
         lock (the receiver's byte chain — and therefore the delta-frame
         sequence — continues unbroken), and swap the serving slot. Returns
-        the successor."""
+        the successor.
+
+        Lock order at the re-point: ``pipe._ingest_lock`` (rank 20) then
+        ``succ._pipe_lock`` (rank 30) — the cross-object pair declared in
+        ``analysis/lock_order.py``. A ``submit_update`` racing this call
+        serializes behind the ingest lock and lands its frame on whichever
+        engine the pipe points at when it wins; a racing ``flush`` waits on
+        ``_pending_cv`` (rank 50, taken under the ingest lock by the drain
+        check) so neither can deadlock against the rotation. The fleet-slot
+        swap happens *after* the ingest lock is released: ``_fleet_lock``
+        (rank 10) ranks *below* the ingest lock, so taking it inside would
+        invert the declared order."""
         r = self._active[shard]
         old = None if r < 0 else self._fleet[shard][r]
         if old is None:
@@ -495,12 +506,11 @@ class ShardRouter(InferenceEngine):
         succ = old.rotate(**rotate_kw)
         pipe = old._pipe
         if pipe is not None:
-            with pipe._ingest_lock:
+            with pipe._ingest_lock:       # rank 20: freezes frame ingestion
                 pipe._engine = succ
-                with succ._pipe_lock:
+                with succ._pipe_lock:     # rank 30: ingest → pipe is declared
                     succ._pipe = pipe
-                self._fleet[shard][r] = succ
-        else:
+        with self._fleet_lock:
             self._fleet[shard][r] = succ
         self._refresh_fleet(force=True)
         return succ
@@ -1007,12 +1017,14 @@ class ShardRouter(InferenceEngine):
         prober = self._prober
         if prober is not None:
             prober.join(timeout=5.0)
-        self._scoring_pool = None
+        with self._lock:
+            self._scoring_pool = None
         for row in self._fleet:
             for eng in row:
                 if eng is None:
                     continue
-                eng._scoring_pool = None
+                with eng._lock:
+                    eng._scoring_pool = None
                 if eng._pipe is not None:
                     eng._pipe.kill()
         self._pool.shutdown()

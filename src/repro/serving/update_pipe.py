@@ -76,6 +76,12 @@ class UpdatePipeStats:
     # fleet answers with a ShardedSender resync frame.
     frames_rejected: int = 0
     last_frame_error: Optional[str] = None
+    # unexpected (non-FrameError) ingest failures: the background thread
+    # survives them, but they must stay observable — a burst of failed
+    # frames that only reached the log would look like a healthy-but-stale
+    # pipe to the router's health prober
+    frames_failed: int = 0
+    last_ingest_error: Optional[str] = None
 
 
 class UpdatePipe:
@@ -91,37 +97,37 @@ class UpdatePipe:
     def __init__(self, engine, *, manifest=None, like_params=None,
                  max_pending: int = 8,
                  pace: Optional[tuple] = (256 * 1024, 0.002)):
-        self._engine = engine
-        self._receiver = transfer.Receiver()
-        self._manifest = None
-        self._like = None
-        self.configure(manifest, like_params)
+        self._engine = engine  # guarded-by: _ingest_lock
+        self._receiver = transfer.Receiver()  # guarded-by(calls): _ingest_lock
+        self._manifest = None  # guarded-by: _ingest_lock
+        self._like = None      # guarded-by: _ingest_lock
+        self._configure_locked(manifest, like_params)  # still private here
         # (chunk_elems, sleep_s) cooperative throttling for *background*
         # decodes: bounds the longest contiguous burst a decode can steal
         # from concurrent request threads. Synchronous ingest never paces.
         self._pace = pace
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._ingest_lock = threading.Lock()
-        self._pending = 0                      # submitted, not yet published
+        self._pending = 0  # submitted, unpublished; guarded-by: _pending_cv
         self._pending_cv = threading.Condition()
         # flush() waiters currently blocked on the drain (under _pending_cv):
         # while > 0 the ingest thread runs *un*throttled at normal priority —
         # a flush is an explicit synchronization point, and on a saturated
         # box a SCHED_IDLE + paced ingest thread can otherwise be starved
         # past any flush timeout by hot scorer threads (1-core worst case)
-        self._hurry = 0
+        self._hurry = 0  # guarded-by: _pending_cv
         self._ingest_tid: Optional[int] = None
-        self._thread: Optional[threading.Thread] = None
+        self._thread: Optional[threading.Thread] = None  # guarded-by: _thread_lock
         self._thread_lock = threading.Lock()
-        self._closed = False
-        self._dead = False  # kill(): aborted, queued frames dropped
+        self._closed = False  # guarded-by: _pending_cv
+        self._dead = False  # kill(): frames dropped; guarded-by: _pending_cv
         # optional fault-injection hook (serving.faults.FaultPlan);
         # None = zero overhead
         self.faults = None
         # quantize-on-ingest: the last qparams THIS pipe published (the
         # engine's current params in the normal flow — no extra copy); the
         # incremental-requantize base tied to the receiver's wire state
-        self._last_qparams = None
+        self._last_qparams = None  # guarded-by: _ingest_lock
         self.stats = UpdatePipeStats()
 
     # -- configuration ------------------------------------------------------
@@ -137,7 +143,14 @@ class UpdatePipe:
         (shapes come from the manifest): retaining the live arrays would pin
         trainer params that the jitted round step donates — a later decode
         against the stored default would hit deleted jax buffers.
+
+        Serialized behind ``_ingest_lock`` so a reconfigure can never land
+        mid-decode on the background ingest thread.
         """
+        with self._ingest_lock:
+            self._configure_locked(manifest, like_params)
+
+    def _configure_locked(self, manifest=None, like_params=None) -> None:  # requires-lock: _ingest_lock
         if manifest is not None:
             self._manifest = manifest
         if like_params is not None:
@@ -178,13 +191,13 @@ class UpdatePipe:
         with self._ingest_lock:
             return self._ingest_locked(update, manifest, like_params)
 
-    def _ingest_locked(self, update: bytes, manifest=None, like_params=None):
+    def _ingest_locked(self, update: bytes, manifest=None, like_params=None):  # requires-lock: _ingest_lock
         """Decode + publish one frame; caller holds ``_ingest_lock``."""
         t0 = time.perf_counter()
         if self._dead:
             raise RuntimeError("update pipe was killed")
         if manifest is not None or like_params is not None:
-            self.configure(manifest, like_params)
+            self._configure_locked(manifest, like_params)
         on_ingest_thread = (self._thread is not None
                             and threading.current_thread() is self._thread)
         if self.faults is not None:
@@ -453,7 +466,9 @@ class UpdatePipe:
                 logging.getLogger(__name__).warning(
                     "corrupt update frame rejected during background "
                     "ingest: %s", self.stats.last_frame_error)
-            except Exception:  # a bad frame must not kill the ingest thread
+            except Exception as e:  # a bad frame must not kill the thread
+                self.stats.frames_failed += 1
+                self.stats.last_ingest_error = f"{type(e).__name__}: {e}"
                 import logging
 
                 logging.getLogger(__name__).exception(

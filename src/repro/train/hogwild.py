@@ -42,17 +42,30 @@ from repro.optim import make_optimizer
 
 @dataclass
 class HogwildStats:
-    examples: int = 0
-    seconds: float = 0.0
-    losses: List[float] = field(default_factory=list)
-    labels: List[np.ndarray] = field(default_factory=list)
-    scores: List[np.ndarray] = field(default_factory=list)   # pre-update
+    examples: int = 0  # guarded-by: lock
+    seconds: float = 0.0  # coordinator-only, written after the worker join
+    losses: List[float] = field(default_factory=list)  # guarded-by: lock
+    labels: List[np.ndarray] = field(default_factory=list)  # guarded-by: lock
+    scores: List[np.ndarray] = field(default_factory=list)  # guarded-by: lock
     # per hidden layer: list of (H,) column-alive booleans, one per update
-    col_alive: List[List[np.ndarray]] = field(default_factory=list)
+    col_alive: List[List[np.ndarray]] = field(default_factory=list)  # guarded-by: lock
 
     @property
     def examples_per_s(self) -> float:
         return self.examples / max(self.seconds, 1e-9)
+
+    def merge_batch(self, labels, loss, scores, alive) -> None:  # requires-lock: lock
+        """Fold one worker batch in; the caller holds the trainer's stats
+        lock — the weights stay Hogwild-free, only the metrics serialize."""
+        self.examples += int(labels.shape[0])
+        self.losses.append(float(loss))
+        self.labels.append(labels)
+        self.scores.append(scores)
+        if alive:
+            if not self.col_alive:
+                self.col_alive = [[] for _ in alive]
+            for layer, a in zip(self.col_alive, alive):
+                layer.append(a)
 
 
 class HogwildTrainer:
@@ -127,15 +140,8 @@ class HogwildTrainer:
                 scores = np.asarray(jax.nn.sigmoid(aux["logits"]))
                 alive = [np.asarray(jnp.any(m, axis=0)) for m in aux["masks"]]
                 with lock:
-                    stats.examples += int(b["label"].shape[0])
-                    stats.losses.append(float(loss))
-                    stats.labels.append(np.asarray(b["label"]))
-                    stats.scores.append(scores)
-                    if alive:
-                        if not stats.col_alive:
-                            stats.col_alive = [[] for _ in alive]
-                        for layer, a in zip(stats.col_alive, alive):
-                            layer.append(a)
+                    stats.merge_batch(np.asarray(b["label"]), loss,
+                                      scores, alive)
 
         threads = [threading.Thread(target=worker) for _ in range(n_threads)]
         t0 = time.perf_counter()

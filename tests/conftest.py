@@ -35,6 +35,29 @@ def no_leaked_threads():
         f"test leaked non-daemon thread(s): {[t.name for t in leaked]}")
 
 
+@pytest.fixture(autouse=True)
+def lock_witness(request):
+    """For tests marked ``lockcheck``: install the runtime lock-order
+    witness for the duration of the test and fail it at teardown if any
+    thread acquired serving locks against the declared partial order
+    (``repro.analysis.lock_order``). Objects constructed before the witness
+    installs keep plain locks — the marker belongs on tests that build
+    their engines/routers inside the test body."""
+    if "lockcheck" not in request.keywords:
+        yield
+        return
+    from repro.analysis import lock_witness as lw
+
+    session = lw.install()
+    try:
+        yield
+    finally:
+        lw.uninstall(session)
+    assert not session.violations, (
+        "lock-order witness recorded violation(s):\n\n"
+        + "\n\n".join(str(v) for v in session.violations))
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -42,7 +42,7 @@ from repro.serving.faults import (FRAME_BITFLIP, FRAME_DROP, FRAME_TRUNCATE,
 from repro.serving.shard_router import ReplicaHealth, ShardRouter
 from repro.train.pipeline import TrainingPipeline
 
-pytestmark = pytest.mark.faults
+pytestmark = [pytest.mark.faults, pytest.mark.lockcheck]
 
 CFG = FFMConfig(n_fields=8, context_fields=5, hash_space=1024, k=4,
                 mlp_hidden=(16,))
@@ -363,6 +363,53 @@ def test_kill_shard_racing_flush_does_not_deadlock(params):
     assert not flusher.is_alive(), "flush deadlocked behind kill_shard"
     assert len(results) == 1 and results[0][0] is None  # dead slice in vector
     router.close()
+
+
+def test_rotate_shard_racing_submit_and_flush_no_deadlock(params):
+    """PR 10 regression: ``rotate_shard``'s cross-object acquisition pair
+    (``pipe._ingest_lock`` then ``succ._pipe_lock``, the order declared in
+    ``analysis/lock_order.py``) must not deadlock against concurrent
+    ``submit_updates`` + ``flush_updates`` traffic, and the delta chain
+    must continue unbroken across the swaps. The module's ``lockcheck``
+    marker keeps the runtime witness installed, so any acquisition against
+    the declared order anywhere in this race fails the test at teardown."""
+    ranges = topology.shard_ranges(CFG.hash_space, 2)
+    pipe = TrainingPipeline(CFG, lr=0.05, seed=71, shard_ranges=ranges)
+    router = ShardRouter(CFG, n_shards=2, quantized=True)
+    ref = ShardRouter(CFG, n_shards=2, quantized=True)
+    like = jax.tree_util.tree_map(np.asarray, pipe.params)
+    router.configure_fanout(pipe.sender.manifests, like)
+    ref.configure_fanout(pipe.sender.manifests, like)
+    rng = np.random.default_rng(72)
+    frames = [pipe.run_round(iter([_mk_batch(rng)])) for _ in range(6)]
+    router.submit_updates(frames[0])
+    router.flush_updates()
+
+    oks = []
+
+    def traffic():
+        for f in frames[1:]:
+            router.submit_updates(f)
+            oks.append(router.flush_updates(timeout=30.0))
+
+    t = threading.Thread(target=traffic)
+    t.start()
+    for _ in range(3):
+        router.rotate_shard(0)
+        time.sleep(0.01)
+    t.join(timeout=30.0)
+    assert not t.is_alive(), "submit/flush deadlocked against rotate_shard"
+    assert len(oks) == len(frames) - 1
+
+    for f in frames:
+        ref.submit_updates(f)
+    ref.flush_updates()
+    reqs = _requests(np.random.default_rng(73))
+    np.testing.assert_array_equal(
+        np.concatenate(router.score_batch(reqs)),
+        np.concatenate(ref.score_batch(reqs)))
+    router.close()
+    ref.close()
 
 
 def test_kill_shard_edge_cases_and_all_dead_degraded_serving(params):

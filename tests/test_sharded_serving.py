@@ -33,6 +33,8 @@ from repro.serving.engine import InferenceEngine
 from repro.serving.shard_router import ShardRouter
 from repro.train.pipeline import TrainingPipeline
 
+pytestmark = pytest.mark.lockcheck
+
 CFG = FFMConfig(n_fields=8, context_fields=5, hash_space=1024, k=4,
                 mlp_hidden=(16,))
 

@@ -1,0 +1,463 @@
+"""Machine-checked invariants (PR 10): the linter and the lock witness.
+
+Three layers:
+
+* **The gate** — ``run_lint()`` over the real ``src/repro`` tree is clean,
+  which is exactly what ``python -m repro.analysis`` and the benchmark
+  smoke run enforce.
+* **Per-rule fixtures** — every registered rule has at least one firing
+  and one non-firing source fixture, linted from a tmp tree so the rule
+  semantics (not the current state of the repo) are what is pinned.
+* **The runtime witness** — wraps real locks, fires on an acquisition
+  against the declared partial order in ``analysis/lock_order.py``, stays
+  silent on the declared order, and install/uninstall round-trips the
+  serving constructors.
+"""
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import lock_order, lock_witness, run_lint
+from repro.analysis.lint import Violation
+from repro.analysis.rules import ALL_RULES, rule_ids
+
+
+# ---------------------------------------------------------------------------
+# the gate
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    violations = run_lint()
+    assert not violations, "linter violations at HEAD:\n" + "\n".join(
+        str(v) for v in violations)
+
+
+def test_violation_format_is_file_line_rule_message():
+    v = Violation("src/repro/x.py", 7, "lock-order", "bad nesting")
+    assert str(v) == "src/repro/x.py:7 lock-order bad nesting"
+
+
+def test_rule_registry_covers_the_documented_ids():
+    assert set(rule_ids()) == {
+        "lock-order", "guarded-by", "trace-purity", "np-purity",
+        "thread-daemon", "silent-except", "jit-cache"}
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+def _lint(tmp_path, source, rule_id=None, name="mod.py"):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    rules = None
+    if rule_id is not None:
+        rules = [r() for r in ALL_RULES if r.id == rule_id]
+        assert rules or rule_id == "bad-pragma", f"unknown rule {rule_id}"
+    return run_lint([p], rules=rules, root=tmp_path)
+
+
+def test_lock_order_fires_on_inverted_with_nesting(tmp_path):
+    vs = _lint(tmp_path, """
+        class Router:
+            def bad(self):
+                with self._ingest_lock:
+                    with self._fleet_lock:
+                        pass
+        """, "lock-order")
+    assert len(vs) == 1 and vs[0].rule == "lock-order"
+    assert "ShardRouter._fleet_lock" in vs[0].message
+
+
+def test_lock_order_fires_on_acquire_release_idiom(tmp_path):
+    vs = _lint(tmp_path, """
+        class Router:
+            def bad(self):
+                self._ingest_lock.acquire()
+                try:
+                    with self._fleet_lock:
+                        pass
+                finally:
+                    self._ingest_lock.release()
+        """, "lock-order")
+    assert len(vs) == 1 and vs[0].rule == "lock-order"
+
+
+def test_lock_order_silent_on_declared_order(tmp_path):
+    vs = _lint(tmp_path, """
+        class Router:
+            def good(self):
+                with self._fleet_lock:
+                    with self._ingest_lock:
+                        pass
+
+            def sequential(self):
+                with self._ingest_lock:
+                    pass
+                with self._fleet_lock:
+                    pass
+        """, "lock-order")
+    assert vs == []
+
+
+def test_lock_order_fires_on_equal_rank_peer_nesting(tmp_path):
+    vs = _lint(tmp_path, """
+        def bad(a, b):
+            with a._ingest_lock:
+                with b._ingest_lock:
+                    pass
+        """, "lock-order")
+    assert len(vs) == 1 and "no declared order" in vs[0].message
+
+
+def test_guarded_by_fires_on_unlocked_write(tmp_path):
+    vs = _lint(tmp_path, """
+        import threading
+
+        class Engine:
+            def __init__(self):
+                self._table = {}  # guarded-by: _lock
+                self._lock = threading.Lock()
+
+            def bad(self):
+                self._table = {}
+        """, "guarded-by")
+    assert len(vs) == 1 and vs[0].rule == "guarded-by"
+    assert "_table" in vs[0].message and "_lock" in vs[0].message
+
+
+def test_guarded_by_silent_under_lock_and_requires_lock(tmp_path):
+    vs = _lint(tmp_path, """
+        import threading
+
+        class Engine:
+            def __init__(self):
+                self._table = {}  # guarded-by: _lock
+                self._lock = threading.Lock()
+
+            def good(self):
+                with self._lock:
+                    self._table = {}
+
+            def helper(self):  # requires-lock: _lock
+                self._table["k"] = 1
+        """, "guarded-by")
+    assert vs == []
+
+
+def test_guarded_by_calls_variant_binds_method_calls(tmp_path):
+    vs = _lint(tmp_path, """
+        import threading
+
+        class Engine:
+            def __init__(self):
+                self._cache = Cache()  # guarded-by(calls): _lock
+                self._spare = Cache()  # guarded-by: _lock
+                self._lock = threading.Lock()
+
+            def bad(self):
+                self._cache.insert(1)
+
+            def plain_guard_allows_calls(self):
+                return self._spare.lookup(1)
+        """, "guarded-by")
+    assert len(vs) == 1
+    assert ".insert()" in vs[0].message
+
+
+def test_trace_purity_fires_inside_jitted_function(tmp_path):
+    vs = _lint(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def fwd(x):
+            return np.sin(x)
+        """, "trace-purity")
+    assert len(vs) == 1 and "np.sin" in vs[0].message
+
+
+def test_trace_purity_follows_module_local_calls(tmp_path):
+    vs = _lint(tmp_path, """
+        import time
+
+        import jax
+
+        def helper(x):
+            time.sleep(0.1)
+            return x
+
+        @jax.jit
+        def fwd(x):
+            return helper(x)
+        """, "trace-purity")
+    assert len(vs) == 1 and "time.sleep" in vs[0].message
+
+
+def test_trace_purity_silent_on_host_functions(tmp_path):
+    vs = _lint(tmp_path, """
+        import time
+
+        import numpy as np
+
+        def host(x):
+            time.sleep(0.0)
+            return np.asarray(x)
+        """, "trace-purity")
+    assert vs == []
+
+
+def test_np_purity_fires_on_jnp_in_np_function(tmp_path):
+    vs = _lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def gather_np(x):
+            return jnp.sum(x)
+        """, "np-purity")
+    assert len(vs) == 1 and "gather_np" in vs[0].message
+
+
+def test_np_purity_silent_on_numpy_only(tmp_path):
+    vs = _lint(tmp_path, """
+        import numpy as np
+
+        def gather_np(x):
+            return np.sum(x)
+        """, "np-purity")
+    assert vs == []
+
+
+def test_thread_daemon_fires_on_orphan_thread(tmp_path):
+    vs = _lint(tmp_path, """
+        import threading
+
+        def spawn():
+            t = threading.Thread(target=print)
+            t.start()
+        """, "thread-daemon")
+    assert len(vs) == 1 and vs[0].rule == "thread-daemon"
+
+
+def test_thread_daemon_silent_on_daemon_join_and_class_close(tmp_path):
+    vs = _lint(tmp_path, """
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+
+        def daemonized():
+            threading.Thread(target=print, daemon=True).start()
+
+        def joined():
+            t = threading.Thread(target=print)
+            t.start()
+            t.join()
+
+        class Owner:
+            def start(self):
+                self._t = threading.Thread(target=print)
+                self._t.start()
+                self._pool = ThreadPoolExecutor(2)
+
+            def close(self):
+                self._t.join()
+                self._pool.shutdown()
+        """, "thread-daemon")
+    assert vs == []
+
+
+def test_silent_except_fires_on_bare_and_swallowing_handlers(tmp_path):
+    vs = _lint(tmp_path, """
+        def bare(f):
+            try:
+                f()
+            except:
+                pass
+
+        def swallow(f):
+            for _ in range(3):
+                try:
+                    f()
+                except Exception:
+                    continue
+        """, "silent-except")
+    assert len(vs) == 2 and all(v.rule == "silent-except" for v in vs)
+
+
+def test_silent_except_silent_when_error_is_latched_or_narrow(tmp_path):
+    vs = _lint(tmp_path, """
+        def latched(self, f):
+            try:
+                f()
+            except Exception as e:
+                self.last_error = e
+
+        def narrow(f):
+            try:
+                f()
+            except KeyError:
+                pass
+        """, "silent-except")
+    assert vs == []
+
+
+def test_jit_cache_fires_on_device_arrays_in_serving_hot_path(tmp_path):
+    vs = _lint(tmp_path, """
+        import jax.numpy as jnp
+
+        class Engine:
+            def _forward_args(self, x):
+                return jnp.asarray(x)
+
+            def planner(self, x):  # jit-cache: numpy-keyed
+                return jnp.zeros(3)
+        """, "jit-cache", name="serving/hot.py")
+    assert len(vs) == 2 and all(v.rule == "jit-cache" for v in vs)
+
+
+def test_jit_cache_scoped_to_serving_and_numpy_is_fine(tmp_path):
+    outside = _lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def _forward_args(x):
+            return jnp.asarray(x)
+        """, "jit-cache", name="train/hot.py")
+    assert outside == []
+    numpy_only = _lint(tmp_path, """
+        import numpy as np
+
+        def _forward_args(x):
+            return np.ascontiguousarray(x)
+        """, "jit-cache", name="serving/ok.py")
+    assert numpy_only == []
+
+
+def test_pragma_suppresses_with_reason_and_flags_without(tmp_path):
+    suppressed = _lint(tmp_path, """
+        def swallow(f):
+            try:
+                f()
+            except Exception:  # lint: ignore[silent-except] fixture-only
+                pass
+        """, "silent-except")
+    assert suppressed == []
+    bad = _lint(tmp_path, """
+        def swallow(f):
+            try:
+                f()
+            except Exception:  # lint: ignore[silent-except]
+                pass
+        """, "bad-pragma")
+    assert len(bad) == 1 and bad[0].rule == "bad-pragma"
+
+
+# ---------------------------------------------------------------------------
+# the runtime witness
+# ---------------------------------------------------------------------------
+
+def test_witness_fires_on_inverted_acquisition():
+    session = lock_witness.Session()
+    ingest = lock_witness.wrap(threading.Lock(),
+                               "UpdatePipe._ingest_lock", session)
+    fleet = lock_witness.wrap(threading.Lock(),
+                              "ShardRouter._fleet_lock", session)
+    with ingest:
+        with fleet:  # rank 10 under rank 20: against the declared order
+            pass
+    assert len(session.violations) == 1
+    v = session.violations[0]
+    assert v.acquiring == "ShardRouter._fleet_lock"
+    assert v.held == "UpdatePipe._ingest_lock"
+    assert "contradicts" in str(v)
+
+
+def test_witness_silent_on_declared_order_and_reentry():
+    session = lock_witness.Session()
+    fleet = lock_witness.wrap(threading.Lock(),
+                              "ShardRouter._fleet_lock", session)
+    ingest = lock_witness.wrap(threading.Lock(),
+                               "UpdatePipe._ingest_lock", session)
+    with fleet:
+        with ingest:
+            pass
+    with ingest:  # sequential re-acquisition is fine
+        pass
+    assert session.violations == []
+
+
+def test_witness_fires_on_equal_rank_peer_instances():
+    session = lock_witness.Session()
+    a = lock_witness.wrap(threading.Lock(), "ReplicaHealth._lock", session)
+    b = lock_witness.wrap(threading.Lock(), "ReplicaHealth._lock", session)
+    with a:
+        with b:  # two unordered peers nested: latent deadlock
+            pass
+    assert len(session.violations) == 1
+
+
+def test_witness_held_stacks_are_per_thread():
+    session = lock_witness.Session()
+    ingest = lock_witness.wrap(threading.Lock(),
+                               "UpdatePipe._ingest_lock", session)
+    fleet = lock_witness.wrap(threading.Lock(),
+                              "ShardRouter._fleet_lock", session)
+    taken = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with ingest:
+            taken.set()
+            release.wait(5.0)
+
+    t = threading.Thread(target=holder)
+    t.start()
+    taken.wait(5.0)
+    with fleet:  # this thread holds nothing else: not a violation
+        pass
+    release.set()
+    t.join(5.0)
+    assert session.violations == []
+
+
+def test_witness_deactivated_session_stops_recording():
+    session = lock_witness.Session()
+    ingest = lock_witness.wrap(threading.Lock(),
+                               "UpdatePipe._ingest_lock", session)
+    fleet = lock_witness.wrap(threading.Lock(),
+                              "ShardRouter._fleet_lock", session)
+    session.active = False
+    with ingest:
+        with fleet:
+            pass
+    assert session.violations == []
+
+
+def test_witness_install_wraps_new_objects_and_uninstall_restores():
+    from repro.serving.update_pipe import UpdatePipe
+
+    session = lock_witness.install()
+    try:
+        pipe = UpdatePipe(object())
+        assert isinstance(pipe._ingest_lock, lock_witness.WitnessLock)
+        assert isinstance(pipe._pending_cv, lock_witness.WitnessLock)
+        with pytest.raises(RuntimeError, match="already installed"):
+            lock_witness.install()
+    finally:
+        lock_witness.uninstall(session)
+    fresh = UpdatePipe(object())
+    assert not isinstance(fresh._ingest_lock, lock_witness.WitnessLock)
+    # a wrapped condition still delegates wait/notify to the primitive
+    with pipe._pending_cv:
+        assert pipe._pending_cv.wait_for(lambda: True, timeout=0.1)
+
+
+def test_declared_order_tables_are_consistent():
+    # every attr/class mapping resolves to a ranked qualified name
+    for qual in lock_order.ATTR_LOCKS.values():
+        assert lock_order.rank_of(qual) is not None, qual
+    for qual in lock_order.CLASS_LOCKS.values():
+        assert lock_order.rank_of(qual) is not None, qual
+    # every documented nesting is rank-increasing
+    for outer, inner, _why in lock_order.OBSERVED_NESTINGS:
+        assert lock_order.rank_of(outer) < lock_order.rank_of(inner), (
+            outer, inner)
